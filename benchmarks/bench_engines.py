@@ -1,0 +1,54 @@
+"""Paper Fig. 3 — engine latency distributions across the query trace.
+
+Systems: exhaustive BMW (θ=1.0), aggressive BMW (θ=1.2), exhaustive JASS
+("Jass_1b" analogue), heuristic JASS (ρ = 10% of collection, "Jass_5m").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Experiment
+from repro.isn import oracle
+from repro.serving.latency import CostModel, percentiles
+
+
+def run(exp: Experiment, k: int = 1000) -> dict:
+    cost = CostModel.paper_scale()
+    labels = exp.labels
+    ql = exp.ql
+    rows = exp.train_rows
+
+    out = {}
+    out["bmw_1.0"] = cost.daat_time(labels.work_bmw[rows],
+                                    labels.blocks_bmw[rows])
+
+    # aggressive BMW sweep (θ = 1.2)
+    w12 = np.zeros(len(rows))
+    b12 = np.zeros(len(rows))
+    for lo in range(0, len(rows), 512):
+        sub = rows[lo:lo + 512]
+        _, w, b = oracle.bmw_scores(exp.index, ql.terms, ql.mask, sub,
+                                    k=k, theta=1.2)
+        w12[lo:lo + 512] = w
+        b12[lo:lo + 512] = b
+    out["bmw_1.2"] = cost.daat_time(w12, b12)
+
+    out["jass_exh"] = cost.saat_time(labels.work_exhaustive[rows])
+    rho_h = int(0.1 * exp.index.n_docs)      # the 10% heuristic
+    wh = oracle.jass_work_only(exp.index, ql.terms[rows], ql.mask[rows],
+                               rho_h)
+    out["jass_heuristic"] = cost.saat_time(wh)
+
+    table = {}
+    for name, t in out.items():
+        table[name] = percentiles(t)
+    return {"times": out, "table": table, "rho_heuristic": rho_h}
+
+
+def render(res) -> str:
+    lines = ["system,mean,p50,p95,p99,p99.9,max"]
+    for name, p in res["table"].items():
+        lines.append(f"{name},{p['mean']:.1f},{p['p50']:.1f},{p['p95']:.1f},"
+                     f"{p['p99']:.1f},{p['p99.9']:.1f},{p['max']:.1f}")
+    return "\n".join(lines)

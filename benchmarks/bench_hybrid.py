@@ -1,0 +1,191 @@
+"""Paper Fig. 7 + Table 3 — the hybrid systems vs fixed baselines at matched
+MED targets, including the 200 ms / 99.99 % budget claim.
+
+Systems per MED target (0.05, 0.10):
+  BMW_1.0       fixed k (calibrated so mean MED == target), exhaustive DAAT
+  JASS_exh      fixed k, exhaustive SAAT ("Jass_1b")
+  JASS_h        fixed k, heuristic ρ = 10 % collection ("Jass_5m")
+  Hybrid_k      Algorithm 1 (predict k, ρ)
+  Hybrid_h      Algorithm 2 (predict k, ρ, time)
+  Oracle_k/h    routing on true labels (upper bound)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (Experiment, cv_predict, fixed_k_for_target,
+                               med_at_k)
+from repro.core import hybrid
+from repro.core.reference import rbp_weights
+from repro.isn import oracle
+from repro.serving.latency import CostModel
+
+BUDGET = 200.0
+
+
+def _jass_med(exp, rows, k_arr, rho_arr, batch=512):
+    """MED of JASS top-k lists vs the ideal reference (per query)."""
+    w = np.asarray(rbp_weights(exp.labels.ref_lists.shape[1], 0.95))
+    med = np.zeros(len(rows))
+    for lo in range(0, len(rows), batch):
+        sub = rows[lo:lo + batch]
+        acc, _ = oracle.jass_scores(exp.index, exp.ql.terms, exp.ql.mask,
+                                    sub, rho_arr[lo:lo + batch])
+        kmax = int(k_arr[lo:lo + batch].max())
+        ids, _ = oracle._topk_ids(acc, kmax)
+        for i in range(len(sub)):
+            kq = int(k_arr[lo + i])
+            hit = np.isin(exp.labels.ref_lists[sub[i]], ids[i][:kq])
+            med[lo + i] = w[~hit].sum()
+    return med
+
+
+def _bmw_time_at_k(exp, rows, k_arr, batch=512):
+    cost = CostModel.paper_scale()
+    t = np.zeros(len(rows))
+    for lo in range(0, len(rows), batch):
+        sub = rows[lo:lo + batch]
+        _, wrk, blk = oracle.bmw_scores(exp.index, exp.ql.terms, exp.ql.mask,
+                                        sub, k=k_arr[lo:lo + batch])
+        t[lo:lo + batch] = cost.daat_time(wrk, blk)
+    return t
+
+
+def _summarize(k_arr, t_arr, med_arr, budget=BUDGET):
+    over = t_arr > budget
+    return {
+        "mean_k": float(np.mean(k_arr)), "median_k": float(np.median(k_arr)),
+        "mean_t": float(np.mean(t_arr)), "median_t": float(np.median(t_arr)),
+        "pct_over": 100.0 * float(np.mean(over)),
+        "n_over": int(np.sum(over)),
+        "mean_med": float(np.mean(med_arr)),
+    }
+
+
+def run(exp: Experiment, targets=(0.05, 0.10)) -> dict:
+    cost = CostModel.paper_scale()
+    labels = exp.labels
+    rows = exp.train_rows
+    nq = len(rows)
+    rho_h = int(0.1 * exp.index.n_docs)
+    rho_max = int((BUDGET * 0.9 - cost.saat_fixed_us)
+                  / cost.saat_per_posting_us)
+
+    pred_k = np.clip(np.round(cv_predict(exp, "qr", "k", tau=0.55)[rows]),
+                     10, 16384)
+    pred_rho = np.clip(np.round(cv_predict(exp, "qr", "rho", tau=0.45)[rows]),
+                       1024, rho_max)
+    pred_t = cv_predict(exp, "qr", "t", tau=0.5)[rows]
+
+    results = {"rho_max": rho_max}
+    for target in targets:
+        block = {}
+        k_fix = fixed_k_for_target(labels, rows, target)
+
+        # fixed BMW (rank-safe, exhaustive-style DAAT)
+        t_bmw_fix = _bmw_time_at_k(exp, rows, np.full(nq, k_fix))
+        med_fix = med_at_k(labels, rows, np.full(nq, k_fix))
+        block[f"BMW_1.0(k={k_fix})"] = _summarize(
+            np.full(nq, k_fix), t_bmw_fix, med_fix)
+
+        # fixed exhaustive JASS
+        t_jexh = cost.saat_time(labels.work_exhaustive[rows])
+        med_jexh = _jass_med(exp, rows, np.full(nq, k_fix),
+                             np.full(nq, 1 << 62))
+        block[f"JASS_exh(k={k_fix})"] = _summarize(
+            np.full(nq, k_fix), t_jexh, med_jexh)
+
+        # fixed heuristic JASS — needs a (usually larger) k to hit the target
+        k_h = k_fix
+        med_h = _jass_med(exp, rows, np.full(nq, k_h), np.full(nq, rho_h))
+        for _ in range(6):
+            if med_h.mean() <= target or k_h >= 16384:
+                break
+            k_h = int(k_h * 1.5)
+            med_h = _jass_med(exp, rows, np.full(nq, k_h), np.full(nq, rho_h))
+        wh = oracle.jass_work_only(exp.index, exp.ql.terms[rows],
+                                   exp.ql.mask[rows], rho_h)
+        block[f"JASS_h(k={k_h})"] = _summarize(
+            np.full(nq, k_h), cost.saat_time(wh), med_h)
+
+        # hybrids: calibrate a global multiplier on the predicted k so mean
+        # MED hits the target (the paper trains at eps=0.001 and relaxes to
+        # the target band). First pass assumes rank-safe membership; a
+        # refinement pass folds in the JASS-routed approximation loss.
+        lo_a, hi_a = 0.01, 4.0
+        for _ in range(24):
+            mid = (lo_a + hi_a) / 2
+            m = med_at_k(labels, rows,
+                         np.clip(np.round(pred_k * mid), 10, 16384)).mean()
+            if m <= target:
+                hi_a = mid
+            else:
+                lo_a = mid
+        alpha = hi_a
+        for _ in range(2):   # fold in JASS truncation loss
+            k_try = np.clip(np.round(pred_k * alpha), 10, 16384)
+            hc0 = hybrid.HybridConfig(t_k=float(np.percentile(k_try, 60)),
+                                      t_time_us=BUDGET * 0.75,
+                                      rho_max=rho_max)
+            r0 = hybrid.route_algorithm2(k_try, pred_t, hc0)
+            jm = r0 == hybrid.ROUTE_JASS
+            med0 = med_at_k(labels, rows, k_try)
+            if jm.any():
+                med0[jm] = _jass_med(exp, rows[jm], k_try[jm].astype(np.int64),
+                                     pred_rho[jm])
+            achieved = med0.mean()
+            if achieved <= target * 1.05:
+                break
+            alpha = min(alpha * (achieved / target) ** 0.7, 4.0)
+        k_hyb = np.clip(np.round(pred_k * alpha), 10, 16384)
+        hc = hybrid.HybridConfig(t_k=float(np.percentile(k_hyb, 60)),
+                                 t_time_us=BUDGET * 0.75, rho_max=rho_max)
+
+        for name, routes in (
+            ("Hybrid_k", hybrid.route_algorithm1(k_hyb, hc)),
+            ("Hybrid_h", hybrid.route_algorithm2(k_hyb, pred_t, hc)),
+            ("Oracle_h", hybrid.route_algorithm2(
+                labels.oracle_k[rows], labels.t_bmw[rows], hc)),
+        ):
+            jass = routes == hybrid.ROUTE_JASS
+            k_use = (labels.oracle_k[rows] if name.startswith("Oracle")
+                     else k_hyb).astype(np.int64)
+            rho_use = (np.clip(labels.oracle_rho[rows], 1024, rho_max)
+                       if name.startswith("Oracle") else pred_rho)
+            t = np.zeros(nq)
+            med = np.zeros(nq)
+            if jass.any():
+                jw = oracle.jass_work_only(exp.index,
+                                           exp.ql.terms[rows[jass]],
+                                           exp.ql.mask[rows[jass]],
+                                           rho_use[jass])
+                t[jass] = cost.saat_time(jw)
+                med[jass] = _jass_med(exp, rows[jass], k_use[jass],
+                                      rho_use[jass])
+            if (~jass).any():
+                t[~jass] = _bmw_time_at_k(exp, rows[~jass], k_use[~jass])
+                med[~jass] = med_at_k(labels, rows[~jass], k_use[~jass])
+            t = t + cost.predict_us
+            block[name] = _summarize(k_use, t, med)
+            block[name]["routed_jass_pct"] = 100.0 * float(jass.mean())
+        results[f"target_{target}"] = block
+    return results
+
+
+def render(res) -> str:
+    lines = []
+    for tkey, block in res.items():
+        if not tkey.startswith("target_"):
+            continue
+        lines.append(f"# MED-RBP target = {tkey.split('_')[1]} "
+                     f"(budget {BUDGET:.0f} ms, rho_max {res['rho_max']})")
+        lines.append("system,mean_k,median_k,mean_t,median_t,pct_over,"
+                     "n_over,mean_med,jass_pct")
+        for name, s in block.items():
+            lines.append(
+                f"{name},{s['mean_k']:.0f},{s['median_k']:.0f},"
+                f"{s['mean_t']:.1f},{s['median_t']:.1f},{s['pct_over']:.4f},"
+                f"{s['n_over']},{s['mean_med']:.4f},"
+                f"{s.get('routed_jass_pct', float('nan')):.1f}")
+    return "\n".join(lines)

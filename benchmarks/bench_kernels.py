@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference path on this host
+(the Pallas kernels themselves are TPU-targeted; interpret mode measures
+Python, not hardware) plus the v5e roofline-derived time per call."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run() -> dict:
+    rng = np.random.RandomState(0)
+    rows = []
+
+    # impact_accumulate ref: rho=32k postings into a 196k accumulator
+    from repro.kernels.impact_accumulate.ref import impact_accumulate_ref
+    p, n = 32768, 196608
+    docs = jnp.asarray(rng.randint(0, n, p), jnp.int32)
+    imps = jnp.asarray(rng.randint(1, 256, p), jnp.int32)
+    f = jax.jit(lambda d, i: impact_accumulate_ref(d, i, jnp.int32(0), n))
+    us = _time(f, docs, imps)
+    v5e = max(p * 8 / HBM_BW, p * 128 * 2 * 8 / PEAK_FLOPS) * 1e6
+    rows.append(("impact_accumulate", us, f"v5e_est_us={v5e:.2f}"))
+
+    # flash attention ref at a train tile
+    from repro.kernels.flash_attention.ref import attention_ref
+    q = jnp.asarray(rng.randn(1, 4, 1024, 128), jnp.float32) * 0.3
+    k = jnp.asarray(rng.randn(1, 1, 1024, 128), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(1, 1, 1024, 128), jnp.float32)
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v, True))
+    us = _time(f, q, k, v)
+    fl = 4 * 1 * 4 * 1024 * 1024 * 128 / 2
+    rows.append(("flash_attention", us,
+                 f"v5e_est_us={fl / PEAK_FLOPS * 1e6:.2f}"))
+
+    # histogram topk vs lax.top_k over a shard accumulator
+    from repro.kernels.score_histogram.ref import score_histogram_ref
+    sc = jnp.asarray(rng.randint(0, 2040, 196608), jnp.int32)
+    f = jax.jit(lambda s: score_histogram_ref(s, 2048))
+    us_h = _time(f, sc)
+    g = jax.jit(lambda s: jax.lax.top_k(s, 1024))
+    us_t = _time(g, sc)
+    rows.append(("score_histogram", us_h, f"lax_topk_us={us_t:.1f}"))
+
+    return {"rows": rows}
+
+
+def render(res) -> str:
+    lines = ["name,us_per_call,derived"]
+    for name, us, derived in res["rows"]:
+        lines.append(f"{name},{us:.1f},{derived}")
+    return "\n".join(lines)

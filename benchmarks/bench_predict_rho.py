@@ -1,0 +1,40 @@
+"""Paper Figs. 5 + 6 — predicting ρ: distribution vs the 10% heuristic and
+the QR/RF comparison at matched effectiveness."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Experiment, cv_predict
+
+
+def _stats(v):
+    return {"mean": float(np.mean(v)), "p50": float(np.median(v)),
+            "p90": float(np.percentile(v, 90)),
+            "p99": float(np.percentile(v, 99))}
+
+
+def run(exp: Experiment, taus=(0.45, 0.55)) -> dict:
+    rows = exp.train_rows
+    orho = exp.labels.oracle_rho[rows]
+    heuristic = int(0.1 * exp.index.n_docs)
+    out = {"oracle": _stats(orho),
+           "heuristic_10pct": {"mean": heuristic, "p50": heuristic,
+                               "p90": heuristic, "p99": heuristic}}
+    for tau in taus:
+        pred = cv_predict(exp, "qr", "rho", tau=tau)[rows]
+        out[f"qr_tau{tau:.2f}"] = _stats(np.clip(pred, 256, 1 << 20))
+    pred_rf = cv_predict(exp, "rf", "rho")[rows]
+    out["rf"] = _stats(np.clip(pred_rf, 256, 1 << 20))
+    frac_below = float(np.mean(orho < heuristic))
+    return {"systems": out, "frac_oracle_below_heuristic": frac_below}
+
+
+def render(res) -> str:
+    lines = ["system,mean_rho,median_rho,p90_rho,p99_rho"]
+    for name, s in res["systems"].items():
+        lines.append(f"{name},{s['mean']:.0f},{s['p50']:.0f},{s['p90']:.0f},"
+                     f"{s['p99']:.0f}")
+    lines.append(f"# oracle rho below 10%-heuristic for "
+                 f"{100*res['frac_oracle_below_heuristic']:.1f}% of queries")
+    return "\n".join(lines)

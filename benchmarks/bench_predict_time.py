@@ -1,0 +1,29 @@
+"""Paper Table 2 — response-time regression + tail-query classification for
+QR / RF / LR (RMSE in log space, P/R/F1, macro variants, AUC)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Experiment, cv_predict
+from repro.core.predictors import regression_report
+
+
+def run(exp: Experiment) -> dict:
+    rows = exp.train_rows
+    y = exp.labels.t_bmw[rows]
+    out = {}
+    for method in ("qr", "rf", "lr"):
+        pred = cv_predict(exp, method, "t",
+                          tau=0.5 if method == "qr" else 0.5)[rows]
+        out[method.upper()] = regression_report(y, pred, tail_quantile=0.95)
+    return {"report": out}
+
+
+def render(res) -> str:
+    cols = ["rmse", "precision", "recall", "f1", "macro_precision",
+            "macro_recall", "macro_f1", "auc"]
+    lines = ["system," + ",".join(cols)]
+    for name, r in res["report"].items():
+        lines.append(name + "," + ",".join(f"{r[c]:.3f}" for c in cols))
+    return "\n".join(lines)

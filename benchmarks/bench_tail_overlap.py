@@ -1,0 +1,29 @@
+"""Paper Table 1 — overlap of 95th-percentile tail-latency queries between
+systems (the motivation for index mirroring: BMW variants share tails,
+budgeted JASS doesn't)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def run(engines_res) -> dict:
+    times = engines_res["times"]
+    names = list(times)
+    tails = {}
+    for n, t in times.items():
+        thr = np.percentile(t, 95)
+        tails[n] = set(np.flatnonzero(t >= thr))
+    overlap = {}
+    for i, a in enumerate(names):
+        for b in names[i + 1:]:
+            inter = len(tails[a] & tails[b])
+            overlap[f"{a}|{b}"] = 100.0 * inter / max(len(tails[a]), 1)
+    return {"overlap": overlap}
+
+
+def render(res) -> str:
+    lines = ["pair,tail_overlap_pct"]
+    for k, v in res["overlap"].items():
+        lines.append(f"{k},{v:.1f}")
+    return "\n".join(lines)

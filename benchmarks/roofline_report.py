@@ -1,0 +1,72 @@
+"""Render the §Dry-run / §Roofline tables from results/dryrun.json."""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def model_flops(rec) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per device, where D
+    is tokens per device per step (training); serving kinds use 2·N·D."""
+    meta = rec.get("meta", {})
+    n = meta.get("active_params") or meta.get("params")
+    if not n:
+        return 0.0
+    toks = meta.get("tokens_per_step", 0)
+    if not toks:
+        return 0.0
+    per_dev = toks / max(rec.get("n_chips", 1), 1)
+    shape = rec["shape"]
+    factor = 6.0 if shape.startswith("train") else 2.0
+    return factor * n * per_dev
+
+
+def render(path="results/dryrun.json") -> str:
+    with open(path) as f:
+        recs = json.load(f)
+    lines = []
+    header = ("| arch | shape | mesh | compile s | flops/dev | bytes/dev | "
+              "coll B/dev | compute ms | memory ms | coll ms | dominant | "
+              "useful/HLO flops |")
+    lines.append(header)
+    lines.append("|" + "---|" * 12)
+    for r in recs:
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAIL: {r['error'][:60]} |" + " |" * 8)
+            continue
+        t = r["roofline"]
+        mf = model_flops(r)
+        ratio = mf / r["flops_per_device"] if r["flops_per_device"] else 0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']:.1f} | {r['flops_per_device']:.3g} | "
+            f"{r['bytes_per_device']:.3g} | "
+            f"{r['collective_bytes_per_device']:.3g} | "
+            f"{t['compute_s']*1e3:.2f} | {t['memory_s']*1e3:.2f} | "
+            f"{t['collective_s']*1e3:.2f} | {r['dominant'].replace('_s','')} |"
+            f" {ratio:.2f} |")
+    return "\n".join(lines)
+
+
+def dominant_summary(path="results/dryrun.json") -> str:
+    with open(path) as f:
+        recs = json.load(f)
+    ok = [r for r in recs if "error" not in r]
+    out = [f"{len(ok)}/{len(recs)} cells compiled"]
+    from collections import Counter
+    doms = Counter(r["dominant"] for r in ok)
+    out.append(f"dominant terms: {dict(doms)}")
+    worst = sorted(
+        (r for r in ok if r["mesh"] == "16x16" and r["shape"].startswith("train")),
+        key=lambda r: (r["roofline"]["compute_s"]
+                       / max(sum(r["roofline"].values()), 1e-12)))[:3]
+    out.append("worst compute fraction (train cells): "
+               + ", ".join(f"{r['arch']}×{r['shape']}" for r in worst))
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render())
+    print(dominant_summary())

@@ -1,0 +1,102 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--queries N] [--quick]``
+
+Prints ``name,us_per_call,derived``-style CSV blocks per table and writes
+the raw results to results/bench_*.json for EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _section(title):
+    print(f"\n=== {title} " + "=" * max(0, 60 - len(title)), flush=True)
+
+
+def _save(name, res):
+    os.makedirs("results", exist_ok=True)
+    with open(f"results/bench_{name}.json", "w") as f:
+        json.dump(res, f, indent=2, default=float)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int,
+                    default=int(os.environ.get("REPRO_QUERIES", "31642")))
+    ap.add_argument("--quick", action="store_true",
+                    help="small trace for smoke runs")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args, _ = ap.parse_known_args()
+    if args.quick:
+        args.queries = 2000
+
+    from benchmarks import (bench_engines, bench_heldout, bench_hybrid,
+                            bench_kernels, bench_predict_k, bench_predict_rho,
+                            bench_predict_time, bench_tail_overlap)
+    from benchmarks.common import load_experiment
+
+    t0 = time.time()
+    _section("Kernel micro-benchmarks (name,us_per_call,derived)")
+    kr = bench_kernels.run()
+    print(bench_kernels.render(kr))
+    _save("kernels", {"rows": [list(r) for r in kr["rows"]]})
+
+    _section(f"Loading experiment ({args.queries} queries)")
+    exp = load_experiment(args.queries)
+    print(f"queries kept: {int(exp.labels.keep.sum())}/{args.queries} "
+          f"(mismatch-filtered: {int((~exp.labels.keep).sum())})")
+
+    _section("Fig 3: engine latency distributions")
+    er = bench_engines.run(exp)
+    print(bench_engines.render(er))
+    _save("engines", {"table": er["table"]})
+
+    _section("Table 1: tail-latency query overlap")
+    tr = bench_tail_overlap.run(er)
+    print(bench_tail_overlap.render(tr))
+    _save("tail_overlap", tr)
+
+    _section("Fig 2+4: predicting k (oracle vs QR vs RF)")
+    pk = bench_predict_k.run(exp)
+    print(bench_predict_k.render(pk))
+    _save("predict_k", pk)
+
+    _section("Fig 5+6: predicting rho")
+    pr = bench_predict_rho.run(exp)
+    print(bench_predict_rho.render(pr))
+    _save("predict_rho", pr)
+
+    _section("Table 2: response-time prediction")
+    pt = bench_predict_time.run(exp)
+    print(bench_predict_time.render(pt))
+    _save("predict_time", pt)
+
+    _section("Fig 7 + Table 3: hybrid systems vs fixed baselines")
+    hy = bench_hybrid.run(exp)
+    print(bench_hybrid.render(hy))
+    _save("hybrid", hy)
+
+    _section("Table 4: held-out effectiveness + TOST")
+    ho = bench_heldout.run(exp)
+    print(bench_heldout.render(ho))
+    _save("heldout", ho)
+
+    if not args.skip_roofline and os.path.exists("results/dryrun.json"):
+        _section("Roofline summary (from dry-run)")
+        from benchmarks import roofline_report
+        print(roofline_report.dominant_summary())
+
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

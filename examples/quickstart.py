@@ -1,0 +1,72 @@
+"""Quickstart: the paper's full pipeline on a small synthetic collection.
+
+Builds the two index mirrors, generates reference-list labels, trains the
+Stage-0 quantile-GBRT predictors, and serves a query trace through the
+hybrid first stage with a hard latency budget.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import features as F, gbrt
+from repro.core.labels import LabelConfig, generate_labels
+from repro.index.builder import build_index
+from repro.index.corpus import CorpusParams, build_corpus, build_queries
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.server import HybridServer
+
+
+def main():
+    print("1) synthetic collection (8k docs) + query trace")
+    corpus = build_corpus(CorpusParams(n_docs=8192, vocab=4096,
+                                       avg_doclen=120, zipf_a=1.05))
+    index = build_index(corpus, stop_k=16)
+    ql = build_queries(corpus, 600, stop_k=16)
+
+    print("2) oracle labels via MED-RBP reference lists")
+    labels = generate_labels(index, corpus, ql,
+                             LabelConfig(max_k=2048, batch=200,
+                                         rho_grid=(256, 1024, 4096, 16384)))
+    print(f"   oracle k:   median={np.median(labels.oracle_k):.0f} "
+          f"mean={labels.oracle_k.mean():.0f} (heavy-tailed)")
+    print(f"   oracle rho: median={np.median(labels.oracle_rho):.0f}")
+
+    print("3) Stage-0 quantile-GBRT predictors (147 features)")
+    x = np.asarray(F.extract(jnp.asarray(index.term_stats),
+                             jnp.asarray(index.df),
+                             jnp.asarray(ql.terms), jnp.asarray(ql.mask)))
+    models = {}
+    for name, y, tau in (("k", labels.oracle_k, 0.55),
+                         ("rho", labels.oracle_rho, 0.45),
+                         ("t", labels.t_bmw, 0.5)):
+        models[name] = gbrt.fit(x, np.log1p(y.astype(np.float32)),
+                                gbrt.GBRTParams(n_trees=32, depth=4,
+                                                loss="quantile", tau=tau))
+
+    print("4) hybrid serving under a latency budget")
+    budget = float(np.percentile(labels.t_bmw, 90))
+    server = HybridServer(index, models,
+                          SchedulerConfig(algorithm=2, budget=budget,
+                                          t_time=budget * 0.6,
+                                          rho_max=1 << 14,
+                                          t_k=float(np.median(
+                                              labels.oracle_k))))
+    res = server.serve(ql.terms, ql.mask)
+    s = res.stats
+    print(f"   routed jass={s['jass']} bmw={s['bmw']} hedged={s['hedged']}")
+    print(f"   latency p50={s['p50']:.1f} p99={s['p99']:.1f} "
+          f"max={s['max']:.1f} (budget {budget:.1f})")
+    print(f"   over budget: {s['over_budget']} queries "
+          f"({s['over_budget_pct']:.3f}%)")
+    print(f"   vs fixed exhaustive BMW over budget: "
+          f"{100 * np.mean(labels.t_bmw > budget):.1f}%")
+
+
+if __name__ == "__main__":
+    main()

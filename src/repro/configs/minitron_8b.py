@@ -1,0 +1,20 @@
+"""Minitron-8B: width-pruned Nemotron-4, GQA kv=8, 256k vocab.
+[arXiv:2407.14679; hf:nvidia/Minitron-8B-Base]"""
+
+from repro.models.transformer import LMConfig
+
+FAMILY = "lm"
+
+CONFIG = LMConfig(
+    name="minitron-8b", n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=16384, vocab=256000, head_dim=128, dtype="bfloat16", remat="full",
+    train_layout="tpsp",   # §Perf: FSDP is 2x less collective-bound but the
+                           # 256k-vocab CE buffers exceed HBM at 256-way batch
+    train_microbatches=2,
+)
+
+REDUCED = LMConfig(
+    name="minitron-8b-reduced", n_layers=2, d_model=128, n_heads=8,
+    n_kv_heads=2, d_ff=512, vocab=1024, head_dim=16, dtype="float32",
+    remat="none",
+)

@@ -1,0 +1,42 @@
+"""Architecture registry: ``get_arch(id)`` -> (config, family).
+
+One module per assigned architecture under ``repro/configs/``; this file
+collects them and provides the reduced (smoke-test) variants.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "yi_6b", "minitron_8b", "minicpm3_4b", "moonshot_v1_16b_a3b",
+    "granite_moe_3b_a800m",
+    "dimenet",
+    "bert4rec", "xdeepfm", "two_tower_retrieval", "deepfm",
+    "paper_isn",
+]
+
+_ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def get_arch(arch_id: str):
+    arch_id = _ALIAS.get(arch_id, arch_id)
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG, mod.FAMILY
+
+
+def get_reduced(arch_id: str):
+    arch_id = _ALIAS.get(arch_id, arch_id)
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.REDUCED, mod.FAMILY
+
+
+def all_cells():
+    """Every (arch × shape) dry-run cell (40 assigned + paper ISN extras)."""
+    from repro.configs.shapes import FAMILY_SHAPES
+    cells = []
+    for a in ARCH_IDS:
+        _, family = get_arch(a)
+        for s in FAMILY_SHAPES[family]:
+            cells.append((a, s))
+    return cells

@@ -1,0 +1,77 @@
+"""Stage-0 pre-retrieval feature extraction (147 features).
+
+Following Culpepper et al. [16] and the paper: for each query term we read
+aggregate statistics of its postings-list *scores* under six similarity
+functions (TF·IDF, BM25, query likelihood, Bose-Einstein, DPH, DFR/PL2) —
+{max, arithmetic mean, geometric mean, harmonic mean, median, std} — and
+aggregate each statistic over the query terms with {max, min, mean, variance},
+giving 6 × 6 × 4 = 144 features, plus 3 query-level features (query length,
+log total document frequency, log min document frequency) = 147.
+
+The per-term statistics are precomputed at index-build time into a dense
+``(vocab, 36)`` table (`repro.index.builder.term_stat_table`), so query
+featurization is a gather + masked reduce: O(|q| · 36) — this is what makes
+sub-millisecond Stage-0 prediction feasible at an ISN.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+N_SIMS = 6
+N_STATS = 6
+N_TERM_FEATURES = N_SIMS * N_STATS        # 36
+N_QUERY_AGGS = 4
+N_FEATURES = N_TERM_FEATURES * N_QUERY_AGGS + 3   # 147
+
+SIM_NAMES = ("tfidf", "bm25", "ql", "bose_einstein", "dph", "pl2")
+STAT_NAMES = ("max", "amean", "gmean", "hmean", "median", "std")
+QPAD = 0  # padded query slots hold term id 0 with mask 0
+
+
+@functools.partial(jax.jit, static_argnames=())
+def extract(term_stats: jnp.ndarray, term_df: jnp.ndarray,
+            query_terms: jnp.ndarray, query_mask: jnp.ndarray) -> jnp.ndarray:
+    """Featurize a batch of queries.
+
+    Args:
+      term_stats: (V, 36) per-term score statistics.
+      term_df: (V,) document frequencies.
+      query_terms: (Q, L) padded term ids.
+      query_mask: (Q, L) 1.0 for real terms.
+    Returns:
+      (Q, 147) float32 feature matrix.
+    """
+    stats = term_stats[query_terms]                      # (Q, L, 36)
+    m = query_mask[:, :, None]
+    big = 1e30
+    n_terms = jnp.maximum(jnp.sum(query_mask, axis=1), 1.0)  # (Q,)
+
+    mx = jnp.max(jnp.where(m > 0, stats, -big), axis=1)
+    mn = jnp.min(jnp.where(m > 0, stats, big), axis=1)
+    mean = jnp.sum(stats * m, axis=1) / n_terms[:, None]
+    var = jnp.sum((stats - mean[:, None, :]) ** 2 * m, axis=1) / n_terms[:, None]
+
+    df = term_df[query_terms].astype(jnp.float32)        # (Q, L)
+    sum_df = jnp.sum(df * query_mask, axis=1)
+    min_df = jnp.min(jnp.where(query_mask > 0, df, big), axis=1)
+    qlevel = jnp.stack([n_terms,
+                        jnp.log1p(sum_df),
+                        jnp.log1p(min_df)], axis=1)
+
+    out = jnp.concatenate([mx, mn, mean, var, qlevel], axis=1)
+    return out.astype(jnp.float32)
+
+
+def feature_names() -> list[str]:
+    names = []
+    for agg in ("qmax", "qmin", "qmean", "qvar"):
+        for sim in SIM_NAMES:
+            for stat in STAT_NAMES:
+                names.append(f"{agg}.{sim}.{stat}")
+    names += ["q_len", "log_sum_df", "log_min_df"]
+    assert len(names) == N_FEATURES
+    return names

@@ -1,0 +1,35 @@
+"""Ridge linear regression — the paper's "LR" baseline (Macdonald et al. 2012
+used linear models for response-time prediction)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LinRegModel(NamedTuple):
+    w: jnp.ndarray
+    b: jnp.ndarray
+    mu: jnp.ndarray
+    sigma: jnp.ndarray
+
+
+def fit(x: np.ndarray, y: np.ndarray, l2: float = 1.0) -> LinRegModel:
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    mu = jnp.mean(x, axis=0)
+    sigma = jnp.std(x, axis=0) + 1e-6
+    xs = (x - mu) / sigma
+    f = xs.shape[1]
+    gram = xs.T @ xs + l2 * jnp.eye(f)
+    w = jnp.linalg.solve(gram, xs.T @ (y - jnp.mean(y)))
+    return LinRegModel(w, jnp.mean(y), mu, sigma)
+
+
+@jax.jit
+def predict(model: LinRegModel, x: jnp.ndarray) -> jnp.ndarray:
+    xs = (jnp.asarray(x, jnp.float32) - model.mu) / model.sigma
+    return xs @ model.w + model.b

@@ -1,0 +1,129 @@
+"""Reference-list comparison metrics: RBP, RBO, MED-RBP.
+
+The paper trains its per-query predictors *without relevance judgments* by
+measuring Maximized Effectiveness Difference (MED, Tan & Clarke 2015) between a
+candidate first-stage list and an idealized reference ("last stage") run.
+
+All functions are pure jnp and vmap/jit friendly.  Ranked lists are int32
+document-id arrays; ``-1`` entries are padding and never match a real doc.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+PAD = -1
+
+
+def rbp_weights(depth: int, p: float) -> jnp.ndarray:
+    """Per-rank RBP user-model weights ``(1 - p) * p**rank`` for rank 0..depth-1."""
+    ranks = jnp.arange(depth, dtype=jnp.float32)
+    return (1.0 - p) * jnp.power(p, ranks)
+
+
+def rbp(gains: jnp.ndarray, p: float) -> jnp.ndarray:
+    """Rank-biased precision of a gain vector (gains in [0, 1], rank major)."""
+    w = rbp_weights(gains.shape[-1], p)
+    return jnp.sum(gains * w, axis=-1)
+
+
+def _membership_matrix(list_a: jnp.ndarray, list_b: jnp.ndarray) -> jnp.ndarray:
+    """(len_a, len_b) bool matrix: a[i] == b[j] and a[i] is not padding."""
+    eq = list_a[:, None] == list_b[None, :]
+    return eq & (list_a[:, None] != PAD)
+
+
+def med_rbp(ref: jnp.ndarray, run: jnp.ndarray, p: float) -> jnp.ndarray:
+    """Maximized effectiveness difference MED-RBP(ref, run).
+
+    For each document the adversary picks a binary relevance maximizing
+    ``RBP(ref) - RBP(run)``.  A document at rank i contributes weight
+    ``(1-p) p**i`` to whichever list contains it (0 if absent), so the max
+    difference is ``sum_d max(0, w_ref(d) - w_run(d))``.  Documents that are in
+    neither list contribute nothing.  This is the effectiveness *loss* of
+    ``run`` relative to the reference; it is 0 iff run covers ref's prefix
+    mass, and monotonically non-increasing as run deepens.
+    """
+    wa = rbp_weights(ref.shape[-1], p)
+    wb = rbp_weights(run.shape[-1], p)
+    m = _membership_matrix(ref, run).astype(jnp.float32)
+    # weight each ref doc receives inside `run` (0 when absent)
+    w_in_run = m @ wb
+    valid = (ref != PAD).astype(jnp.float32)
+    return jnp.sum(jnp.maximum(wa * valid - w_in_run, 0.0), axis=-1)
+
+
+def med_rbp_at_cutoffs(ref: jnp.ndarray, stage1_rank_of_ref: jnp.ndarray,
+                       cutoffs: jnp.ndarray, p: float) -> jnp.ndarray:
+    """MED-RBP of the *re-ranked candidate set* at several first-stage cutoffs.
+
+    If the final ranker is fixed, re-ranking the top-k candidate set recovers
+    the reference doc d iff d's first-stage rank < k.  So the loss at cutoff k
+    is the RBP mass of reference docs whose stage-1 rank >= k.
+
+    Args:
+      ref: (depth,) reference doc ids (PAD allowed).
+      stage1_rank_of_ref: (depth,) 0-based rank of each ref doc in the stage-1
+        full ranking (use a large sentinel, e.g. 2**30, when absent).
+      cutoffs: (c,) candidate-set sizes k.
+    Returns:
+      (c,) MED-RBP loss per cutoff.
+    """
+    wa = rbp_weights(ref.shape[-1], p) * (ref != PAD)
+    lost = stage1_rank_of_ref[None, :] >= cutoffs[:, None]  # (c, depth)
+    return jnp.sum(wa[None, :] * lost, axis=-1)
+
+
+def oracle_cutoff(ref: jnp.ndarray, stage1_rank_of_ref: jnp.ndarray,
+                  cutoffs: jnp.ndarray, p: float, eps: float) -> jnp.ndarray:
+    """Smallest cutoff in ``cutoffs`` (ascending) with MED-RBP <= eps.
+
+    Falls back to the largest cutoff when none satisfies the target.
+    """
+    med = med_rbp_at_cutoffs(ref, stage1_rank_of_ref, cutoffs, p)
+    ok = med <= eps
+    first = jnp.argmax(ok)  # first True, or 0 if none
+    any_ok = jnp.any(ok)
+    idx = jnp.where(any_ok, first, cutoffs.shape[0] - 1)
+    return cutoffs[idx]
+
+
+def overlap(list_a: jnp.ndarray, list_b: jnp.ndarray) -> jnp.ndarray:
+    """Set overlap |A ∩ B| / |A| (padding-aware)."""
+    m = _membership_matrix(list_a, list_b)
+    inter = jnp.sum(jnp.any(m, axis=-1).astype(jnp.float32), axis=-1)
+    size_a = jnp.maximum(jnp.sum((list_a != PAD).astype(jnp.float32), axis=-1), 1.0)
+    return inter / size_a
+
+
+def rbo(list_a: jnp.ndarray, list_b: jnp.ndarray, p: float) -> jnp.ndarray:
+    """Rank-biased overlap (extrapolated to the evaluated depth).
+
+    RBO = (1-p) * sum_{d=1..D} p^{d-1} * |A_d ∩ B_d| / d   (prefix agreement)
+    plus the final-depth extrapolation term  p^D * |A_D ∩ B_D| / D.
+    """
+    depth = list_a.shape[-1]
+    m = _membership_matrix(list_a, list_b).astype(jnp.float32)
+    # inter_at[d] = |A_{1..d} ∩ B_{1..d}|: 2-D prefix sum of the match matrix
+    pref = jnp.cumsum(jnp.cumsum(m, axis=-1), axis=-2)
+    d_idx = jnp.arange(depth)
+    inter_at = pref[d_idx, d_idx]
+    d = jnp.arange(1, depth + 1, dtype=jnp.float32)
+    agreement = inter_at / d
+    w = jnp.power(p, d - 1.0)
+    base = (1.0 - p) * jnp.sum(w * agreement, axis=-1)
+    extrap = jnp.power(p, float(depth)) * agreement[-1]
+    return base + extrap
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def batched_med_rbp(ref: jnp.ndarray, run: jnp.ndarray, p: float = 0.95) -> jnp.ndarray:
+    return jax.vmap(lambda a, b: med_rbp(a, b, p))(ref, run)
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def batched_rbo(ref: jnp.ndarray, run: jnp.ndarray, p: float = 0.95) -> jnp.ndarray:
+    return jax.vmap(lambda a, b: rbo(a, b, p))(ref, run)

@@ -1,0 +1,48 @@
+"""Sharding-aware host data pipeline: prefetch thread + device placement +
+deterministic resumable cursors (elastic restarts resume exactly)."""
+
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import numpy as np
+
+
+class PrefetchingLoader:
+    """Wraps a host generator with a background prefetch thread and
+    device_put onto per-argument shardings."""
+
+    def __init__(self, gen, shardings=None, depth: int = 2):
+        self.gen = gen
+        self.shardings = shardings
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self.t = threading.Thread(target=self._worker, daemon=True)
+        self.t.start()
+
+    def _worker(self):
+        try:
+            for item in self.gen:
+                if self._stop.is_set():
+                    return
+                if self.shardings is not None:
+                    item = jax.tree.map(
+                        lambda x, s: jax.device_put(np.asarray(x), s),
+                        item, self.shardings)
+                self.q.put(item)
+        finally:
+            self.q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()

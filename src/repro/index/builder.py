@@ -1,0 +1,159 @@
+"""Index construction: document-ordered (block-max) and impact-ordered
+(quantized, JASS-style) layouts plus the Stage-0 per-term statistics table.
+
+Mirrors the paper's setup: one corpus, two physical index layouts serving as
+"index mirrors" on different ISN replicas — a BMW-style block-max index for
+rank-safe DAAT and an ATIRE/JASS-style impact-ordered index for anytime SAAT.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.index import scoring
+from repro.index.corpus import Corpus
+
+
+@dataclass
+class InvertedIndex:
+    # collection stats
+    n_docs: int
+    vocab: int
+    avg_dl: float
+    total_tokens: float
+    doclen: np.ndarray             # (N,)
+    df: np.ndarray                 # (V,)
+    cf: np.ndarray                 # (V,)
+
+    # document-ordered CSR (sorted by term, doc)
+    offsets: np.ndarray            # (V+1,)
+    docs: np.ndarray               # (P,)
+    tf: np.ndarray                 # (P,)
+    bm25_score: np.ndarray         # (P,) float32 exact scores
+    impact: np.ndarray             # (P,) uint8 quantized bm25
+    quant_scale: float             # impact -> score scale (score≈imp/255*scale)
+
+    # block-max structure (document-ordered)
+    block_size: int
+    n_blocks: int
+    block_max: np.ndarray          # (V, n_blocks) uint8, 0 = term absent
+    block_count: np.ndarray        # (V, n_blocks) uint16 postings per block
+
+    # impact-ordered layout (per-term descending impact)
+    docs_imp: np.ndarray           # (P,)
+    imp_sorted: np.ndarray         # (P,) uint8
+    level_cum: np.ndarray          # (V, 256) int32: #postings with impact >= l
+
+    # stage-0 features
+    term_stats: np.ndarray         # (V, 36) float32
+
+    @property
+    def n_postings(self) -> int:
+        return self.docs.shape[0]
+
+
+def _per_term_stats(term_ids, scores, offsets, df, vocab):
+    """{max, amean, gmean, hmean, median, std} per term for one sim column."""
+    eps = 1e-3
+    nz = np.maximum(df.astype(np.float64), 1.0)
+    shifted = scores - scores.min() + eps
+
+    s1 = np.bincount(term_ids, weights=shifted, minlength=vocab)
+    s2 = np.bincount(term_ids, weights=shifted ** 2, minlength=vocab)
+    slog = np.bincount(term_ids, weights=np.log(shifted), minlength=vocab)
+    sinv = np.bincount(term_ids, weights=1.0 / shifted, minlength=vocab)
+
+    amean = s1 / nz
+    gmean = np.exp(slog / nz)
+    hmean = nz / np.maximum(sinv, 1e-12)
+    std = np.sqrt(np.maximum(s2 / nz - amean ** 2, 0.0))
+
+    # max + median from a per-term sort
+    order = np.lexsort((shifted, term_ids))
+    sorted_s = shifted[order]
+    has = df > 0
+    last = np.maximum(offsets[1:] - 1, 0)
+    mx = np.where(has, sorted_s[np.minimum(last, len(sorted_s) - 1)], 0.0)
+    mid = offsets[:-1] + np.maximum((df - 1) // 2, 0)
+    med = np.where(has, sorted_s[np.minimum(mid, len(sorted_s) - 1)], 0.0)
+
+    cols = np.stack([mx, amean, gmean, hmean, med, std], axis=1)
+    return np.where(has[:, None], cols, 0.0).astype(np.float32)
+
+
+def build_index(corpus: Corpus, block_size: int = 64,
+                n_levels: int = 255, stop_k: int = 64) -> InvertedIndex:
+    n, v = corpus.n_docs, corpus.vocab
+    term = corpus.postings_term
+    doc = corpus.postings_doc
+    tf = corpus.postings_tf.astype(np.float64)
+
+    if stop_k > 0:
+        # stop the collection (paper: Indri stoplist): drop the stop_k most
+        # frequent terms from the index entirely
+        cf_all = np.bincount(term, weights=tf, minlength=v)
+        stopped = np.argsort(-cf_all)[:stop_k]
+        keep = ~np.isin(term, stopped)
+        term, doc, tf = term[keep], doc[keep], tf[keep]
+
+    df = np.bincount(term, minlength=v).astype(np.int64)
+    cf = np.bincount(term, weights=tf, minlength=v)
+    offsets = np.zeros(v + 1, np.int64)
+    np.cumsum(df, out=offsets[1:])
+
+    doclen = corpus.doclen.astype(np.float64)
+    dl = doclen[doc]
+    avg_dl = float(doclen.mean())
+    total_tokens = float(doclen.sum())
+    df_p = df[term].astype(np.float64)
+    cf_p = cf[term]
+
+    sims = scoring.all_similarity_scores(tf, df_p, cf_p, dl, n, avg_dl,
+                                         total_tokens)  # (P, 6)
+    bm25_sc = sims[:, 1].astype(np.float32)
+    impact, qmax = scoring.quantize_impacts(bm25_sc, n_levels)
+
+    # ---- block-max structure ----
+    n_blocks = (n + block_size - 1) // block_size
+    blk = (doc // block_size).astype(np.int64)
+    key = term.astype(np.int64) * n_blocks + blk
+    # postings are (term, doc)-sorted => (term, block) groups are contiguous
+    group_start = np.flatnonzero(np.r_[True, key[1:] != key[:-1]])
+    gmax = np.maximum.reduceat(impact.astype(np.int32), group_start)
+    gcount = np.diff(np.r_[group_start, len(key)])
+    gkey = key[group_start]
+    block_max = np.zeros((v, n_blocks), np.uint8)
+    block_count = np.zeros((v, n_blocks), np.uint16)
+    block_max.reshape(-1)[gkey] = gmax.astype(np.uint8)
+    block_count.reshape(-1)[gkey] = np.minimum(gcount, 65535).astype(np.uint16)
+
+    # ---- impact-ordered layout ----
+    order = np.lexsort((doc, -impact.astype(np.int32), term))
+    docs_imp = doc[order]
+    imp_sorted = impact[order]
+    lvl_counts = np.bincount(term.astype(np.int64) * 256 + impact,
+                             minlength=v * 256).reshape(v, 256)
+    # level_cum[v, l] = # postings of v with impact >= l
+    level_cum = np.flip(np.cumsum(np.flip(lvl_counts, axis=1), axis=1),
+                        axis=1).astype(np.int32)
+
+    # ---- stage-0 term statistics table ----
+    stats = [
+        _per_term_stats(term, sims[:, s].astype(np.float64), offsets, df, v)
+        for s in range(sims.shape[1])
+    ]
+    # layout: (V, 6 sims * 6 stats), sim-major to match feature_names()
+    term_stats = np.concatenate(stats, axis=1)
+
+    return InvertedIndex(
+        n_docs=n, vocab=v, avg_dl=avg_dl, total_tokens=total_tokens,
+        doclen=corpus.doclen, df=df.astype(np.int32), cf=cf.astype(np.float32),
+        offsets=offsets, docs=doc, tf=tf.astype(np.int32),
+        bm25_score=bm25_sc, impact=impact, quant_scale=qmax,
+        block_size=block_size, n_blocks=n_blocks,
+        block_max=block_max, block_count=block_count,
+        docs_imp=docs_imp, imp_sorted=imp_sorted, level_cum=level_cum,
+        term_stats=term_stats,
+    )

@@ -1,0 +1,146 @@
+"""Device-resident index shard structures for the JAX/TPU serving engines.
+
+An ISN holds one *document shard* of the corpus in HBM, in both mirrors:
+
+* impact-ordered arrays for SAAT (JASS) — per-term postings sorted by
+  descending quantized impact, plus per-term per-level cumulative counts so
+  the ρ budget resolves to per-term prefixes in O(levels);
+* document-ordered arrays for DAAT (BMW) — per-term postings sorted by
+  docid with exact scores, plus a *sparse* per-term block-max structure
+  (term-major CSR of (block_id, block_max, block_count)) — dense
+  (V × n_blocks) does not scale to 2M-term vocabularies.
+
+All fields are plain jnp arrays so a shard can be a pytree leaf under
+``shard_map`` and a ShapeDtypeStruct bundle for the compile-only dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.builder import InvertedIndex
+
+
+class IndexShardSpec(NamedTuple):
+    n_docs: int            # docs in this shard
+    vocab: int
+    n_postings: int        # padded postings count
+    n_blocks: int          # doc blocks in this shard
+    n_block_entries: int   # padded (term, block) entries
+    n_levels: int
+    block_size: int
+    max_df: int            # static cap for per-term gathers
+    max_blocks_per_term: int
+    quant_scale: float
+
+
+class IndexShard(NamedTuple):
+    """One document shard of the two index mirrors (pytree of jnp arrays)."""
+    # --- shared / collection stats ---
+    df: jnp.ndarray            # (V,) int32
+    offsets: jnp.ndarray       # (V+1,) int32 into postings arrays
+
+    # --- impact-ordered mirror (SAAT / JASS) ---
+    docs_imp: jnp.ndarray      # (P,) int32 local doc ids
+    imp: jnp.ndarray           # (P,) int32 quantized impacts (from uint8)
+    level_cum: jnp.ndarray     # (V, n_levels) int32: count with impact >= l
+
+    # --- document-ordered mirror (DAAT / BMW) ---
+    docs: jnp.ndarray          # (P,) int32 local doc ids (term, doc sorted)
+    score: jnp.ndarray         # (P,) float32 exact BM25
+    bm_offsets: jnp.ndarray    # (V+1,) int32 into block arrays
+    bm_block_id: jnp.ndarray   # (PB,) int32 doc-block id
+    bm_block_max: jnp.ndarray  # (PB,) float32 block upper bound (scaled)
+    bm_block_cnt: jnp.ndarray  # (PB,) int32 postings in this (term, block)
+
+
+def shard_from_index(index: InvertedIndex, doc_lo: int = 0,
+                     doc_hi: int | None = None) -> tuple[IndexShard, IndexShardSpec]:
+    """Materialize the device structures for docs in [doc_lo, doc_hi)."""
+    doc_hi = index.n_docs if doc_hi is None else doc_hi
+    n_local = doc_hi - doc_lo
+    v = index.vocab
+    bs = index.block_size
+    scale = index.quant_scale / 255.0
+
+    sel = (index.docs >= doc_lo) & (index.docs < doc_hi)
+    term_of = np.repeat(np.arange(v), np.diff(index.offsets))
+    t = term_of[sel]
+    d = (index.docs[sel] - doc_lo).astype(np.int32)
+    s = index.bm25_score[sel].astype(np.float32)
+    im = index.impact[sel].astype(np.int32)
+
+    df = np.bincount(t, minlength=v).astype(np.int32)
+    offsets = np.zeros(v + 1, np.int64)
+    np.cumsum(df, out=offsets[1:])
+
+    # postings already (term, doc)-sorted; within-shard selection keeps order
+    docs = d
+    score = s
+
+    # impact-ordered: per-term sort by impact desc
+    order = np.lexsort((d, -im, t))
+    docs_imp = d[order]
+    imp = im[order]
+    lvl = np.bincount(t.astype(np.int64) * 256 + im, minlength=v * 256)
+    lvl = lvl.reshape(v, 256)
+    level_cum = np.flip(np.cumsum(np.flip(lvl, axis=1), axis=1), axis=1)
+
+    # sparse block-max
+    blk = (d // bs).astype(np.int64)
+    key = t.astype(np.int64) * (1 << 32) + blk
+    start = np.flatnonzero(np.r_[True, key[1:] != key[:-1]])
+    b_term = t[start]
+    b_id = blk[start].astype(np.int32)
+    b_max = np.maximum.reduceat(s, start).astype(np.float32)
+    b_cnt = np.diff(np.r_[start, len(key)]).astype(np.int32)
+    bm_df = np.bincount(b_term, minlength=v)
+    bm_offsets = np.zeros(v + 1, np.int64)
+    np.cumsum(bm_df, out=bm_offsets[1:])
+
+    n_blocks = (n_local + bs - 1) // bs
+    spec = IndexShardSpec(
+        n_docs=n_local, vocab=v, n_postings=len(d), n_blocks=n_blocks,
+        n_block_entries=len(b_id), n_levels=256, block_size=bs,
+        max_df=int(df.max()) if len(df) else 1,
+        max_blocks_per_term=int(bm_df.max()) if len(bm_df) else 1,
+        quant_scale=index.quant_scale)
+
+    shard = IndexShard(
+        df=jnp.asarray(df),
+        offsets=jnp.asarray(offsets, jnp.int32),
+        docs_imp=jnp.asarray(docs_imp),
+        imp=jnp.asarray(imp, jnp.int32),
+        level_cum=jnp.asarray(level_cum, jnp.int32),
+        docs=jnp.asarray(docs),
+        score=jnp.asarray(score),
+        bm_offsets=jnp.asarray(bm_offsets, jnp.int32),
+        bm_block_id=jnp.asarray(b_id),
+        bm_block_max=jnp.asarray(b_max),
+        bm_block_cnt=jnp.asarray(b_cnt),
+    )
+    return shard, spec
+
+
+def shard_specs(spec: IndexShardSpec) -> IndexShard:
+    """ShapeDtypeStruct stand-ins with the same pytree structure — used by the
+    multi-pod dry-run so no index is ever materialized."""
+    sds = jax.ShapeDtypeStruct
+    v, p, pb = spec.vocab, spec.n_postings, spec.n_block_entries
+    return IndexShard(
+        df=sds((v,), jnp.int32),
+        offsets=sds((v + 1,), jnp.int32),
+        docs_imp=sds((p,), jnp.int32),
+        imp=sds((p,), jnp.int32),
+        level_cum=sds((v, spec.n_levels), jnp.int32),
+        docs=sds((p,), jnp.int32),
+        score=sds((p,), jnp.float32),
+        bm_offsets=sds((v + 1,), jnp.int32),
+        bm_block_id=sds((pb,), jnp.int32),
+        bm_block_max=sds((pb,), jnp.float32),
+        bm_block_cnt=sds((pb,), jnp.int32),
+    )

@@ -1,0 +1,100 @@
+"""DAAT (BMW-style) block-max engine — JAX serving path.
+
+TPU-native adaptation of Block-Max WAND: per-block upper bounds are
+accumulated from the sparse block-max structure, a phase-1 pass over the
+highest-bound blocks bootstraps a rank-safe threshold τ, and the exact pass
+scores only blocks with ``ub > θ·τ``.  θ = 1.0 is rank-safe; θ > 1.0 is the
+paper's aggression parameter.
+
+On TPU the exact pass lowers to `repro.kernels.blockmax_score` where pruned
+blocks are *skipped via predication* (`pl.when`), so latency is proportional
+to surviving work — which is precisely why DAAT keeps its data-dependent
+tail (the paper's Fig. 3) while budgeted SAAT does not.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.index.postings import IndexShard
+
+
+class DaatResult(NamedTuple):
+    topk_docs: jnp.ndarray     # (Q, k)
+    topk_scores: jnp.ndarray   # (Q, k) exact BM25
+    work: jnp.ndarray          # (Q,) postings in surviving blocks
+    blocks: jnp.ndarray        # (Q,) surviving blocks
+
+
+def _block_bounds(shard: IndexShard, terms, mask, n_blocks: int, bcap: int):
+    """Accumulate per-block upper bounds and candidate counts for a query."""
+    base = shard.bm_offsets[terms]
+    cnt = shard.bm_offsets[terms + 1] - base
+    pos = base[:, None] + jnp.arange(bcap, dtype=jnp.int32)[None, :]
+    live = (jnp.arange(bcap, dtype=jnp.int32)[None, :] < cnt[:, None]) \
+        & (mask[:, None] > 0)
+    pos = jnp.minimum(pos, shard.bm_block_id.shape[0] - 1)
+    bid = jnp.where(live, shard.bm_block_id[pos], 0)
+    bmax = jnp.where(live, shard.bm_block_max[pos], 0.0)
+    bcnt = jnp.where(live, shard.bm_block_cnt[pos], 0)
+    ub = jnp.zeros((n_blocks,), jnp.float32).at[bid.reshape(-1)].add(bmax.reshape(-1))
+    ccnt = jnp.zeros((n_blocks,), jnp.int32).at[bid.reshape(-1)].add(bcnt.reshape(-1))
+    return ub, ccnt
+
+
+def _masked_score(shard: IndexShard, terms, mask, survive, n_docs: int,
+                  block_size: int, cap: int):
+    """Exact scoring of postings whose doc block survives pruning."""
+    base = shard.offsets[terms]
+    df = shard.offsets[terms + 1] - base
+    pos = base[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    live = (jnp.arange(cap, dtype=jnp.int32)[None, :] < df[:, None]) \
+        & (mask[:, None] > 0)
+    pos = jnp.minimum(pos, shard.docs.shape[0] - 1)
+    d = jnp.where(live, shard.docs[pos], 0)
+    s = jnp.where(live, shard.score[pos], 0.0)
+    keep = survive[d // block_size] & live
+    s = jnp.where(keep, s, 0.0)
+    d = jnp.where(keep, d, 0)
+    acc = jnp.zeros((n_docs,), jnp.float32).at[d.reshape(-1)].add(s.reshape(-1))
+    return acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_docs", "n_blocks", "block_size", "k",
+                                    "cap", "bcap"))
+def daat_serve(shard: IndexShard, terms: jnp.ndarray, mask: jnp.ndarray,
+               theta: jnp.ndarray, *, n_docs: int, n_blocks: int,
+               block_size: int, k: int, cap: int, bcap: int) -> DaatResult:
+    """Serve a batch of queries with block-max pruned DAAT.
+
+    cap: static per-term postings bound (max df in shard).
+    bcap: static per-term block-entry bound.
+    """
+    def one(terms_q, mask_q, theta_q):
+        ub, ccnt = _block_bounds(shard, terms_q, mask_q, n_blocks, bcap)
+        # phase 1: highest-bound blocks until >= 2k candidate docs
+        cand = jnp.minimum(ccnt, block_size)
+        order = jnp.argsort(-ub)
+        cum = jnp.cumsum(cand[order])
+        need = jnp.minimum(jnp.searchsorted(cum, 2 * k) + 1, n_blocks)
+        rank = jnp.zeros((n_blocks,), jnp.int32).at[order].set(
+            jnp.arange(n_blocks, dtype=jnp.int32))
+        in_p1 = rank < need
+        acc1 = _masked_score(shard, terms_q, mask_q, in_p1, n_docs,
+                             block_size, cap)
+        tau = jax.lax.top_k(acc1, k)[0][k - 1]
+        survive = (ub >= theta_q * tau) | in_p1
+        acc = _masked_score(shard, terms_q, mask_q, survive, n_docs,
+                            block_size, cap)
+        sc, ids = jax.lax.top_k(acc, k)
+        work = jnp.sum(jnp.where(survive, ccnt, 0))
+        return ids.astype(jnp.int32), sc, work, jnp.sum(survive.astype(jnp.int32))
+
+    ids, sc, work, blocks = jax.lax.map(lambda args: one(*args),
+                                        (terms, mask, theta))
+    return DaatResult(ids, sc, work, blocks)

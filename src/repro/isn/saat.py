@@ -1,0 +1,84 @@
+"""SAAT (JASS-style) anytime engine — JAX serving path.
+
+Score-at-a-time traversal over the impact-ordered mirror.  The ρ budget is
+resolved to per-term postings prefixes via the per-level cumulative counts
+(JASS processes whole impact segments, highest impact first, while the
+budget allows), then the prefixes are gathered and scatter-accumulated.
+
+Cost is a deterministic function of ρ — on TPU the accumulate kernel's grid
+is sized by ⌈ρ/Tile⌉, so the 200 ms worst-case guarantee is *structural*:
+the compiled program cannot touch more than ρ_max postings.
+
+The hot accumulation loop lowers to `repro.kernels.impact_accumulate` on
+TPU; the jnp path below is the portable reference used on CPU and in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.index.postings import IndexShard
+
+
+class SaatResult(NamedTuple):
+    topk_docs: jnp.ndarray     # (Q, k) local doc ids
+    topk_scores: jnp.ndarray   # (Q, k) quantized-impact scores
+    work: jnp.ndarray          # (Q,) postings actually scored
+
+
+def _level_cut(shard: IndexShard, terms, mask, rho):
+    """Most inclusive impact level whose total postings fit the budget,
+    and the resulting per-term prefix lengths."""
+    lc = shard.level_cum[terms] * mask[:, None].astype(jnp.int32)  # (L, 256)
+    total = jnp.sum(lc, axis=0)                                    # (256,)
+    ok = total <= rho
+    # `total` is non-increasing in level index; first ok level = cut
+    lstar = jnp.argmax(ok)
+    any_ok = jnp.any(ok)
+    prefix = jnp.where(any_ok, lc[:, lstar], 0)
+    return prefix, jnp.where(any_ok, total[lstar], 0)
+
+
+def _accumulate(shard: IndexShard, terms, prefix, n_docs: int, cap: int):
+    """Gather per-term impact-ordered prefixes and scatter-add into a dense
+    accumulator (the jnp oracle of the Pallas scatter-as-matmul kernel)."""
+    base = shard.offsets[terms]                                   # (L,)
+    pos = base[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    live = jnp.arange(cap, dtype=jnp.int32)[None, :] < prefix[:, None]
+    pos = jnp.minimum(pos, shard.docs_imp.shape[0] - 1)
+    d = shard.docs_imp[pos]
+    v = shard.imp[pos] * live.astype(jnp.int32)
+    # dead lanes scatter 0 into doc 0 — harmless
+    d = jnp.where(live, d, 0)
+    acc = jnp.zeros((n_docs,), jnp.int32).at[d.reshape(-1)].add(v.reshape(-1))
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("n_docs", "k", "cap"))
+def saat_serve(shard: IndexShard, terms: jnp.ndarray, mask: jnp.ndarray,
+               rho: jnp.ndarray, *, n_docs: int, k: int,
+               cap: int) -> SaatResult:
+    """Serve a batch of queries on one ISN shard.
+
+    Args:
+      terms: (Q, L) padded query term ids.
+      mask: (Q, L) query term mask.
+      rho: (Q,) per-query postings budgets (already capped at ρ_max by the
+        Stage-0 scheduler; `cap` is the static ρ_max bound that sizes the
+        gather, so the compiled cost is O(Q · L · cap)).
+      n_docs / k / cap: static shard size, retrieval depth, per-term prefix cap.
+    """
+    def one(terms_q, mask_q, rho_q):
+        prefix, work = _level_cut(shard, terms_q, mask_q, rho_q)
+        prefix = jnp.minimum(prefix, cap)
+        acc = _accumulate(shard, terms_q, prefix, n_docs, cap)
+        sc, ids = jax.lax.top_k(acc, k)
+        return ids.astype(jnp.int32), sc.astype(jnp.float32), work
+
+    ids, sc, work = jax.lax.map(one_fn := lambda args: one(*args),
+                                (terms, mask, rho))
+    return SaatResult(ids, sc, work)

@@ -1,0 +1,67 @@
+"""Block-max pruned DAAT scoring — the TPU adaptation of BMW's skip logic.
+
+Same bucketed one-hot-matmul layout as ``impact_accumulate`` (one doc tile
+per grid step) plus the BMW ingredient: a per-tile *survival predicate*
+derived from the block upper bounds.  Pruned tiles skip their matmul
+entirely via ``pl.when`` — on TPU the grid step reduces to a predicated
+no-op, so latency is proportional to the number of *surviving* blocks.
+This is structurally why DAAT keeps a data-dependent tail (the paper's
+Fig. 3): the amount of surviving work varies per query, whereas the SAAT
+kernel's grid is budget-bounded.
+
+VMEM per step at TILE_D=128, CAP=1024: postings 8 KB + tile 512 B.  The
+survive flags ride in as an int32 vector indexed per grid step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(docs_ref, scores_ref, survive_ref, acc_ref, *, tile_d: int):
+    i = pl.program_id(0)
+
+    @pl.when(survive_ref[0] > 0)
+    def _():
+        local = docs_ref[0, :]
+        sc = scores_ref[0, :]
+        live = local >= 0
+        v = jnp.where(live, sc, 0.0)
+        d = jnp.where(live, local, -1)
+        onehot = (d[:, None]
+                  == jax.lax.broadcasted_iota(jnp.int32, (1, tile_d), 1)
+                  ).astype(jnp.float32)
+        acc = jax.lax.dot_general(v[None, :], onehot,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        acc_ref[0, :] = acc[0, :]
+
+    @pl.when(survive_ref[0] == 0)
+    def _():
+        acc_ref[0, :] = jnp.zeros((tile_d,), jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def blockmax_score_bucketed(docs_b: jnp.ndarray, scores_b: jnp.ndarray,
+                            survive_t: jnp.ndarray, *, tile_d: int,
+                            interpret: bool = True) -> jnp.ndarray:
+    """docs_b/scores_b: (n_tiles, CAP) bucketed postings (local ids, -1 pad);
+    survive_t: (n_tiles,) int32 tile-level survival flags."""
+    n_tiles, cap = docs_b.shape
+    kern = functools.partial(_score_kernel, tile_d=tile_d)
+    return pl.pallas_call(
+        kern,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, tile_d), jnp.float32),
+        interpret=interpret,
+    )(docs_b, scores_b, survive_t)

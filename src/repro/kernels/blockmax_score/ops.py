@@ -1,0 +1,66 @@
+"""jit'd wrapper: flat postings + block survival -> Pallas masked scoring."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.blockmax_score.kernel import blockmax_score_bucketed
+from repro.kernels.blockmax_score.ref import blockmax_score_ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_docs", "block_size", "tile_d",
+                                             "cap", "interpret"))
+def blockmax_score(docs: jnp.ndarray, scores: jnp.ndarray,
+                   survive: jnp.ndarray, *, n_docs: int, block_size: int,
+                   tile_d: int = 128, cap: int = 1024,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Exact scoring restricted to surviving blocks.
+
+    ``tile_d`` must be a multiple of ``block_size`` (a kernel tile covers
+    whole pruning blocks); a tile survives if any of its blocks survives —
+    postings in its dead blocks are masked lane-wise before bucketing.
+    """
+    assert tile_d % block_size == 0
+    p = docs.shape[0]
+    n_tiles = -(-n_docs // tile_d)
+
+    live = docs >= 0
+    blk = jnp.where(live, docs // block_size, 0)
+    keep = live & survive[blk]
+    docs_m = jnp.where(keep, docs, -1)
+
+    tile = jnp.where(keep, docs_m // tile_d, n_tiles)
+    order = jnp.argsort(tile)
+    tile_s = tile[order]
+    docs_s = jnp.where(keep[order], docs_m[order] - tile_s * tile_d, -1)
+    scores_s = scores[order]
+
+    counts = jnp.zeros((n_tiles + 1,), jnp.int32).at[tile_s].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    pos = jnp.arange(p, dtype=jnp.int32) - starts[tile_s]
+    fits = (pos < cap) & (tile_s < n_tiles)
+    slot = jnp.where(fits, tile_s * cap + pos, n_tiles * cap)
+    docs_b = jnp.full((n_tiles * cap + 1,), -1, jnp.int32
+                      ).at[slot].set(jnp.where(fits, docs_s, -1))
+    scores_b = jnp.zeros((n_tiles * cap + 1,), jnp.float32
+                         ).at[slot].set(jnp.where(fits, scores_s, 0.0))
+
+    # tile survives if any posting reached it
+    survive_t = (counts[:n_tiles] > 0).astype(jnp.int32)
+
+    acc_t = blockmax_score_bucketed(
+        docs_b[:-1].reshape(n_tiles, cap), scores_b[:-1].reshape(n_tiles, cap),
+        survive_t, tile_d=tile_d, interpret=interpret)
+    acc = acc_t.reshape(n_tiles * tile_d)[:n_docs]
+
+    over = keep[order] & ~fits & (tile_s < n_tiles)
+    d_of = jnp.where(over, docs_m[order], 0)
+    v_of = jnp.where(over, scores_s, 0.0)
+    return acc.at[d_of].add(v_of)
+
+
+__all__ = ["blockmax_score", "blockmax_score_ref"]

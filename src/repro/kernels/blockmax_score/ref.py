@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the block-max masked scoring kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def blockmax_score_ref(docs: jnp.ndarray, scores: jnp.ndarray,
+                       survive: jnp.ndarray, n_docs: int,
+                       block_size: int) -> jnp.ndarray:
+    """Accumulate exact scores of postings whose doc block survives pruning.
+
+    Args:
+      docs: (P,) int32 doc ids, -1 padding.
+      scores: (P,) float32 exact scores.
+      survive: (n_blocks,) bool — blocks with upper bound > θ·τ.
+    Returns:
+      (n_docs,) float32 accumulator.
+    """
+    live = docs >= 0
+    blk = jnp.where(live, docs // block_size, 0)
+    keep = live & survive[blk]
+    d = jnp.where(keep, docs, 0)
+    v = jnp.where(keep, scores, 0.0)
+    return jnp.zeros((n_docs,), jnp.float32).at[d].add(v)

@@ -1,0 +1,36 @@
+"""Public attention ops: dispatch to Pallas kernels on TPU, jnp ref on CPU.
+
+The model code calls these; `use_kernel` defaults to False on CPU (the
+interpret-mode kernels are exercised by tests, not the training loop, since
+interpreting every step would be slow) and to True under TPU lowering.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention, flash_decode
+from repro.kernels.flash_attention.ref import attention_ref, decode_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, causal: bool = True, use_kernel: bool | None = None):
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    if use_kernel:
+        return flash_attention(q, k, v, causal=causal,
+                               interpret=not _on_tpu())
+    return attention_ref(q, k, v, causal=causal)
+
+
+def decode_attention(q, k, v, kv_len, use_kernel: bool | None = None):
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    if use_kernel:
+        return flash_decode(q, k, v, kv_len, interpret=not _on_tpu())
+    return decode_ref(q, k, v, kv_len)
+
+
+__all__ = ["attention", "decode_attention", "flash_attention", "flash_decode",
+           "attention_ref", "decode_ref"]

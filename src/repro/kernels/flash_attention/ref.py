@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for flash attention (prefill) and flash decode."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _expand_kv(k, n_heads):
+    """(B, Hkv, S, D) -> (B, H, S, D) by GQA head-group broadcast."""
+    b, hkv, s, d = k.shape
+    group = n_heads // hkv
+    return jnp.repeat(k, group, axis=1)
+
+
+def attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """(B, H, S, D) x (B, Hkv, S, D) -> (B, H, S, D), fp32 math."""
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    k = _expand_kv(k, h).astype(jnp.float32)
+    v = _expand_kv(v, h).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v).astype(q.dtype)
+
+
+def decode_ref(q, k, v, kv_len=None, scale: float | None = None):
+    """Single-token decode: q (B, H, D), kv (B, Hkv, S, D) -> (B, H, D).
+
+    kv_len: (B,) optional valid cache lengths (positions >= kv_len masked).
+    """
+    b, h, d = q.shape
+    s = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    k = _expand_kv(k, h).astype(jnp.float32)
+    v = _expand_kv(v, h).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), k) * scale
+    if kv_len is not None:
+        pos = jnp.arange(s)
+        logits = jnp.where(pos[None, None, :] < kv_len[:, None, None],
+                           logits, -1e30)
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("bhk,bhkd->bhd", w, v).astype(q.dtype)

@@ -1,0 +1,77 @@
+"""SAAT impact accumulation as an MXU matmul — the TPU adaptation of JASS's
+scatter loop (`acc[doc] += impact`).
+
+Hardware mapping
+----------------
+A scalar scatter-add is hostile to the TPU's vector/matrix units, so the
+postings are *bucketed by document tile* (done by `ops.py` with one sort —
+the JASS ρ budget is an impact-level mask, so processing order inside a
+bucket is irrelevant) and each grid step reduces one bucket with a one-hot
+matmul:
+
+    acc[tile] = impactsᵀ (1 × CAP)  @  onehot(local_doc) (CAP × TILE_D)
+
+Capacity bound: postings are unique (term, doc) pairs, so a TILE_D-doc tile
+receives at most TILE_D × L postings for an L-term query — CAP = TILE_D × L
+can never overflow.  VMEM per step: CAP·(4+4) B + TILE_D·4 B ≈ 10 KB at
+TILE_D=128, L=8 — far under the ~16 MB budget, so several grid steps can be
+double-buffered.
+
+The ρ budget appears as the scalar `lstar` (impact-level cut): lanes with
+impact < lstar contribute zero, and the *grid itself* is sized by the
+bucketed layout, so compiled cost is a deterministic function of ρ_max —
+the structural version of the paper's 200 ms guarantee.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _accumulate_kernel(lstar_ref, docs_ref, imps_ref, acc_ref, *, tile_d: int):
+    """One bucket -> one accumulator tile."""
+    local = docs_ref[0, :]                        # (CAP,) int32, -1 = pad
+    imps = imps_ref[0, :]                         # (CAP,)
+    live = (local >= 0) & (imps >= lstar_ref[0])
+    v = jnp.where(live, imps, 0).astype(jnp.float32)
+    d = jnp.where(live, local, -1)
+    onehot = (d[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, tile_d), 1)
+              ).astype(jnp.float32)               # (CAP, TILE_D)
+    acc = jax.lax.dot_general(v[None, :], onehot,
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    acc_ref[0, :] = acc[0, :].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def impact_accumulate_bucketed(docs_b: jnp.ndarray, imps_b: jnp.ndarray,
+                               lstar: jnp.ndarray, *, tile_d: int,
+                               interpret: bool = True) -> jnp.ndarray:
+    """Run the Pallas kernel over a bucketed postings layout.
+
+    Args:
+      docs_b: (n_tiles, CAP) int32 — doc ids *local to each tile*, -1 padding.
+      imps_b: (n_tiles, CAP) int32.
+      lstar:  () int32 — impact-level cut from the ρ budget.
+      tile_d: docs per accumulator tile.
+    Returns:
+      (n_tiles, tile_d) int32 accumulator tiles (reshape to (N,) outside).
+    """
+    n_tiles, cap = docs_b.shape
+    kern = functools.partial(_accumulate_kernel, tile_d=tile_d)
+    return pl.pallas_call(
+        kern,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),            # lstar (replicated)
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),      # docs bucket
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),      # imps bucket
+        ],
+        out_specs=pl.BlockSpec((1, tile_d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, tile_d), jnp.int32),
+        interpret=interpret,
+    )(lstar.reshape(1), docs_b, imps_b)

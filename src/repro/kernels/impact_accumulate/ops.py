@@ -1,0 +1,65 @@
+"""jit'd wrapper: flat postings -> bucketed layout -> Pallas accumulate."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.impact_accumulate.kernel import impact_accumulate_bucketed
+from repro.kernels.impact_accumulate.ref import impact_accumulate_ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_docs", "tile_d", "cap",
+                                             "interpret"))
+def impact_accumulate(docs: jnp.ndarray, imps: jnp.ndarray,
+                      lstar: jnp.ndarray, *, n_docs: int, tile_d: int = 128,
+                      cap: int | None = None,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Accumulate postings (docs, imps) with impact >= lstar into a dense
+    (n_docs,) accumulator via the bucketed MXU kernel.
+
+    `cap` must be >= the max postings per doc tile.  For unique (term, doc)
+    postings of an L-term query, cap = tile_d * L is a hard bound; callers
+    with tighter knowledge (e.g. ρ_max ≪ tile budget) may pass less and the
+    wrapper falls back to the jnp scatter for overflow lanes (exactness is
+    never sacrificed).
+    """
+    p = docs.shape[0]
+    n_tiles = -(-n_docs // tile_d)
+    cap = cap if cap is not None else tile_d * 8
+
+    live = docs >= 0
+    tile = jnp.where(live, docs // tile_d, n_tiles)         # pad -> ghost tile
+    order = jnp.argsort(tile)
+    tile_s = tile[order]
+    docs_s = jnp.where(live[order], docs[order] - tile_s * tile_d, -1)
+    imps_s = imps[order]
+
+    counts = jnp.zeros((n_tiles + 1,), jnp.int32).at[tile_s].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    pos = jnp.arange(p, dtype=jnp.int32) - starts[tile_s]
+
+    fits = (pos < cap) & (tile_s < n_tiles)
+    slot = jnp.where(fits, tile_s * cap + pos, n_tiles * cap)
+    docs_b = jnp.full((n_tiles * cap + 1,), -1, jnp.int32
+                      ).at[slot].set(jnp.where(fits, docs_s, -1))
+    imps_b = jnp.zeros((n_tiles * cap + 1,), jnp.int32
+                       ).at[slot].set(jnp.where(fits, imps_s, 0))
+
+    acc_t = impact_accumulate_bucketed(
+        docs_b[:-1].reshape(n_tiles, cap), imps_b[:-1].reshape(n_tiles, cap),
+        lstar, tile_d=tile_d, interpret=interpret)
+    acc = acc_t.reshape(n_tiles * tile_d)[:n_docs]
+
+    # overflow fallback (cap exceeded): exact jnp scatter of the residue
+    over = live[order] & ~fits & (tile_s < n_tiles)
+    d_of = jnp.where(over, docs[order], 0)
+    v_of = jnp.where(over & (imps_s >= lstar), imps_s, 0)
+    acc = acc.at[d_of].add(v_of)
+    return acc
+
+
+__all__ = ["impact_accumulate", "impact_accumulate_ref"]

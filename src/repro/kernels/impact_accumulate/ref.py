@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the SAAT impact-accumulation kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def impact_accumulate_ref(docs: jnp.ndarray, imps: jnp.ndarray,
+                          lstar: jnp.ndarray, n_docs: int) -> jnp.ndarray:
+    """Accumulate quantized impacts of postings whose impact >= lstar.
+
+    Args:
+      docs: (P,) int32 doc ids; entries with doc < 0 are padding.
+      imps: (P,) int32 quantized impacts.
+      lstar: scalar int32 — the JASS level cut resolved from the ρ budget.
+      n_docs: accumulator size.
+    Returns:
+      (n_docs,) int32 accumulator.
+    """
+    live = (docs >= 0) & (imps >= lstar)
+    d = jnp.where(live, docs, 0)
+    v = jnp.where(live, imps, 0)
+    return jnp.zeros((n_docs,), jnp.int32).at[d].add(v)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the quantized-score histogram kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def score_histogram_ref(scores: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """Histogram of integer scores clipped to [0, n_bins).  scores: (N,) int32.
+
+    Entries < 0 are ignored (padding / masked docs)."""
+    live = scores >= 0
+    s = jnp.clip(jnp.where(live, scores, 0), 0, n_bins - 1)
+    return jnp.zeros((n_bins,), jnp.int32).at[s].add(live.astype(jnp.int32))

@@ -1,0 +1,67 @@
+"""Serving entry point: build a synthetic collection, train the Stage-0
+predictors, and serve a query trace through the hybrid first stage with
+tail-latency accounting.
+
+``python -m repro.launch.serve --queries 2000 --budget 200``
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-docs", type=int, default=16384)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--queries", type=int, default=2000)
+    ap.add_argument("--budget", type=float, default=200.0)
+    ap.add_argument("--algorithm", type=int, default=2)
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from repro.core import features as F, gbrt
+    from repro.core.labels import LabelConfig, generate_labels
+    from repro.index.builder import build_index
+    from repro.index.corpus import CorpusParams, build_corpus, build_queries
+    from repro.serving.scheduler import SchedulerConfig
+    from repro.serving.server import HybridServer
+    import jax.numpy as jnp
+
+    print("[serve] building collection + labels ...")
+    corpus = build_corpus(CorpusParams(n_docs=args.n_docs, vocab=args.vocab,
+                                       avg_doclen=150, zipf_a=1.05))
+    index = build_index(corpus, stop_k=16)
+    ql = build_queries(corpus, args.queries, stop_k=16)
+    labels = generate_labels(index, corpus, ql,
+                             LabelConfig(max_k=4096, batch=256))
+
+    x = np.asarray(F.extract(jnp.asarray(index.term_stats),
+                             jnp.asarray(index.df),
+                             jnp.asarray(ql.terms), jnp.asarray(ql.mask)))
+    print("[serve] training Stage-0 predictors (QR) ...")
+    models = {}
+    for name, y, tau in (("k", labels.oracle_k, 0.55),
+                         ("rho", labels.oracle_rho, 0.45),
+                         ("t", labels.t_bmw, 0.5)):
+        models[name] = gbrt.fit(
+            x, np.log1p(y.astype(np.float32)),
+            gbrt.GBRTParams(n_trees=48, depth=5, loss="quantile", tau=tau))
+
+    cfg = SchedulerConfig(algorithm=args.algorithm, budget=args.budget,
+                          rho_max=1 << 18)
+    server = HybridServer(index, models, cfg)
+    print("[serve] serving trace ...")
+    res = server.serve(ql.terms, ql.mask)
+    s = res.stats
+    print(f"[serve] routed: jass={s['jass']} bmw={s['bmw']} "
+          f"hedged={s['hedged']} late={s['late_hedged']}")
+    print(f"[serve] latency ms: p50={s['p50']:.1f} p99={s['p99']:.1f} "
+          f"p99.99={s['p99.99']:.1f} max={s['max']:.1f}")
+    print(f"[serve] over budget ({args.budget:.0f}): {s['over_budget']} "
+          f"({s['over_budget_pct']:.4f}%)")
+
+
+if __name__ == "__main__":
+    main()

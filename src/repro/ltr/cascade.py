@@ -1,0 +1,38 @@
+"""Multi-stage cascade driver: Stage-0 predict → Stage-1 candidates (hybrid
+ISN) → Stage-2 LTR re-rank → final top-t."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.ltr.ranker import LTRModel, qd_features
+
+
+@dataclass
+class CascadeResult:
+    final: np.ndarray           # (Q, t) doc ids
+    candidates_used: np.ndarray # (Q,) candidate count entering stage 2
+
+
+def rerank(index, corpus, ql, rows, candidate_lists, k_per_query,
+           ltr: LTRModel, t_final: int = 10) -> CascadeResult:
+    out = np.zeros((len(rows), t_final), np.int64)
+    used = np.zeros(len(rows), np.int64)
+    for i, q in enumerate(rows):
+        k = int(k_per_query[i])
+        cand = candidate_lists[i][:k]
+        cand = cand[cand >= 0]
+        used[i] = len(cand)
+        if len(cand) == 0:
+            continue
+        f = qd_features(index, corpus, ql.terms[q], ql.mask[q],
+                        ql.topic[q], cand)
+        sc = ltr.score(f)
+        order = np.argsort(-sc, kind="stable")[:t_final]
+        picks = cand[order]
+        out[i, :len(picks)] = picks
+        if len(picks) < t_final:
+            out[i, len(picks):] = -1
+    return CascadeResult(final=out, candidates_used=used)

@@ -1,0 +1,64 @@
+"""Later-stage re-ranking (stages 1+ of the cascade).
+
+The paper's effectiveness story is about how many candidates the first
+stage must pass on; this module is the consumer: query-document features
+(BM25 decomposition + topical affinity) and a GBRT point-wise LTR model
+trained from reference-list labels — plus the cascade driver that chains
+stage-0 prediction → candidate generation → re-ranking.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import gbrt
+
+N_LTR_FEATURES = 8
+
+
+def qd_features(index, corpus, terms_row, mask_row, topic, doc_ids):
+    """Per-(query, doc) LTR features for a candidate list."""
+    t = terms_row[mask_row > 0]
+    feats = np.zeros((len(doc_ids), N_LTR_FEATURES), np.float32)
+    dl = index.doclen[doc_ids].astype(np.float32)
+    feats[:, 0] = np.log1p(dl)
+    # per-term exact scores via CSR binary search
+    bm25 = np.zeros(len(doc_ids), np.float32)
+    n_match = np.zeros(len(doc_ids), np.float32)
+    mx = np.zeros(len(doc_ids), np.float32)
+    for tt in t:
+        lo, hi = index.offsets[tt], index.offsets[tt + 1]
+        seg = index.docs[lo:hi]
+        pos = np.searchsorted(seg, doc_ids)
+        pos = np.minimum(pos, max(hi - lo - 1, 0))
+        hit = seg[pos] == doc_ids if hi > lo else np.zeros(len(doc_ids), bool)
+        sc = np.where(hit, index.bm25_score[lo:hi][pos], 0.0)
+        bm25 += sc
+        mx = np.maximum(mx, sc)
+        n_match += hit
+    feats[:, 1] = bm25
+    feats[:, 2] = mx
+    feats[:, 3] = n_match / max(len(t), 1)
+    feats[:, 4] = bm25 / np.maximum(dl, 1.0)
+    feats[:, 5] = corpus.doc_topics[doc_ids, topic]
+    feats[:, 6] = corpus.doc_topics[doc_ids].max(axis=1)
+    feats[:, 7] = len(t)
+    return feats
+
+
+@dataclass
+class LTRModel:
+    model: object
+
+    def score(self, feats: np.ndarray) -> np.ndarray:
+        return np.asarray(gbrt.predict(self.model, feats))
+
+
+def train_ltr(feats: np.ndarray, gains: np.ndarray,
+              n_trees: int = 48) -> LTRModel:
+    m = gbrt.fit(feats, gains.astype(np.float32),
+                 gbrt.GBRTParams(n_trees=n_trees, depth=4, loss="l2",
+                                 learning_rate=0.2))
+    return LTRModel(m)

@@ -1,0 +1,190 @@
+"""Attention implementations for the LM family.
+
+* ``chunked_attention`` — production jnp path: lax.scan over KV chunks with
+  online softmax, so peak logits memory is (B, H, S, chunk) instead of
+  (B, H, S, S).  This is what the multi-pod dry-run lowers (Pallas TPU
+  kernels can't lower on the host-CPU dry-run platform); on real TPU the
+  dispatcher swaps in `repro.kernels.flash_attention`.
+* ``gqa_decode`` — single-token decode against a (possibly sequence-
+  sharded) KV cache; lowers to flash_decode on TPU.
+* ``mla_*`` — DeepSeek/MiniCPM3-style multi-head latent attention: queries
+  and KV are low-rank compressed; the decode path uses the absorbed-matmul
+  form so the cache stays in the 288-dim latent space.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, n_heads):
+    group = n_heads // k.shape[1]
+    if group == 1:
+        return k
+    return jnp.repeat(k, group, axis=1)
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int = 512,
+                      scale: float | None = None, unroll: bool = False):
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D). Online-softmax over KV chunks."""
+    b, h, sq, d = q.shape
+    sk, dv = k.shape[2], v.shape[-1]
+    scale = scale if scale is not None else d ** -0.5
+    chunk = min(chunk, sk)
+    n_chunks = sk // chunk
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    qf = q.astype(jnp.float32) * scale
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kc, vc, base = inputs
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc.astype(jnp.float32))
+        if causal:
+            rows = jnp.arange(sq)[:, None]
+            cols = base + jnp.arange(chunk)[None, :]
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    ks = k.reshape(b, h, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, h, n_chunks, chunk, dv).transpose(2, 0, 1, 3, 4)
+    bases = jnp.arange(n_chunks) * chunk
+    init = (jnp.full((b, h, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, sq), jnp.float32),
+            jnp.zeros((b, h, sq, dv), jnp.float32))
+    # remat each chunk: backward recomputes the (sq, chunk) score tile
+    # instead of saving it — matching what the flash kernel does on TPU
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), init,
+                                  (ks, vs, bases),
+                                  unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def gqa_decode(q, k_cache, v_cache, kv_len, scale: float | None = None):
+    """q: (B, H, D); caches (B, Hkv, S, D); kv_len (B,) -> (B, H, D)."""
+    b, h, d = q.shape
+    s = k_cache.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    k = _repeat_kv(k_cache, h).astype(jnp.float32)
+    v = _repeat_kv(v_cache, h).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), k) * scale
+    pos = jnp.arange(s)
+    logits = jnp.where(pos[None, None, :] < kv_len[:, None, None], logits,
+                       NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", w, v).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+class MLAConfig(NamedTuple):
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+
+
+def mla_params(pf, prefix: str, d_model: int, n_heads: int, cfg: MLAConfig):
+    h, qn, qr, vd = n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wdq": pf.dense(f"{prefix}/wdq", (d_model, cfg.q_lora_rank),
+                        ("embed", "qk")),
+        "q_norm": pf.ones(f"{prefix}/q_norm", (cfg.q_lora_rank,), ("qk",)),
+        "wuq": pf.dense(f"{prefix}/wuq", (cfg.q_lora_rank, h * (qn + qr)),
+                        ("qk", "heads")),
+        "wdkv": pf.dense(f"{prefix}/wdkv", (d_model, cfg.kv_lora_rank + qr),
+                         ("embed", "qk")),
+        "kv_norm": pf.ones(f"{prefix}/kv_norm", (cfg.kv_lora_rank,), ("qk",)),
+        "wuk": pf.dense(f"{prefix}/wuk", (cfg.kv_lora_rank, h * qn),
+                        ("qk", "heads")),
+        "wuv": pf.dense(f"{prefix}/wuv", (cfg.kv_lora_rank, h * vd),
+                        ("qk", "heads")),
+        "wo": pf.dense(f"{prefix}/wo", (h * vd, d_model), ("heads", "embed")),
+    }
+
+
+def mla_forward(p, x, positions, n_heads: int, cfg: MLAConfig,
+                causal: bool = True, unroll: bool = False):
+    """Training/prefill MLA: decompress K/V per head, chunked attention."""
+    b, s, dm = x.shape
+    h, qn, qr, vd = n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    cq = common.rms_norm(x @ p["wdq"], p["q_norm"])
+    q = (cq @ p["wuq"]).reshape(b, s, h, qn + qr)
+    q_nope, q_rope = q[..., :qn], q[..., qn:]
+    q_rope = common.rope(q_rope.transpose(0, 2, 1, 3),
+                         positions[:, None, :]).transpose(0, 2, 1, 3)
+
+    dkv = x @ p["wdkv"]
+    c_kv = common.rms_norm(dkv[..., :cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = common.rope(dkv[..., cfg.kv_lora_rank:][:, None, :, :],
+                         positions[:, None, :])          # (B, 1, S, qr) shared
+    k_nope = (c_kv @ p["wuk"]).reshape(b, s, h, qn)
+    v = (c_kv @ p["wuv"]).reshape(b, s, h, vd)
+
+    qh = jnp.concatenate([q_nope, q_rope], axis=-1).transpose(0, 2, 1, 3)
+    kh = jnp.concatenate(
+        [k_nope.transpose(0, 2, 1, 3),
+         jnp.broadcast_to(k_rope, (b, h, s, qr))], axis=-1)
+    vh = v.transpose(0, 2, 1, 3)
+    scale = (qn + qr) ** -0.5
+    out = chunked_attention(qh, kh, vh, causal=causal, scale=scale,
+                            unroll=unroll)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * vd)
+    return out @ p["wo"]
+
+
+def mla_decode(p, x, c_cache, rope_cache, kv_len, n_heads: int,
+               cfg: MLAConfig, q_pos=None):
+    """Absorbed-matmul decode: queries are projected into the KV latent space
+    so attention runs against the compressed cache directly.
+
+    x: (B, d_model) current token; c_cache: (B, S, kv_rank);
+    rope_cache: (B, S, qk_rope_dim); kv_len: (B,) valid cache entries
+    (including the current token); q_pos: (B,) RoPE position of the query
+    (defaults to kv_len - 1, the current token's position).
+    """
+    b, dm = x.shape
+    h, qn, qr, vd = n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    s = c_cache.shape[1]
+    pos = (q_pos if q_pos is not None else kv_len - 1).astype(jnp.float32)
+
+    cq = common.rms_norm(x @ p["wdq"], p["q_norm"])
+    q = (cq @ p["wuq"]).reshape(b, h, qn + qr)
+    q_nope, q_rope = q[..., :qn], q[..., qn:]
+    q_rope = common.rope(q_rope[:, :, None, :], pos[:, None, None])[:, :, 0]
+
+    # absorb W_uk into the query: q_lat (B, H, r)
+    wuk = p["wuk"].reshape(r, h, qn)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, wuk)
+
+    logits = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                         c_cache.astype(jnp.float32))
+              + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                           rope_cache.astype(jnp.float32)))
+    logits = logits * ((qn + qr) ** -0.5)
+    mask = jnp.arange(s)[None, None, :] < kv_len[:, None, None]
+    w = jax.nn.softmax(jnp.where(mask, logits, NEG_INF), axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", w, c_cache.astype(jnp.float32))
+    # absorb W_uv on the way out
+    wuv = p["wuv"].reshape(r, h, vd)
+    out = jnp.einsum("bhr,rhv->bhv", ctx.astype(x.dtype), wuv)
+    return out.reshape(b, h * vd) @ p["wo"]

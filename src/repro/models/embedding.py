@@ -1,0 +1,62 @@
+"""Sharded embedding tables + EmbeddingBag for the recsys family.
+
+JAX has no native EmbeddingBag — built here from ``jnp.take`` + masked
+reduction (rectangular padded bags) / ``jax.ops.segment_sum`` (ragged bags).
+Tables are row-sharded over the "rows"→model mesh axis (the classic recsys
+table-parallel layout); under pjit the lookup lowers to per-shard partial
+gathers + an all-reduce.  ``sharded_lookup_manual`` is the explicit
+shard_map twin used when we want the collective schedule pinned down (and
+it is what the dry-run exercises for the table-parallel cells).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """(R, D) x (...,) int32 -> (..., D)."""
+    return table[ids]
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray, mask: jnp.ndarray,
+                  mode: str = "sum") -> jnp.ndarray:
+    """Padded-bag EmbeddingBag: ids (B, L), mask (B, L) -> (B, D)."""
+    e = table[ids] * mask[..., None]
+    if mode == "sum":
+        return jnp.sum(e, axis=-2)
+    if mode == "mean":
+        return jnp.sum(e, axis=-2) / jnp.maximum(
+            jnp.sum(mask, axis=-1, keepdims=True), 1.0)
+    if mode == "max":
+        neg = jnp.where(mask[..., None] > 0, e, -jnp.inf)
+        return jnp.max(neg, axis=-2)
+    raise ValueError(mode)
+
+
+def ragged_embedding_bag(table: jnp.ndarray, flat_ids: jnp.ndarray,
+                         bag_ids: jnp.ndarray, n_bags: int,
+                         weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Ragged bags via segment_sum: flat_ids (P,), bag_ids (P,) -> (n_bags, D)."""
+    rows = table[flat_ids]
+    if weights is not None:
+        rows = rows * weights[:, None]
+    return jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)
+
+
+def sharded_lookup_manual(table_local: jnp.ndarray, ids: jnp.ndarray,
+                          axis_name: str, shard_rows: int) -> jnp.ndarray:
+    """Explicit table-parallel lookup inside shard_map.
+
+    Each shard holds rows [i·shard_rows, (i+1)·shard_rows); out-of-range ids
+    contribute zeros and the psum recovers the full rows.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    lo = idx * shard_rows
+    local = ids - lo
+    valid = (local >= 0) & (local < shard_rows)
+    rows = table_local[jnp.clip(local, 0, shard_rows - 1)]
+    rows = jnp.where(valid[..., None], rows, 0)
+    return jax.lax.psum(rows, axis_name)

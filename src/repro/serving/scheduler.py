@@ -1,0 +1,110 @@
+"""Stage-0 scheduler: the online side of the paper's hybrid architecture.
+
+Receives query batches, runs the Stage-0 predictions (features + GBRT),
+routes each query to the JASS or BMW replica pool (Algorithms 1/2), enforces
+the ρ_max budget cap, and applies straggler mitigation:
+
+* **hedging** — a query routed to BMW whose *predicted* time is within the
+  uncertainty band of the threshold is duplicated onto the JASS mirror; the
+  first responder wins (the JASS copy has a hard deadline by construction).
+* **deadline re-route** — if a BMW execution exceeds the budget fraction
+  `hedge_deadline`, the query is re-issued to JASS with a small ρ (late
+  hedge), bounding the worst case at `budget + ρ_cap·c` — this is the
+  mechanism that turns the paper's 99.99 % into a hard guarantee.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import hybrid
+from repro.serving.latency import CostModel
+
+
+@dataclass
+class SchedulerConfig:
+    algorithm: int = 2                  # paper Algorithm 1 or 2
+    t_k: float = 1000.0
+    t_time: float = 150.0               # same units as the cost model
+    rho_max: int = 1 << 20
+    rho_min: int = 4096
+    budget: float = 200.0
+    hedge_band: float = 0.25            # hedge if pred_t in [T(1-b), T(1+b)]
+    enable_hedging: bool = True
+
+
+@dataclass
+class RoutedBatch:
+    jass_rows: np.ndarray
+    bmw_rows: np.ndarray
+    hedged_rows: np.ndarray
+    k: np.ndarray
+    rho: np.ndarray
+
+
+class StageZeroScheduler:
+    """Routes queries given Stage-0 predictions; tracks outcome stats."""
+
+    def __init__(self, cfg: SchedulerConfig, cost: CostModel | None = None):
+        self.cfg = cfg
+        self.cost = cost or CostModel.paper_scale()
+        self.stats = {"jass": 0, "bmw": 0, "hedged": 0, "late_hedged": 0}
+
+    def route(self, pred_k: np.ndarray, pred_rho: np.ndarray,
+              pred_t: np.ndarray) -> RoutedBatch:
+        cfg = self.cfg
+        hc = hybrid.HybridConfig(t_k=cfg.t_k, t_time_us=cfg.t_time,
+                                 rho_max=cfg.rho_max, rho_min=cfg.rho_min)
+        if cfg.algorithm == 1:
+            routes = hybrid.route_algorithm1(pred_k, hc)
+        else:
+            routes = hybrid.route_algorithm2(pred_k, pred_t, hc)
+        k, rho = hybrid.clamp_parameters(pred_k, pred_rho, hc)
+
+        bmw = routes == hybrid.ROUTE_BMW
+        jass = ~bmw
+        hedged = np.zeros_like(bmw)
+        if cfg.enable_hedging:
+            band = (pred_t > cfg.t_time * (1 - cfg.hedge_band)) & bmw
+            hedged = band
+        self.stats["jass"] += int(jass.sum())
+        self.stats["bmw"] += int(bmw.sum())
+        self.stats["hedged"] += int(hedged.sum())
+        return RoutedBatch(
+            jass_rows=np.flatnonzero(jass), bmw_rows=np.flatnonzero(bmw),
+            hedged_rows=np.flatnonzero(hedged), k=k, rho=rho)
+
+    def resolve_times(self, routed: RoutedBatch, t_bmw: np.ndarray,
+                      work_jass_fn) -> np.ndarray:
+        """Final per-query latency under hedging semantics.
+
+        t_bmw: modeled/measured BMW time for every query (used for rows
+        routed to BMW); work_jass_fn(rows, rho) -> JASS times for rows.
+        Hedged BMW queries finish at min(bmw, jass); BMW queries that blow
+        the budget are late-hedged: budget_detect + jass re-issue."""
+        n = len(routed.k)
+        t = np.zeros(n)
+        cfg = self.cfg
+        if len(routed.jass_rows):
+            t[routed.jass_rows] = work_jass_fn(routed.jass_rows,
+                                               routed.rho[routed.jass_rows])
+        if len(routed.bmw_rows):
+            tb = t_bmw[routed.bmw_rows].copy()
+            hedge_mask = np.isin(routed.bmw_rows, routed.hedged_rows)
+            if hedge_mask.any():
+                rows = routed.bmw_rows[hedge_mask]
+                tj = work_jass_fn(rows, routed.rho[rows])
+                tb[hedge_mask] = np.minimum(tb[hedge_mask],
+                                            tj + self.cost.predict_us)
+            # late hedge: detect at deadline, re-issue to JASS
+            late = tb > cfg.budget
+            if late.any():
+                rows = routed.bmw_rows[late]
+                tj = work_jass_fn(rows, np.minimum(routed.rho[rows],
+                                                   cfg.rho_max))
+                tb[late] = np.minimum(tb[late], cfg.budget * 0.5 + tj)
+                self.stats["late_hedged"] += int(late.sum())
+            t[routed.bmw_rows] = tb
+        return t + self.cost.predict_us

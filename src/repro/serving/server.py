@@ -1,0 +1,105 @@
+"""End-to-end first-stage serving loop (single-host demonstration of the
+production layout): Stage-0 features+predictions → scheduler routing →
+JASS/BMW engine execution → hierarchical top-k merge → latency accounting.
+
+The engines here are the jnp serving engines over a real IndexShard; on a
+mesh the same loop runs with `repro.isn.shard.hybrid_serve_fn`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as F
+from repro.core import gbrt
+from repro.index.builder import InvertedIndex
+from repro.index.postings import shard_from_index
+from repro.isn.daat import daat_serve
+from repro.isn.saat import saat_serve
+from repro.serving.latency import CostModel, over_budget, percentiles
+from repro.serving.scheduler import SchedulerConfig, StageZeroScheduler
+
+
+@dataclass
+class ServeResult:
+    topk: np.ndarray
+    latency: np.ndarray
+    stats: dict
+
+
+class HybridServer:
+    """One ISN worth of the paper's hybrid system, servable end to end."""
+
+    def __init__(self, index: InvertedIndex, models: dict,
+                 cfg: SchedulerConfig, k_serve: int = 128,
+                 cost: CostModel | None = None):
+        self.index = index
+        self.shard, self.spec = shard_from_index(index)
+        self.models = models          # {"k": GBRTModel, "rho": ..., "t": ...}
+        self.cost = cost or CostModel.paper_scale()
+        self.sched = StageZeroScheduler(cfg, self.cost)
+        self.k_serve = k_serve
+        self.term_stats = jnp.asarray(index.term_stats)
+        self.df = jnp.asarray(index.df)
+
+    def stage0(self, terms: np.ndarray, mask: np.ndarray):
+        x = np.asarray(F.extract(self.term_stats, self.df,
+                                 jnp.asarray(terms), jnp.asarray(mask)))
+        pk = np.expm1(np.asarray(gbrt.predict(self.models["k"], x)))
+        pr = np.expm1(np.asarray(gbrt.predict(self.models["rho"], x)))
+        pt = np.expm1(np.asarray(gbrt.predict(self.models["t"], x)))
+        return pk, pr, pt
+
+    def serve(self, terms: np.ndarray, mask: np.ndarray) -> ServeResult:
+        q = terms.shape[0]
+        pk, pr, pt = self.stage0(terms, mask)
+        routed = self.sched.route(pk, pr, pt)
+        topk = np.zeros((q, self.k_serve), np.int64)
+        work_j = np.zeros(q)
+        t_bmw = np.zeros(q)
+
+        if len(routed.jass_rows):
+            rows = routed.jass_rows
+            res = saat_serve(self.shard, jnp.asarray(terms[rows]),
+                             jnp.asarray(mask[rows]),
+                             jnp.asarray(routed.rho[rows]),
+                             n_docs=self.spec.n_docs, k=self.k_serve,
+                             cap=int(self.sched.cfg.rho_max))
+            topk[rows] = np.asarray(res.topk_docs)
+            work_j[rows] = np.asarray(res.work)
+        if len(routed.bmw_rows):
+            rows = routed.bmw_rows
+            res = daat_serve(self.shard, jnp.asarray(terms[rows]),
+                             jnp.asarray(mask[rows]),
+                             jnp.ones(len(rows), jnp.float32),
+                             n_docs=self.spec.n_docs,
+                             n_blocks=self.spec.n_blocks,
+                             block_size=self.spec.block_size, k=self.k_serve,
+                             cap=self.spec.max_df,
+                             bcap=self.spec.max_blocks_per_term)
+            topk[rows] = np.asarray(res.topk_docs)
+            t_bmw[rows] = self.cost.daat_time(np.asarray(res.work),
+                                              np.asarray(res.blocks))
+
+        def jass_time(rows, rho):
+            # deterministic: budget resolves to level cut; time from work
+            lc = self.index.level_cum[terms[rows]]
+            lc = lc * (mask[rows] > 0)[:, :, None]
+            total = lc.sum(axis=1)
+            out = np.zeros(len(rows))
+            for i in range(len(rows)):
+                ok = total[i] <= rho[i]
+                w = total[i][np.argmax(ok)] if ok.any() else 0
+                out[i] = self.cost.saat_time(w)
+            return out
+
+        lat = self.sched.resolve_times(routed, t_bmw, jass_time)
+        stats = dict(self.sched.stats)
+        stats.update(percentiles(lat))
+        n_over, pct = over_budget(lat, self.sched.cfg.budget)
+        stats["over_budget"] = n_over
+        stats["over_budget_pct"] = pct
+        return ServeResult(topk=topk, latency=lat, stats=stats)

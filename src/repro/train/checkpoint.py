@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing: atomic, async, layout-independent.
+
+Production requirements implemented here:
+
+* **Atomicity** — write to a temp dir, fsync, then `os.rename` (POSIX-atomic)
+  so a crash mid-write never corrupts the latest checkpoint.
+* **Integrity** — a manifest with per-array checksums; restore verifies and
+  falls back to the previous step on mismatch (torn-write detection).
+* **Async** — `save_async` hands the host copy to a writer thread so the
+  accelerator keeps stepping (double-buffered; at most one pending write).
+* **Layout independence / elasticity** — arrays are saved *unsharded* by
+  logical name; restore re-shards onto whatever mesh the job restarts with
+  (different device counts included — see `repro.train.elastic`).
+* **Retention** — keep the last N checkpoints, delete older ones only
+  after the newest is durable.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    # dict keys sorted to match jax pytree flattening order
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _checksum(a: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(a).view(np.uint8)).hexdigest()[:16]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pending: threading.Thread | None = None
+
+    # ---------------- write path ----------------
+
+    def save(self, step: int, tree, extra: dict | None = None):
+        arrays = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        self._write(step, arrays, extra or {})
+
+    def save_async(self, step: int, tree, extra: dict | None = None):
+        """Device->host copy happens now; disk write on a worker thread."""
+        self.wait()
+        arrays = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        t = threading.Thread(target=self._write, args=(step, arrays,
+                                                       extra or {}))
+        t.start()
+        self._pending = t
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _write(self, step: int, arrays: dict, extra: dict):
+        tmp = os.path.join(self.dir, f".tmp_step_{step}_{os.getpid()}")
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "time": time.time(), "extra": extra,
+                    "arrays": {}}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        for k, a in arrays.items():
+            manifest["arrays"][k] = {"shape": list(a.shape),
+                                     "dtype": str(a.dtype),
+                                     "sha1": _checksum(a)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ---------------- read path ----------------
+
+    def list_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def restore_latest(self, template, mesh=None, shardings=None):
+        """Restore the newest *valid* checkpoint into `template`'s structure.
+
+        Returns (step, tree, extra) or (None, None, None) if nothing valid.
+        Corrupt checkpoints (checksum/manifest mismatch) are skipped.
+        """
+        for step in reversed(self.list_steps()):
+            path = os.path.join(self.dir, f"step_{step:010d}")
+            try:
+                with open(os.path.join(path, "manifest.json")) as f:
+                    manifest = json.load(f)
+                data = np.load(os.path.join(path, "arrays.npz"))
+                arrays = {}
+                for k, info in manifest["arrays"].items():
+                    a = data[k]
+                    if _checksum(a) != info["sha1"]:
+                        raise IOError(f"checksum mismatch for {k}")
+                    arrays[k] = a
+                tree = self._unflatten(template, arrays, mesh, shardings)
+                return step, tree, manifest.get("extra", {})
+            except Exception as e:
+                print(f"[ckpt] step {step} invalid ({e}); trying older")
+        return None, None, None
+
+    def _unflatten(self, template, arrays, mesh, shardings):
+        flat_t = _flatten(template)
+        sh_flat = _flatten(shardings) if shardings is not None else None
+        leaves, treedef = jax.tree.flatten(template)
+        out = {}
+        for k in flat_t:
+            a = arrays[k]
+            if sh_flat is not None and k in sh_flat:
+                out[k] = jax.device_put(a, sh_flat[k])
+            else:
+                out[k] = jax.numpy.asarray(a)
+        ordered = [out[k] for k in flat_t]
+        return jax.tree.unflatten(treedef, ordered)

@@ -1,0 +1,36 @@
+"""Elastic scaling: restore a layout-independent checkpoint onto a different
+mesh (device count changed after node failure / preemption).
+
+Checkpoints store unsharded logical arrays, so elasticity reduces to
+recomputing NamedShardings for the new mesh and device_put-ing — plus
+re-deriving data-pipeline cursors so no sample is skipped or repeated.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models import common
+
+
+def reshard_tree(tree, names_tree, rules, mesh):
+    """Place an (unsharded, host) pytree onto `mesh` per the logical rules."""
+    def place(leaf, names):
+        spec = common.fit_spec_to_shape(
+            common.resolve_pspec(names, rules, mesh), leaf.shape, mesh)
+        return jax.device_put(leaf, jax.sharding.NamedSharding(mesh, spec))
+    return jax.tree.map(place, tree, names_tree,
+                        is_leaf=lambda x: hasattr(x, "shape")
+                        and not isinstance(x, dict))
+
+
+def rebalance_batch_size(global_batch: int, old_ways: int, new_ways: int):
+    """Keep the global batch when the DP degree changes; returns the new
+    per-replica batch and the padded global batch if not divisible."""
+    per = -(-global_batch // new_ways)
+    return per, per * new_ways
+
+
+def data_cursor_after_restart(step: int, global_batch: int) -> int:
+    """Deterministic data-pipeline cursor: sample index to resume from."""
+    return step * global_batch

@@ -1,0 +1,88 @@
+"""AdamW + schedules + gradient clipping, pure JAX (no optax dependency).
+
+Optimizer state mirrors the parameter pytree (same sharding), so the whole
+train state shards under one names-tree.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+    step: jnp.ndarray
+
+
+def init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def abstract_init(params) -> OptState:
+    sds = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                       params)
+    return OptState(m=sds, v=jax.tree.map(lambda x: x, sds),
+                    step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cosine = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cosine)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(params, grads, opt: OptState, cfg: AdamWConfig):
+    """One AdamW update. Returns (new_params, new_opt, metrics)."""
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    step = opt.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt.m)
+    flat_v = jax.tree.leaves(opt.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, OptState(new_m, new_v, step), {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,103 @@
+"""Production training loop: grad accumulation with bucketed overlap,
+checkpoint/restart, failure injection hooks, and throughput accounting.
+
+The loop is engine-agnostic (takes a loss_fn + params); `repro/launch/train.py`
+wires it to the LM/GNN/recsys models.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ckpt_lib
+from repro.train import compression, optimizer
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 200
+    microbatches: int = 1             # grad accumulation factor
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    compress_grads: bool = False
+    opt: optimizer.AdamWConfig = field(default_factory=optimizer.AdamWConfig)
+
+
+def make_train_step(loss_fn: Callable, cfg: TrainConfig):
+    """Returns jit-able train_step(params, opt, batch) -> (params, opt, loss).
+
+    With microbatches > 1, grads accumulate over a lax.scan of microbatch
+    slices — the bucketed psum of microbatch i overlaps compute of i+1 on
+    real hardware (XLA async collectives).
+    """
+    def step(params, opt, batch):
+        if cfg.microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((cfg.microbatches,
+                                  x.shape[0] // cfg.microbatches) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                acc, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + l), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(acc_fn, (zero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / cfg.microbatches, grads)
+            loss = lsum / cfg.microbatches
+        if cfg.compress_grads:
+            q, _ = compression.compress_grads(
+                grads, compression.init_error(grads))
+            grads = compression.decompress_grads(q)
+        new_p, new_opt, metrics = optimizer.apply(params, grads, opt, cfg.opt)
+        return new_p, new_opt, loss, metrics
+    return step
+
+
+def run(params, loss_fn: Callable, data_iter, cfg: TrainConfig,
+        resume: bool = True, fail_at: int | None = None):
+    """Train with checkpoint/restart. `fail_at` injects a crash (tests)."""
+    mgr = ckpt_lib.CheckpointManager(cfg.ckpt_dir)
+    opt = optimizer.init(params)
+    start = 0
+    if resume:
+        step0, state, extra = mgr.restore_latest(
+            {"params": params, "opt_m": opt.m, "opt_v": opt.v})
+        if step0 is not None:
+            params = state["params"]
+            opt = optimizer.OptState(state["opt_m"], state["opt_v"],
+                                     jnp.asarray(step0, jnp.int32))
+            start = step0
+            print(f"[train] resumed from step {step0}")
+
+    step_fn = jax.jit(make_train_step(loss_fn, cfg))
+    losses = []
+    t0 = time.time()
+    for step in range(start, cfg.steps):
+        batch = next(data_iter)
+        params, opt, loss, metrics = step_fn(params, opt, batch)
+        losses.append(float(loss))
+        if fail_at is not None and step == fail_at:
+            mgr.wait()
+            raise RuntimeError(f"injected failure at step {step}")
+        if (step + 1) % cfg.ckpt_every == 0:
+            mgr.save_async(step + 1, {"params": params, "opt_m": opt.m,
+                                      "opt_v": opt.v})
+        if (step + 1) % cfg.log_every == 0:
+            dt = time.time() - t0
+            print(f"[train] step {step + 1} loss={float(loss):.4f} "
+                  f"({(step + 1 - start) / dt:.2f} steps/s)")
+    mgr.wait()
+    mgr.save(cfg.steps, {"params": params, "opt_m": opt.m, "opt_v": opt.v})
+    return params, opt, losses

@@ -1,0 +1,20 @@
+import os
+import sys
+
+# tests see the real (single) device — the 512-device flag is dryrun-only
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.index.builder import build_index
+from repro.index.corpus import CorpusParams, build_corpus, build_queries
+
+
+@pytest.fixture(scope="session")
+def small_collection():
+    corpus = build_corpus(CorpusParams(n_docs=4096, vocab=2048,
+                                       avg_doclen=80, zipf_a=1.05, seed=3))
+    index = build_index(corpus, stop_k=8)
+    ql = build_queries(corpus, 96, stop_k=8, seed=11)
+    return corpus, index, ql

@@ -1,0 +1,90 @@
+"""JAX serving engines vs the batched numpy oracles + anytime properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.index.postings import shard_from_index
+from repro.isn import oracle
+from repro.isn.daat import daat_serve
+from repro.isn.saat import saat_serve
+
+
+@pytest.fixture(scope="module")
+def shard(small_collection):
+    corpus, index, ql = small_collection
+    s, spec = shard_from_index(index)
+    return corpus, index, ql, s, spec
+
+
+def test_saat_matches_oracle(shard):
+    corpus, index, ql, s, spec = shard
+    rows = np.arange(48)
+    rho = 1500
+    res = saat_serve(s, jnp.asarray(ql.terms[rows]), jnp.asarray(ql.mask[rows]),
+                     jnp.full(len(rows), rho), n_docs=spec.n_docs, k=30,
+                     cap=rho)
+    acc, work = oracle.jass_scores(index, ql.terms, ql.mask, rows, rho)
+    ids_o, _ = oracle._topk_ids(acc, 30)
+    np.testing.assert_array_equal(np.asarray(res.work), work)
+    overlap = np.mean([len(np.intersect1d(np.asarray(res.topk_docs[i]),
+                                          ids_o[i])) / 30 for i in range(48)])
+    assert overlap > 0.97          # ties at equal quantized scores
+
+
+def test_saat_work_bounded_by_rho(shard):
+    """The anytime guarantee: work never exceeds the budget."""
+    corpus, index, ql, s, spec = shard
+    rows = np.arange(96)
+    for rho in (256, 1024, 4096):
+        res = saat_serve(s, jnp.asarray(ql.terms), jnp.asarray(ql.mask),
+                         jnp.full(96, rho), n_docs=spec.n_docs, k=10, cap=rho)
+        assert int(np.asarray(res.work).max()) <= rho
+
+
+def test_saat_work_monotone_in_rho(shard):
+    corpus, index, ql, s, spec = shard
+    prev = None
+    for rho in (256, 1024, 4096, 16384):
+        res = saat_serve(s, jnp.asarray(ql.terms), jnp.asarray(ql.mask),
+                         jnp.full(96, rho), n_docs=spec.n_docs, k=10, cap=rho)
+        w = np.asarray(res.work)
+        if prev is not None:
+            assert np.all(w >= prev)
+        prev = w
+
+
+def test_daat_ranksafe_matches_exhaustive(shard):
+    corpus, index, ql, s, spec = shard
+    rows = np.arange(48)
+    res = daat_serve(s, jnp.asarray(ql.terms[rows]), jnp.asarray(ql.mask[rows]),
+                     jnp.ones(len(rows), jnp.float32), n_docs=spec.n_docs,
+                     n_blocks=spec.n_blocks, block_size=spec.block_size,
+                     k=20, cap=spec.max_df, bcap=spec.max_blocks_per_term)
+    acc, _ = oracle.exhaustive_scores(index, ql.terms, ql.mask, rows)
+    ids_e, _ = oracle._topk_ids(acc, 20)
+    overlap = np.mean([len(np.intersect1d(np.asarray(res.topk_docs[i]),
+                                          ids_e[i])) / 20 for i in range(48)])
+    assert overlap > 0.99
+
+
+def test_daat_aggression_reduces_work(shard):
+    corpus, index, ql, s, spec = shard
+    works = []
+    for theta in (1.0, 1.3):
+        res = daat_serve(s, jnp.asarray(ql.terms), jnp.asarray(ql.mask),
+                         jnp.full(96, theta), n_docs=spec.n_docs,
+                         n_blocks=spec.n_blocks, block_size=spec.block_size,
+                         k=20, cap=spec.max_df, bcap=spec.max_blocks_per_term)
+        works.append(int(np.asarray(res.work).sum()))
+    assert works[1] <= works[0]
+
+
+def test_oracle_bmw_work_never_exceeds_exhaustive(small_collection):
+    corpus, index, ql = small_collection
+    rows = np.arange(64)
+    _, w_b, _ = oracle.bmw_scores(index, ql.terms, ql.mask, rows, k=50)
+    for i, q in enumerate(rows):
+        m = ql.mask[q] > 0
+        total = int(index.df[ql.terms[q][m]].sum())
+        assert w_b[i] <= total

@@ -1,0 +1,79 @@
+"""End-to-end test of the distributed hybrid ISN serve step (shard_map):
+Stage-0 in-graph GBRT + both engines + top-k merge, on real index data
+over a degenerate (1,1) mesh."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import features as F
+from repro.index.postings import shard_from_index
+from repro.isn import oracle
+from repro.isn.shard import ForestArrays, hybrid_serve_fn
+
+
+def _identity_forest(n_targets=3, n_feats=147, n_bins=64, const=0.0):
+    """A degenerate forest predicting `const` for every target."""
+    t, d, w = 4, 5, 2 ** 4
+    return ForestArrays(
+        feat=jnp.zeros((n_targets, t, d, w), jnp.int32),
+        thresh=jnp.full((n_targets, t, d, w), n_bins, jnp.int32),
+        leaf=jnp.zeros((n_targets, t, 2 ** d), jnp.float32),
+        base=jnp.full((n_targets,), const, jnp.float32),
+        bin_edges=jnp.full((n_feats, n_bins - 1), 1e30, jnp.float32),
+    )
+
+
+def test_hybrid_serve_step_end_to_end(small_collection):
+    corpus, index, ql = small_collection
+    shard, spec = shard_from_index(index)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    k_shard, k_global, rho_max = 64, 64, 4096
+    fn = hybrid_serve_fn(
+        mesh, n_docs_shard=spec.n_docs, n_model=1, k_shard=k_shard,
+        k_global=k_global, rho_max=rho_max, daat_cap=spec.max_df,
+        daat_bcap=spec.max_blocks_per_term,
+        n_blocks=spec.n_blocks, block_size=spec.block_size,
+        # base prediction log1p-space: expm1(12) >> t_k -> everything JASS
+        t_k=1.0, t_time=1e9, forest_depth=5)
+
+    stacked = jax.tree.map(lambda a: a[None], shard)
+    fa = _identity_forest(const=12.0)
+    term_stats = jnp.asarray(index.term_stats)[None]
+    q = 16
+    terms = jnp.asarray(ql.terms[:q])
+    mask = jnp.asarray(ql.mask[:q])
+
+    with mesh:
+        ids, sc, work, route = fn(stacked, fa, term_stats, terms, mask)
+    assert ids.shape == (q, k_global)
+    assert bool(jnp.all(route))          # predicted k >> t_k -> all JASS
+    assert int(jnp.max(work)) <= rho_max
+
+    # compare against the numpy oracle at the same budget
+    accj, wj = oracle.jass_scores(index, ql.terms, ql.mask, np.arange(q),
+                                  rho_max)
+    ids_o, _ = oracle._topk_ids(accj, k_global)
+    overlap = np.mean([len(np.intersect1d(np.asarray(ids[i]), ids_o[i]))
+                       / k_global for i in range(q)])
+    assert overlap > 0.95
+
+    # BMW route: forest predicting tiny k -> everything BMW, rank-safe
+    fa_small = _identity_forest(const=0.0)
+    fn2 = hybrid_serve_fn(
+        mesh, n_docs_shard=spec.n_docs, n_model=1, k_shard=k_shard,
+        k_global=k_global, rho_max=rho_max, daat_cap=spec.max_df,
+        daat_bcap=spec.max_blocks_per_term,
+        n_blocks=spec.n_blocks, block_size=spec.block_size,
+        t_k=1e9, t_time=1e9)
+    with mesh:
+        ids2, sc2, work2, route2 = fn2(stacked, fa_small, term_stats, terms,
+                                       mask)
+    assert not bool(jnp.any(route2))
+    acc, _ = oracle.exhaustive_scores(index, ql.terms, ql.mask, np.arange(q))
+    ids_e, _ = oracle._topk_ids(acc, k_global)
+    overlap2 = np.mean([len(np.intersect1d(np.asarray(ids2[i]), ids_e[i]))
+                        / k_global for i in range(q)])
+    assert overlap2 > 0.97

@@ -1,0 +1,72 @@
+"""Replica pool: balancing, failure handling, mirror fallback, rebalance."""
+
+import numpy as np
+
+from repro.serving.replicas import BMW, JASS, PoolConfig, Replica, ReplicaPool
+
+
+def _pool(**kw):
+    return ReplicaPool(PoolConfig(**kw), seed=0)
+
+
+def test_fanout_covers_every_partition():
+    pool = _pool(n_partitions=4, replicas_per_partition=4)
+    picks = pool.route_query(JASS)
+    assert len(picks) == 4
+    assert sorted(r.partition for r in picks) == [0, 1, 2, 3]
+    assert all(r.mirror == JASS for r in picks)
+
+
+def test_load_balancing_spreads_inflight():
+    pool = _pool(n_partitions=1, replicas_per_partition=4)
+    outstanding = []
+    for _ in range(200):
+        picks = pool.route_query(JASS)
+        outstanding.extend(picks)
+        if len(outstanding) >= 4:            # queueing: complete FIFO
+            r = outstanding.pop(0)
+            pool.complete(r, latency=np.random.rand())
+    for r in outstanding:
+        pool.complete(r, latency=0.5)
+    served = [r.served for r in pool.replicas if r.mirror == JASS]
+    assert min(served) > 0.2 * max(served)   # no starvation under load
+
+
+def test_failure_and_recovery():
+    pool = _pool(n_partitions=1, replicas_per_partition=2, fail_after=2)
+    jass = pool.candidates(0, JASS)[0]
+    for _ in range(2):
+        pool.complete(jass, latency=0, ok=False)
+    assert not jass.healthy
+    # JASS exhausted -> falls back to the BMW mirror
+    picks = pool.route_query(JASS)
+    assert picks is not None and picks[0].mirror == BMW
+    pool.probe(jass, ok=True)
+    assert jass.healthy
+
+
+def test_straggler_deprioritized():
+    pool = _pool(n_partitions=1, replicas_per_partition=4)
+    straggler = pool.candidates(0, JASS)[0]
+    straggler.ewma_latency = 100.0
+    counts = {id(r): 0 for r in pool.replicas}
+    for _ in range(300):
+        picks = pool.route_query(JASS)
+        for r in picks:
+            counts[id(r)] += 1
+            pool.complete(r, latency=1.0)
+    others = [c for rid, c in counts.items()
+              if rid != id(straggler) and c > 0]
+    assert counts[id(straggler)] < max(others)
+
+
+def test_rebalance_follows_mix():
+    pool = _pool(n_partitions=2, replicas_per_partition=4,
+                 jass_fraction=0.5)
+    pool.rebalance(0.75)
+    s = pool.stats()
+    assert s["jass"] == 2 * 3 and s["bmw"] == 2 * 1
+    # bounds respected
+    pool.rebalance(0.01)
+    s = pool.stats()
+    assert s["jass"] >= 2 and s["bmw"] >= 2

@@ -1,0 +1,89 @@
+"""Scheduler routing/hedging semantics + dry-run utility units."""
+
+import numpy as np
+import pytest
+
+from repro.core import hybrid
+from repro.serving.latency import CostModel
+from repro.serving.scheduler import SchedulerConfig, StageZeroScheduler
+
+
+def test_routing_algorithms():
+    cfg = hybrid.HybridConfig(t_k=100.0, t_time_us=50.0)
+    pred_k = np.asarray([10, 500, 50.0])
+    pred_t = np.asarray([10.0, 10.0, 99.0])
+    r1 = hybrid.route_algorithm1(pred_k, cfg)
+    assert list(r1) == [hybrid.ROUTE_BMW, hybrid.ROUTE_JASS,
+                        hybrid.ROUTE_BMW]
+    r2 = hybrid.route_algorithm2(pred_k, pred_t, cfg)
+    assert list(r2) == [hybrid.ROUTE_BMW, hybrid.ROUTE_JASS,
+                        hybrid.ROUTE_JASS]
+
+
+def test_clamping():
+    cfg = hybrid.HybridConfig(rho_max=1000, rho_min=10, k_min=5, k_max=50)
+    k, rho = hybrid.clamp_parameters(np.asarray([1.0, 1e9]),
+                                     np.asarray([1.0, 1e9]), cfg)
+    assert list(k) == [5, 50] and list(rho) == [10, 1000]
+
+
+def test_hedging_bounds_worst_case():
+    """Late-hedged BMW queries must end below budget/2 + jass time."""
+    cost = CostModel.paper_scale()
+    cfg = SchedulerConfig(algorithm=2, budget=100.0, t_time=60.0,
+                          rho_max=4096)
+    sched = StageZeroScheduler(cfg, cost)
+    n = 64
+    rng = np.random.RandomState(0)
+    pred_k = rng.uniform(10, 2000, n)
+    pred_rho = rng.uniform(500, 4000, n)
+    pred_t = rng.uniform(5, 50, n)        # all predicted fast -> BMW
+    routed = sched.route(pred_k, pred_rho, pred_t)
+    t_bmw = rng.uniform(5, 500, n)        # some actually slow (mispredicted)
+
+    def jass_time(rows, rho):
+        return np.full(len(rows), 20.0)
+
+    t = sched.resolve_times(routed, t_bmw, jass_time)
+    # queries under budget keep their BMW time; mispredicted slow ones are
+    # re-issued and bounded by detect-at-deadline + a capped JASS run
+    assert t.max() <= max(cfg.budget,
+                          cfg.budget * 0.5 + 20.0) + cost.predict_us + 1e-9
+    assert sched.stats["late_hedged"] > 0
+    # the worst original BMW time (500) must have been cut down
+    assert t.max() < t_bmw.max()
+
+
+def test_collective_parser():
+    from repro.launch import dryrun
+    hlo = """
+  %all-gather = f32[16,128]{1,0} all-gather(%x), replica_groups={}
+  %y = f32[16,128]{1,0} fusion(%all-gather), calls=%f
+  %ar = (bf16[64]{0}, bf16[64]{0}) all-reduce-start(%a, %b), to_apply=%add
+  %done = bf16[64]{0} all-reduce-done(%ar)
+  %cp = u32[8,4]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    out = dryrun.collective_bytes(hlo)
+    assert out["n_ops"]["all-gather"] == 1
+    assert out["n_ops"]["all-reduce"] == 1          # start counted, done not
+    assert out["n_ops"]["collective-permute"] == 1
+    assert out["all-gather"] == 16 * 128 * 4
+    assert out["all-reduce"] == 2 * 64 * 2
+    assert out["collective-permute"] == 8 * 4 * 4
+
+
+def test_roofline_terms():
+    from repro.launch.dryrun import roofline, PEAK_FLOPS, HBM_BW, ICI_BW
+    t = roofline(PEAK_FLOPS, HBM_BW, ICI_BW, 256)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 1.0) < 1e-9
+    assert abs(t["collective_s"] - 1.0) < 1e-9
+
+
+def test_memory_traffic_estimate():
+    from repro.launch.dryrun import memory_traffic_bytes
+    est = memory_traffic_bytes({"argument_size": 100, "output_size": 50,
+                                "temp_size": 25}, 1e9)
+    assert est == 100 + 50 + 50
+    # falls back to hlo bytes when allocation info missing
+    assert memory_traffic_bytes({}, 123.0) == 123.0
