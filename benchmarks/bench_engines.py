@@ -1,14 +1,26 @@
-"""Paper Fig. 3 — engine latency distributions across the query trace.
+"""Paper Fig. 3 — engine latency distributions across the query trace —
+plus the serving-throughput study of the batched kernel-backed pipeline.
 
-Systems: exhaustive BMW (θ=1.0), aggressive BMW (θ=1.2), exhaustive JASS
-("Jass_1b" analogue), heuristic JASS (ρ = 10% of collection, "Jass_5m").
+Fig. 3 systems: exhaustive BMW (θ=1.0), aggressive BMW (θ=1.2), exhaustive
+JASS ("Jass_1b" analogue), heuristic JASS (ρ = 10% of collection,
+"Jass_5m").
+
+``run_serving`` measures wall-clock queries/sec of the batched
+``daat_serve`` / ``saat_serve`` pipelines against their one-query-at-a-time
+``lax.map`` baselines on a synthetic shard, verifies the top-k output is
+identical, and emits the tracked ``results/BENCH_engines.json`` artifact
+(queries/sec + p50/p99/p99.99 per engine) so the perf trajectory is
+recorded from PR to PR.  Run standalone with
+``PYTHONPATH=src:. python benchmarks/bench_engines.py``.
 """
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from benchmarks.common import Experiment
+from benchmarks.common import Experiment, write_bench_artifact
 from repro.isn import oracle
 from repro.serving.latency import CostModel, percentiles
 
@@ -52,3 +64,147 @@ def render(res) -> str:
         lines.append(f"{name},{p['mean']:.1f},{p['p50']:.1f},{p['p95']:.1f},"
                      f"{p['p99']:.1f},{p['p99.9']:.1f},{p['max']:.1f}")
     return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# serving throughput: batched kernel-backed pipeline vs lax.map baseline
+# ---------------------------------------------------------------------------
+
+def _time_engine(fn, reps: int):
+    """Wall-clock an engine call; returns per-batch seconds (first call is
+    the untimed jit warmup)."""
+    import jax
+    jax.block_until_ready(fn())
+    times = np.zeros(reps)
+    for i in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times[i] = time.perf_counter() - t0
+    return times
+
+
+def _topk_identical(a, b) -> float:
+    """Fraction of (query, rank) slots with identical doc ids."""
+    return float(np.mean(np.asarray(a) == np.asarray(b)))
+
+
+def run_serving(q_batch: int = 64, n_docs: int = 8192, reps: int = 25,
+                k: int = 64, rho: int = 4096, seed: int = 5,
+                backend: str = "jnp") -> dict:
+    """Throughput study on a synthetic shard at batch size ``q_batch``.
+
+    Engines: the batched pipeline (``backend`` — fused-jnp on CPU hosts,
+    compiled Pallas on TPU) vs the ``lax.map`` + dense scatter-add + full
+    top-k baseline, for both DAAT (θ=1.0) and SAAT (fixed ρ).  The batched
+    pipeline must return the *same top-k* as the baseline — recorded per
+    engine as ``topk_match``.
+    """
+    import jax.numpy as jnp
+    from repro.index.builder import build_index
+    from repro.index.corpus import CorpusParams, build_corpus, build_queries
+    from repro.index.postings import shard_from_index
+    from repro.isn.backend import query_lane_budget
+    from repro.isn.daat import daat_serve, daat_serve_laxmap
+    from repro.isn.saat import saat_serve, saat_serve_laxmap
+
+    corpus = build_corpus(CorpusParams(n_docs=n_docs, vocab=max(n_docs // 2,
+                                                                2048),
+                                       avg_doclen=96, zipf_a=1.05,
+                                       seed=seed))
+    index = build_index(corpus, stop_k=16)
+    ql = build_queries(corpus, q_batch, stop_k=16, seed=seed + 4)
+    shard, spec = shard_from_index(index)
+    terms = jnp.asarray(ql.terms)
+    mask = jnp.asarray(ql.mask)
+    theta = jnp.ones(q_batch, jnp.float32)
+    rho_v = jnp.full(q_batch, rho, jnp.int32)
+
+    daat_kw = dict(n_docs=spec.n_docs, n_blocks=spec.n_blocks,
+                   block_size=spec.block_size, k=k, cap=spec.max_df,
+                   bcap=spec.max_blocks_per_term)
+    saat_kw = dict(n_docs=spec.n_docs, k=k, cap=rho)
+    qcap = query_lane_budget(index.df, ql.terms, ql.mask)
+    engines = {
+        "daat_batched": lambda: daat_serve(shard, terms, mask, theta,
+                                           tile_d=spec.tile_d,
+                                           q_block=q_batch, qcap=qcap,
+                                           backend=backend, **daat_kw),
+        "daat_laxmap": lambda: daat_serve_laxmap(shard, terms, mask, theta,
+                                                 **daat_kw),
+        "saat_batched": lambda: saat_serve(shard, terms, mask, rho_v,
+                                           tile_d=spec.tile_d,
+                                           q_block=q_batch,
+                                           backend=backend, **saat_kw),
+        "saat_laxmap": lambda: saat_serve_laxmap(shard, terms, mask, rho_v,
+                                                 **saat_kw),
+    }
+
+    out = {}
+    results = {}
+    for name, fn in engines.items():
+        results[name] = fn()
+        t = _time_engine(fn, reps)
+        per_query_us = t / q_batch * 1e6
+        out[name] = {
+            "qps": float(q_batch / t.mean()),
+            "batch_ms": float(t.mean() * 1e3),
+            "p50_us": float(np.percentile(per_query_us, 50)),
+            "p99_us": float(np.percentile(per_query_us, 99)),
+            "p99.99_us": float(np.percentile(per_query_us, 99.99)),
+        }
+
+    for eng in ("daat", "saat"):
+        match = _topk_identical(results[f"{eng}_batched"].topk_docs,
+                                results[f"{eng}_laxmap"].topk_docs)
+        speedup = out[f"{eng}_batched"]["qps"] / out[f"{eng}_laxmap"]["qps"]
+        out[f"{eng}_batched"]["topk_match"] = match
+        out[f"{eng}_batched"]["speedup_vs_laxmap"] = float(speedup)
+        # SAAT accumulates integers (bit-exact across backends); DAAT sums
+        # floats, where summation-order ties could in principle flip a rank
+        floor = 1.0 if eng == "saat" else 0.999
+        if match < floor:
+            raise RuntimeError(
+                f"{eng}_batched top-k diverged from the lax.map reference "
+                f"(match={match:.4f} < {floor}); the batched pipeline must "
+                f"reproduce the baseline — see tests/test_serving_pipeline.py")
+
+    payload = {
+        "config": {"q_batch": q_batch, "n_docs": n_docs, "k": k, "rho": rho,
+                   "reps": reps, "backend": backend, "qcap": qcap,
+                   "tile_d": spec.tile_d, "tile_cap": spec.tile_cap},
+        "engines": out,
+    }
+    payload["artifact"] = write_bench_artifact("engines", payload)
+    return payload
+
+
+def render_serving(res) -> str:
+    lines = ["engine,qps,batch_ms,p50_us,p99_us,p99.99_us,speedup,topk_match"]
+    for name, e in res["engines"].items():
+        lines.append(
+            f"{name},{e['qps']:.1f},{e['batch_ms']:.2f},{e['p50_us']:.1f},"
+            f"{e['p99_us']:.1f},{e['p99.99_us']:.1f},"
+            f"{e.get('speedup_vs_laxmap', 1.0):.2f},"
+            f"{e.get('topk_match', 1.0):.4f}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--q-batch", type=int, default=64)
+    ap.add_argument("--n-docs", type=int, default=8192)
+    ap.add_argument("--reps", type=int, default=25)
+    ap.add_argument("--backend", default=None,
+                    help="pallas | interpret | jnp (default: auto)")
+    args = ap.parse_args()
+    from repro.isn.backend import resolve_backend
+    res = run_serving(q_batch=args.q_batch, n_docs=args.n_docs,
+                      reps=args.reps,
+                      backend=resolve_backend(args.backend))
+    print(render_serving(res))
+    print(f"artifact: {res['artifact']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,30 @@ def run() -> dict:
     v5e = max(p * 8 / HBM_BW, p * 128 * 2 * 8 / PEAK_FLOPS) * 1e6
     rows.append(("impact_accumulate", us, f"v5e_est_us={v5e:.2f}"))
 
+    # batched bucketed-mirror accumulate (the serving pipeline's hot loop):
+    # jnp-equivalent math over a (T, CAP) bucketed layout at Q=16, plus the
+    # v5e roofline estimate of the compiled (Q, T) Pallas grid
+    q_b, n_tiles, cap_b, tile_d, L = 16, 16, 1024, 128, 8
+    t_docs = jnp.asarray(rng.randint(-1, tile_d, (n_tiles, cap_b)), jnp.int32)
+    t_terms = jnp.asarray(rng.randint(0, 512, (n_tiles, cap_b)), jnp.int32)
+    t_imps = jnp.asarray(rng.randint(1, 256, (n_tiles, cap_b)), jnp.int32)
+    qterms = jnp.asarray(rng.randint(0, 512, (q_b, L)), jnp.int32)
+
+    def batched_ref(td, tt, ti, qt):
+        match = jnp.any(tt[None, :, :, None] == qt[:, None, None, :], axis=-1)
+        live = match & (td[None] >= 0)
+        v = jnp.where(live, ti[None], 0)
+        oh = (jnp.where(live, td[None], -1)[..., None]
+              == jnp.arange(tile_d)[None, None, None]).astype(jnp.float32)
+        return jnp.einsum("qtc,qtcd->qtd", v.astype(jnp.float32), oh)
+
+    f = jax.jit(batched_ref)
+    us = _time(f, t_docs, t_terms, t_imps, qterms)
+    post = q_b * n_tiles * cap_b
+    v5e = max(n_tiles * cap_b * 8 / HBM_BW,           # buckets read once/batch
+              post * tile_d * 2 / PEAK_FLOPS) * 1e6
+    rows.append(("impact_accumulate_batched", us, f"v5e_est_us={v5e:.2f}"))
+
     # flash attention ref at a train tile
     from repro.kernels.flash_attention.ref import attention_ref
     q = jnp.asarray(rng.randn(1, 4, 1024, 128), jnp.float32) * 0.3

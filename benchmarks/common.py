@@ -9,6 +9,7 @@ Builds (and caches to results/) the full-scale study:
 
 from __future__ import annotations
 
+import json
 import os
 import pickle
 import time
@@ -20,6 +21,21 @@ RESULTS = os.environ.get("REPRO_RESULTS", "results")
 N_QUERIES = int(os.environ.get("REPRO_QUERIES", "31642"))
 HELD_OUT = 50            # first 50 queries = TREC WebTrack analogue
 RBP_P = 0.95
+
+
+def write_bench_artifact(name: str, payload: dict) -> str:
+    """Write a tracked benchmark artifact (``results/BENCH_<name>.json``).
+
+    These artifacts record the perf trajectory across PRs (queries/sec,
+    latency percentiles, speedups); keep the payload JSON-plain so diffs
+    stay readable.
+    """
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=float)
+        f.write("\n")
+    return path
 
 
 @dataclass

@@ -50,6 +50,12 @@ def main() -> None:
     print(bench_kernels.render(kr))
     _save("kernels", {"rows": [list(r) for r in kr["rows"]]})
 
+    _section("Serving throughput (batched kernel pipeline vs lax.map)")
+    from repro.isn.backend import resolve_backend
+    sr = bench_engines.run_serving(backend=resolve_backend(None))
+    print(bench_engines.render_serving(sr))
+    print(f"artifact: {sr['artifact']}")
+
     _section(f"Loading experiment ({args.queries} queries)")
     exp = load_experiment(args.queries)
     print(f"queries kept: {int(exp.labels.keep.sum())}/{args.queries} "

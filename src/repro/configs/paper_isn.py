@@ -21,6 +21,8 @@ class ISNConfig:
     rho_max: int = 131_072            # per-shard budget (≈ 33.5M global)
     query_len: int = 8
     queries_per_step: int = 4096      # global serve batch
+    tile_d: int = 128                 # docs per bucketed serving tile
+    tile_cap: int = 65_536            # lane-padded postings capacity / tile
 
 
 CONFIG = ISNConfig()
@@ -29,5 +31,5 @@ REDUCED = ISNConfig(
     name="paper-isn-reduced", n_docs=8192, vocab=4096,
     postings_per_shard=750_000, block_entries_per_shard=350_000,
     n_levels=256, block_size=64, k_max=128, rho_max=4096, query_len=8,
-    queries_per_step=32,
+    queries_per_step=32, tile_d=128, tile_cap=16_384,
 )

@@ -83,6 +83,59 @@ def _per_term_stats(term_ids, scores, offsets, df, vocab):
     return np.where(has[:, None], cols, 0.0).astype(np.float32)
 
 
+def bucket_postings_by_tile(docs: np.ndarray, terms: np.ndarray,
+                            values: list[tuple[np.ndarray, float, np.dtype]],
+                            n_docs: int, tile_d: int,
+                            lane_multiple: int = 128):
+    """Pre-tile postings into ``(n_tiles, cap)`` doc-local buckets.
+
+    This is the build-time half of the serving kernels' one-doc-tile-per-
+    grid-step layout: every posting lands in the bucket of its ``tile_d``-doc
+    tile, doc ids are rebased to be tile-local, and each bucket is padded to
+    a common lane-aligned ``cap`` so the whole structure is a dense
+    ``(n_tiles, cap)`` array the kernels can view with zero per-query copies.
+
+    Args:
+      docs: (P,) doc ids local to the shard.
+      terms: (P,) term id of each posting.
+      values: per-posting payload columns as (array, fill, dtype) tuples
+        (e.g. exact scores, quantized impacts).
+      n_docs: shard size (defines the tile count).
+      tile_d: docs per tile; must match the kernels' accumulator tile.
+      lane_multiple: pad cap to a multiple of this (TPU lane width).
+
+    Returns:
+      (tile_docs, tile_terms, bucketed_values, cap) where ``tile_docs`` is
+      (n_tiles, cap) int32 tile-local doc ids with -1 padding, ``tile_terms``
+      is (n_tiles, cap) int32 with -1 padding, and ``bucketed_values`` is a
+      list of (n_tiles, cap) arrays in ``values`` order.
+    """
+    n_tiles = max(1, -(-n_docs // tile_d))
+    p = len(docs)
+    tile = (docs // tile_d).astype(np.int64)
+    counts = np.bincount(tile, minlength=n_tiles)
+    cap = max(int(counts.max()) if p else 0, 1)
+    cap = -(-cap // lane_multiple) * lane_multiple
+
+    order = np.argsort(tile, kind="stable")   # keeps (term, doc) order in-tile
+    tsort = tile[order]
+    starts = np.zeros(n_tiles + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    slot = tsort * cap + (np.arange(p, dtype=np.int64) - starts[tsort])
+
+    tile_docs = np.full(n_tiles * cap, -1, np.int32)
+    tile_docs[slot] = (docs[order] - tsort * tile_d).astype(np.int32)
+    tile_terms = np.full(n_tiles * cap, -1, np.int32)
+    tile_terms[slot] = terms[order].astype(np.int32)
+    bucketed = []
+    for arr, fill, dtype in values:
+        b = np.full(n_tiles * cap, fill, dtype)
+        b[slot] = arr[order].astype(dtype)
+        bucketed.append(b.reshape(n_tiles, cap))
+    return (tile_docs.reshape(n_tiles, cap), tile_terms.reshape(n_tiles, cap),
+            bucketed, cap)
+
+
 def build_index(corpus: Corpus, block_size: int = 64,
                 n_levels: int = 255, stop_k: int = 64) -> InvertedIndex:
     n, v = corpus.n_docs, corpus.vocab

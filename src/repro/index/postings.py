@@ -1,6 +1,6 @@
 """Device-resident index shard structures for the JAX/TPU serving engines.
 
-An ISN holds one *document shard* of the corpus in HBM, in both mirrors:
+An ISN holds one *document shard* of the corpus in HBM, in three mirrors:
 
 * impact-ordered arrays for SAAT (JASS) — per-term postings sorted by
   descending quantized impact, plus per-term per-level cumulative counts so
@@ -8,7 +8,16 @@ An ISN holds one *document shard* of the corpus in HBM, in both mirrors:
 * document-ordered arrays for DAAT (BMW) — per-term postings sorted by
   docid with exact scores, plus a *sparse* per-term block-max structure
   (term-major CSR of (block_id, block_max, block_count)) — dense
-  (V × n_blocks) does not scale to 2M-term vocabularies.
+  (V × n_blocks) does not scale to 2M-term vocabularies;
+* a **bucketed (doc-tile-major) mirror** feeding the batched Pallas serving
+  kernels — every posting pre-tiled at index-build time into the
+  ``(n_tiles, tile_cap)`` bucket of its ``tile_d``-doc tile, carrying
+  (tile-local doc id, term id, exact score, quantized impact).  The kernels'
+  one-doc-tile-per-grid-step layout is then a zero-copy view of the shard:
+  one grid step loads one bucket row, matches terms against the query
+  in-register, and reduces with a one-hot MXU matmul.  Pruned tiles are
+  skipped via predication, so per-query HBM traffic is proportional to the
+  *surviving* tiles rather than the collection size.
 
 All fields are plain jnp arrays so a shard can be a pytree leaf under
 ``shard_map`` and a ShapeDtypeStruct bundle for the compile-only dry-run.
@@ -22,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.builder import InvertedIndex
+from repro.index.builder import InvertedIndex, bucket_postings_by_tile
 
 
 class IndexShardSpec(NamedTuple):
@@ -36,10 +45,13 @@ class IndexShardSpec(NamedTuple):
     max_df: int            # static cap for per-term gathers
     max_blocks_per_term: int
     quant_scale: float
+    tile_d: int            # docs per bucketed serving tile
+    tile_cap: int          # lane-padded postings capacity per tile
+    n_tiles: int
 
 
 class IndexShard(NamedTuple):
-    """One document shard of the two index mirrors (pytree of jnp arrays)."""
+    """One document shard of the index mirrors (pytree of jnp arrays)."""
     # --- shared / collection stats ---
     df: jnp.ndarray            # (V,) int32
     offsets: jnp.ndarray       # (V+1,) int32 into postings arrays
@@ -57,15 +69,24 @@ class IndexShard(NamedTuple):
     bm_block_max: jnp.ndarray  # (PB,) float32 block upper bound (scaled)
     bm_block_cnt: jnp.ndarray  # (PB,) int32 postings in this (term, block)
 
+    # --- bucketed doc-tile-major mirror (batched serving kernels) ---
+    tile_docs: jnp.ndarray     # (n_tiles, tile_cap) int32 tile-local, -1 pad
+    tile_terms: jnp.ndarray    # (n_tiles, tile_cap) int32 term ids, -1 pad
+    tile_scores: jnp.ndarray   # (n_tiles, tile_cap) float32 exact BM25
+    tile_imps: jnp.ndarray     # (n_tiles, tile_cap) int32 quantized impacts
+
 
 def shard_from_index(index: InvertedIndex, doc_lo: int = 0,
-                     doc_hi: int | None = None) -> tuple[IndexShard, IndexShardSpec]:
+                     doc_hi: int | None = None,
+                     tile_d: int = 128) -> tuple[IndexShard, IndexShardSpec]:
     """Materialize the device structures for docs in [doc_lo, doc_hi)."""
     doc_hi = index.n_docs if doc_hi is None else doc_hi
     n_local = doc_hi - doc_lo
     v = index.vocab
     bs = index.block_size
-    scale = index.quant_scale / 255.0
+    if tile_d % bs:
+        raise ValueError(f"tile_d={tile_d} must be a multiple of "
+                         f"block_size={bs}")
 
     sel = (index.docs >= doc_lo) & (index.docs < doc_hi)
     term_of = np.repeat(np.arange(v), np.diff(index.offsets))
@@ -102,13 +123,20 @@ def shard_from_index(index: InvertedIndex, doc_lo: int = 0,
     bm_offsets = np.zeros(v + 1, np.int64)
     np.cumsum(bm_df, out=bm_offsets[1:])
 
+    # bucketed doc-tile-major mirror for the batched serving kernels
+    tile_docs, tile_terms, (tile_scores, tile_imps), tile_cap = \
+        bucket_postings_by_tile(
+            d, t, [(s, 0.0, np.float32), (im, 0, np.int32)], n_local, tile_d)
+
     n_blocks = (n_local + bs - 1) // bs
+    n_tiles = max(1, (n_local + tile_d - 1) // tile_d)
     spec = IndexShardSpec(
         n_docs=n_local, vocab=v, n_postings=len(d), n_blocks=n_blocks,
         n_block_entries=len(b_id), n_levels=256, block_size=bs,
         max_df=int(df.max()) if len(df) else 1,
         max_blocks_per_term=int(bm_df.max()) if len(bm_df) else 1,
-        quant_scale=index.quant_scale)
+        quant_scale=index.quant_scale,
+        tile_d=tile_d, tile_cap=tile_cap, n_tiles=n_tiles)
 
     shard = IndexShard(
         df=jnp.asarray(df),
@@ -122,6 +150,10 @@ def shard_from_index(index: InvertedIndex, doc_lo: int = 0,
         bm_block_id=jnp.asarray(b_id),
         bm_block_max=jnp.asarray(b_max),
         bm_block_cnt=jnp.asarray(b_cnt),
+        tile_docs=jnp.asarray(tile_docs),
+        tile_terms=jnp.asarray(tile_terms),
+        tile_scores=jnp.asarray(tile_scores),
+        tile_imps=jnp.asarray(tile_imps),
     )
     return shard, spec
 
@@ -131,6 +163,7 @@ def shard_specs(spec: IndexShardSpec) -> IndexShard:
     multi-pod dry-run so no index is ever materialized."""
     sds = jax.ShapeDtypeStruct
     v, p, pb = spec.vocab, spec.n_postings, spec.n_block_entries
+    nt, tc = spec.n_tiles, spec.tile_cap
     return IndexShard(
         df=sds((v,), jnp.int32),
         offsets=sds((v + 1,), jnp.int32),
@@ -143,4 +176,8 @@ def shard_specs(spec: IndexShardSpec) -> IndexShard:
         bm_block_id=sds((pb,), jnp.int32),
         bm_block_max=sds((pb,), jnp.float32),
         bm_block_cnt=sds((pb,), jnp.int32),
+        tile_docs=sds((nt, tc), jnp.int32),
+        tile_terms=sds((nt, tc), jnp.int32),
+        tile_scores=sds((nt, tc), jnp.float32),
+        tile_imps=sds((nt, tc), jnp.int32),
     )

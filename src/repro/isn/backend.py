@@ -1,0 +1,152 @@
+"""Shared plumbing for the batched first-stage serving pipeline.
+
+Backends
+--------
+The engines (``daat_serve`` / ``saat_serve``) dispatch their hot loop
+through one of three backends:
+
+* ``"pallas"``   — compiled Pallas kernels over the shard's bucketed
+  postings mirror (the TPU production path);
+* ``"interpret"``— the same kernels under the Pallas interpreter; bit-wise
+  the kernel code path, runnable on CPU — this is what the parity tests
+  exercise so the kernel program itself is covered without hardware;
+* ``"jnp"``      — a vectorized pure-jnp pipeline (batched gather + one
+  fused scatter over the CSR mirrors) producing identical results; the
+  portable fast path on CPU hosts.
+
+``resolve_backend(None)`` picks ``"pallas"`` on TPU and ``"jnp"`` elsewhere,
+so tests/CPU hosts never accidentally pay the interpreter cost and TPUs
+never fall back to scatter-adds.
+
+Tiled top-k
+-----------
+``topk_from_tiles`` replaces the full-collection ``lax.top_k`` with a
+hierarchical merge: per-tile top-k over the (Q, n_tiles, tile_d)
+accumulator tiles the kernels emit, then a top-k over the per-tile
+candidates.  Exactness: a tile holds ``tile_d`` docs, so its global top-k
+members are within its local top-``min(k, tile_d)``; tie-breaking (lower
+doc id first) is preserved because candidates stay sorted by (tile, rank).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BACKENDS = ("pallas", "interpret", "jnp")
+
+
+def query_lane_budget(df, terms, mask, round_to: int = 1024,
+                      floor: int = 256) -> int:
+    """Static per-query posting-lane budget for a batch (host-side helper).
+
+    The batched jnp backend compacts each query's ragged per-term postings
+    into a dense (Q, qcap) lane buffer before the fused scatter, so its cost
+    tracks the *actual* postings of the batch instead of L x max_df padding.
+    Callers size qcap from the batch they are about to serve (like length
+    bucketing in LM serving); rounding bounds jit recompiles.
+    """
+    import numpy as np
+    eff = np.asarray(df)[np.asarray(terms)] * (np.asarray(mask) > 0)
+    need = int(eff.sum(axis=1).max()) if eff.size else 0
+    return max(-(-max(need, 1) // round_to) * round_to, floor)
+
+
+def resolve_backend(backend: str | None) -> str:
+    """Default the serving backend from the platform; validate overrides."""
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    return backend
+
+
+def map_query_blocks(fn, args, pad_values, q_block: int):
+    """Stream a query batch through ``fn`` in q_block-sized chunks.
+
+    ``fn(*args)`` must accept per-query arrays (leading axis Q) and return a
+    pytree of per-query arrays.  Batches up to ``q_block`` run in one call;
+    larger ones are padded with ``pad_values`` (one scalar per arg, chosen
+    so padded queries are degenerate no-ops), reshaped to (chunks, q_block,
+    ...), mapped sequentially with ``lax.map`` — keeping accumulator memory
+    O(q_block · n_docs) — and truncated back to Q rows.
+    """
+    q = args[0].shape[0]
+    if q <= q_block:
+        return fn(*args)
+    nb = -(-q // q_block)
+    pad = nb * q_block - q
+    padded = [jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1),
+                      constant_values=pv)
+              for a, pv in zip(args, pad_values)]
+    out = jax.lax.map(lambda xs: fn(*xs),
+                      tuple(a.reshape((nb, q_block) + a.shape[1:])
+                            for a in padded))
+    return jax.tree.map(
+        lambda o: o.reshape((nb * q_block,) + o.shape[2:])[:q], out)
+
+
+def compact_lanes(base: jnp.ndarray, dfs: jnp.ndarray, qcap: int):
+    """Compact ragged per-term posting ranges into (Q, qcap) dense lanes.
+
+    ``base``/``dfs`` are (Q, L): the start offset and live lane count of
+    each query term's postings slice.  Lane ``j`` of query ``q`` maps to the
+    ``j``-th posting of the concatenated per-term prefixes — located with a
+    searchsorted over the prefix cumsum, i.e. pure gathers, no sort.  Lanes
+    past the query's total are dead.  This is what lets the fused scatter
+    touch O(actual postings) lanes instead of O(L · max_df) padding.
+
+    Returns (pos, live): (Q, qcap) global posting positions + live mask.
+    """
+    cum = jnp.cumsum(dfs, axis=1)                            # (Q, L)
+    start = cum - dfs
+    j = jnp.arange(qcap, dtype=jnp.int32)
+    term = jax.vmap(lambda c: jnp.searchsorted(c, j, side="right"))(cum)
+    term = jnp.minimum(term, dfs.shape[1] - 1).astype(jnp.int32)
+    within = j[None, :] - jnp.take_along_axis(start, term, axis=1)
+    pos = jnp.take_along_axis(base, term, axis=1) + within
+    live = j[None, :] < cum[:, -1:]
+    return pos, live
+
+
+def topk_from_tiles(acc_tiles: jnp.ndarray, k: int,
+                    n_docs: int | None = None):
+    """Hierarchical top-k over (Q, n_tiles, tile_d) accumulator tiles.
+
+    Returns (scores, doc_ids) of shape (Q, k) with doc ids global to the
+    shard.  Matches ``lax.top_k`` over the flattened (Q, n_docs) accumulator
+    exactly, including tie-breaking by lower doc id.  Pass ``n_docs`` when
+    the last tile overhangs the shard so ghost lanes can never be selected.
+    """
+    q, n_tiles, tile_d = acc_tiles.shape
+    if n_docs is not None and n_tiles * tile_d > n_docs:
+        fill = (jnp.finfo(acc_tiles.dtype).min
+                if jnp.issubdtype(acc_tiles.dtype, jnp.floating)
+                else jnp.iinfo(acc_tiles.dtype).min)
+        gid = (jnp.arange(tile_d, dtype=jnp.int32)[None, :]
+               + (jnp.arange(n_tiles, dtype=jnp.int32) * tile_d)[:, None])
+        acc_tiles = jnp.where(gid[None] < n_docs, acc_tiles, fill)
+    kt = min(k, tile_d)
+    sc_t, idx_t = jax.lax.top_k(acc_tiles, kt)            # (Q, T, kt)
+    gidx = idx_t + (jnp.arange(n_tiles, dtype=jnp.int32) * tile_d)[None, :,
+                                                                   None]
+    sc, pos = jax.lax.top_k(sc_t.reshape(q, n_tiles * kt), k)
+    ids = jnp.take_along_axis(gidx.reshape(q, n_tiles * kt), pos, axis=1)
+    return sc, ids.astype(jnp.int32)
+
+
+def tiled_topk(acc: jnp.ndarray, k: int, tile_d: int = 128):
+    """Tiled top-k over a dense (Q, n_docs) accumulator.
+
+    Pads the ragged tail tile with the dtype minimum so padding can never
+    enter the top-k (the accumulators are non-negative).
+    """
+    q, n = acc.shape
+    n_tiles = -(-n // tile_d)
+    pad = n_tiles * tile_d - n
+    if pad:
+        fill = (jnp.finfo(acc.dtype).min
+                if jnp.issubdtype(acc.dtype, jnp.floating)
+                else jnp.iinfo(acc.dtype).min)
+        acc = jnp.pad(acc, ((0, 0), (0, pad)), constant_values=fill)
+    return topk_from_tiles(acc.reshape(q, n_tiles, tile_d), k)

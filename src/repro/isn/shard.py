@@ -21,6 +21,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -80,8 +81,14 @@ def _stage0(fa, term_stats, df, terms, mask, depth=5):
 def hybrid_serve_fn(mesh, *, n_docs_shard: int, n_model: int, k_shard: int,
                     k_global: int, rho_max: int, daat_cap: int,
                     daat_bcap: int, n_blocks: int, block_size: int,
-                    t_k: float, t_time: float, forest_depth: int = 5):
-    """Builds the shard_map'ed hybrid serve step."""
+                    t_k: float, t_time: float, forest_depth: int = 5,
+                    tile_d: int = 128, backend: str | None = None):
+    """Builds the shard_map'ed hybrid serve step.
+
+    Both engines run their batched kernel-backed pipelines inside the
+    compiled program; ``backend=None`` resolves per-platform (compiled
+    Pallas on TPU, fused-jnp elsewhere) — see ``repro.isn.backend``.
+    """
 
     def serve(index: IndexShard, fa: ForestArrays, term_stats, terms, mask):
         shard = jax.tree.map(lambda a: a[0], index)   # strip stacked dim
@@ -91,11 +98,13 @@ def hybrid_serve_fn(mesh, *, n_docs_shard: int, n_model: int, k_shard: int,
         rho = jnp.clip(prho, 1024, rho_max).astype(jnp.int32)
 
         saat = saat_serve(shard, terms, mask, rho, n_docs=n_docs_shard,
-                          k=k_shard, cap=rho_max)
+                          k=k_shard, cap=rho_max, tile_d=tile_d,
+                          backend=backend)
         theta = jnp.ones((terms.shape[0],), jnp.float32)
         daat = daat_serve(shard, terms, mask, theta, n_docs=n_docs_shard,
                           n_blocks=n_blocks, block_size=block_size,
-                          k=k_shard, cap=daat_cap, bcap=daat_bcap)
+                          k=k_shard, cap=daat_cap, bcap=daat_bcap,
+                          tile_d=tile_d, backend=backend)
 
         ids = jnp.where(route_jass[:, None], saat.topk_docs, daat.topk_docs)
         sc = jnp.where(route_jass[:, None], saat.topk_scores,
@@ -118,14 +127,17 @@ def hybrid_serve_fn(mesh, *, n_docs_shard: int, n_model: int, k_shard: int,
                 P(*qspec, None) if qspec else P(None, None),
                 P(*qspec, None) if qspec else P(None, None))
     out_specs = (P(*qspec, None), P(*qspec, None), P(*qspec), P(*qspec))
-    return jax.shard_map(serve, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+    return shard_map(serve, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
 
 
 def _stacked_index_specs(cfg, n_model: int):
     """ShapeDtypeStructs for the per-shard index, stacked over "model"."""
     v, p, pb = cfg.vocab, cfg.postings_per_shard, cfg.block_entries_per_shard
     m = n_model
+    n_docs_shard = cfg.n_docs // n_model
+    nt = max(1, -(-n_docs_shard // cfg.tile_d))
+    tc = cfg.tile_cap
 
     def s(shape, dt=jnp.int32):
         return SDS((m,) + shape, dt)
@@ -136,6 +148,8 @@ def _stacked_index_specs(cfg, n_model: int):
         docs=s((p,)), score=s((p,), jnp.float32),
         bm_offsets=s((v + 1,)), bm_block_id=s((pb,)),
         bm_block_max=s((pb,), jnp.float32), bm_block_cnt=s((pb,)),
+        tile_docs=s((nt, tc)), tile_terms=s((nt, tc)),
+        tile_scores=s((nt, tc), jnp.float32), tile_imps=s((nt, tc)),
     )
 
 
@@ -144,6 +158,13 @@ def build_serve_cell(arch_id, cfg, cell, mesh, rules, CellCls):
     n_model = axes.get("model", 1)
     n_docs_shard = cfg.n_docs // n_model
     n_blocks = n_docs_shard // cfg.block_size
+    # daat_cap bounds the gather backends' per-term lane budget (memory):
+    # terms with shard df above it are TRUNCATED there, while the kernel
+    # backends' bucketed mirror always scores every posting of a matched
+    # term.  On shards where max_df can exceed this cap the two backends
+    # therefore differ on ultra-dense terms — the kernel path being the
+    # exact one; keep cap >= shard max_df wherever parity matters (the
+    # servers and tests do).
     daat_cap = min(n_docs_shard, 1 << 19)
     daat_bcap = min(n_blocks, 1 << 14)
 
@@ -152,7 +173,7 @@ def build_serve_cell(arch_id, cfg, cell, mesh, rules, CellCls):
         k_shard=min(cfg.k_max // 4, 1024), k_global=cfg.k_max,
         rho_max=cfg.rho_max, daat_cap=daat_cap, daat_bcap=daat_bcap,
         n_blocks=n_blocks, block_size=cfg.block_size,
-        t_k=1000.0, t_time=150.0)
+        t_k=1000.0, t_time=150.0, tile_d=cfg.tile_d)
 
     q = cfg.queries_per_step
     index = _stacked_index_specs(cfg, n_model)

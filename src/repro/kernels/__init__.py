@@ -1,3 +1,32 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the first-stage retrieval hot loops.
+
+Each package holds ``kernel.py`` (the Pallas program), ``ops.py`` (jit'd
+layout/dispatch wrappers — what the engines import), and ``ref.py`` (a
+pure-jnp oracle the tests hold the kernel to).
+
+Serving kernels share one **bucketed postings layout**: at index-build
+time every posting of a shard is tiled into the ``(n_tiles, tile_cap)``
+bucket of its ``tile_d``-doc tile (``IndexShard.tile_docs/terms/scores/
+imps`` — see ``repro.index.postings``), doc ids rebased tile-locally and
+buckets lane-padded.  A batched kernel then runs a (Q, n_tiles) grid: the
+tile buckets are indexed by the tile coordinate only, so the whole query
+batch reads the same shard-resident blocks zero-copy; term matching
+happens in-register and each step reduces one bucket into a
+``(1, tile_d)`` accumulator tile with a one-hot MXU matmul.
+
+* ``blockmax_score`` — DAAT/BMW exact scoring.  Per-block survival flags
+  ride in per (query, tile); pruned tiles skip their load/matmul entirely
+  via ``pl.when``, so latency tracks the *surviving* work per query.
+* ``impact_accumulate`` — SAAT/JASS accumulation.  The ρ budget arrives as
+  the per-query impact-level cut ``lstar``; compiled cost is a
+  deterministic function of the layout (the structural 200 ms guarantee).
+* ``score_histogram`` — histogram-based top-k over quantized accumulators.
+* ``flash_attention`` — attention kernels for the stage-2/LM workloads.
+
+Backend dispatch: the engines (``repro.isn.daat`` / ``repro.isn.saat``)
+select ``backend="pallas"`` (compiled, TPU), ``"interpret"`` (same kernel
+program under the Pallas interpreter — CPU tests), or ``"jnp"`` (fused
+batched gather/scatter fast path for CPU hosts) via
+``repro.isn.backend.resolve_backend``; parity across all three is enforced
+by ``tests/test_serving_pipeline.py``.
+"""

@@ -11,6 +11,16 @@ kernel's grid is budget-bounded.
 
 VMEM per step at TILE_D=128, CAP=1024: postings 8 KB + tile 512 B.  The
 survive flags ride in as an int32 vector indexed per grid step.
+
+Two entry points:
+
+* ``blockmax_score_bucketed`` — single query over per-query bucketed
+  postings (the original layout; ``ops.blockmax_score`` buckets on the fly).
+* ``blockmax_score_batched`` — a (Q, n_tiles) grid over the shard's
+  build-time bucketed mirror (``IndexShard.tile_*``): tile buckets are
+  indexed by the tile coordinate only (zero-copy across the query batch) and
+  term matching runs in-kernel, so a whole query batch is served by one
+  grid launch.
 """
 
 from __future__ import annotations
@@ -43,6 +53,90 @@ def _score_kernel(docs_ref, scores_ref, survive_ref, acc_ref, *, tile_d: int):
     @pl.when(survive_ref[0] == 0)
     def _():
         acc_ref[0, :] = jnp.zeros((tile_d,), jnp.float32)
+
+
+def _score_kernel_batched(qterms_ref, survive_b_ref, survive_t_ref,
+                          docs_ref, terms_ref, scores_ref, acc_ref, *,
+                          tile_d: int, block_size: int, bpt: int):
+    """One (query, doc-tile) grid step over the shard's bucketed mirror.
+
+    The tile buckets (docs/terms/scores) are indexed by the tile coordinate
+    only, so the same HBM blocks serve every query in the batch — the
+    bucketed shard mirror is read zero-copy.  Term matching happens
+    in-register: a lane is live iff its term is one of the query's terms AND
+    its pruning block survives.  Pruned tiles skip the load/matmul entirely
+    via ``pl.when``, which is what makes DAAT latency track the surviving
+    work per query.
+    """
+
+    @pl.when(survive_t_ref[0, 0] > 0)
+    def _():
+        local = docs_ref[0, :]                    # (CAP,) tile-local, -1 pad
+        tterm = terms_ref[0, :]                   # (CAP,) term ids, -1 pad
+        sc = scores_ref[0, :]
+        qt = qterms_ref[0, :]                     # (L,) query terms, -1 pad
+        match = jnp.any(tterm[:, None] == qt[None, :], axis=1)
+        # block-in-tile survival: bpt is tiny (tile_d/block_size), so a
+        # compare-reduce beats a vector gather on the VPU
+        blk = jnp.where(local >= 0, local, 0) // block_size
+        sb = survive_b_ref[0, 0, :]               # (bpt,) int32 flags
+        blk_oh = blk[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (1, bpt), 1)
+        blk_live = jnp.sum(jnp.where(blk_oh, sb[None, :], 0), axis=1) > 0
+        live = (local >= 0) & match & blk_live
+        v = jnp.where(live, sc, 0.0)
+        d = jnp.where(live, local, -1)
+        onehot = (d[:, None]
+                  == jax.lax.broadcasted_iota(jnp.int32, (1, tile_d), 1)
+                  ).astype(jnp.float32)
+        acc = jax.lax.dot_general(v[None, :], onehot,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        acc_ref[0, 0, :] = acc[0, :]
+
+    @pl.when(survive_t_ref[0, 0] == 0)
+    def _():
+        acc_ref[0, 0, :] = jnp.zeros((tile_d,), jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "block_size",
+                                             "interpret"))
+def blockmax_score_batched(tile_docs: jnp.ndarray, tile_terms: jnp.ndarray,
+                           tile_scores: jnp.ndarray, qterms: jnp.ndarray,
+                           survive_b: jnp.ndarray, survive_t: jnp.ndarray,
+                           *, tile_d: int, block_size: int,
+                           interpret: bool = True) -> jnp.ndarray:
+    """Batched exact scoring over the shard's bucketed postings mirror.
+
+    Args:
+      tile_docs/tile_terms/tile_scores: (n_tiles, CAP) bucketed shard mirror
+        (tile-local doc ids with -1 padding) — shared across the batch.
+      qterms: (Q, L) query term ids, -1 for masked-out slots.
+      survive_b: (Q, n_tiles, bpt) int32 per-block survival flags.
+      survive_t: (Q, n_tiles) int32 per-tile survival (any block survives).
+    Returns:
+      (Q, n_tiles, tile_d) float32 accumulator tiles.
+    """
+    n_tiles, cap = tile_docs.shape
+    q, L = qterms.shape
+    bpt = tile_d // block_size
+    kern = functools.partial(_score_kernel_batched, tile_d=tile_d,
+                             block_size=block_size, bpt=bpt)
+    return pl.pallas_call(
+        kern,
+        grid=(q, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda qi, t: (qi, 0)),
+            pl.BlockSpec((1, 1, bpt), lambda qi, t: (qi, t, 0)),
+            pl.BlockSpec((1, 1), lambda qi, t: (qi, t)),
+            pl.BlockSpec((1, cap), lambda qi, t: (t, 0)),
+            pl.BlockSpec((1, cap), lambda qi, t: (t, 0)),
+            pl.BlockSpec((1, cap), lambda qi, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tile_d), lambda qi, t: (qi, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, n_tiles, tile_d), jnp.float32),
+        interpret=interpret,
+    )(qterms, survive_b, survive_t, tile_docs, tile_terms, tile_scores)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))

@@ -1,4 +1,5 @@
-"""jit'd wrapper: flat postings + block survival -> Pallas masked scoring."""
+"""jit'd wrappers: flat postings + block survival -> Pallas masked scoring,
+and the batched shard-mirror entry point used by the serving pipeline."""
 
 from __future__ import annotations
 
@@ -7,8 +8,39 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.blockmax_score.kernel import blockmax_score_bucketed
+from repro.kernels.blockmax_score.kernel import (blockmax_score_batched,
+                                                 blockmax_score_bucketed)
 from repro.kernels.blockmax_score.ref import blockmax_score_ref
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "block_size",
+                                             "n_blocks", "interpret"))
+def blockmax_score_tiles(tile_docs: jnp.ndarray, tile_terms: jnp.ndarray,
+                         tile_scores: jnp.ndarray, qterms: jnp.ndarray,
+                         survive: jnp.ndarray, *, tile_d: int,
+                         block_size: int, n_blocks: int,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Batched masked scoring over the shard's bucketed mirror.
+
+    Args:
+      tile_docs/tile_terms/tile_scores: (n_tiles, CAP) build-time bucketed
+        shard mirror (see ``IndexShard``).
+      qterms: (Q, L) query term ids with -1 in masked-out slots.
+      survive: (Q, n_blocks) bool/int — per-query pruning-block survival.
+    Returns:
+      (Q, n_tiles, tile_d) float32 accumulator tiles; reduce with the tiled
+      top-k merge (``repro.isn.backend.topk_from_tiles``).
+    """
+    n_tiles = tile_docs.shape[0]
+    q = qterms.shape[0]
+    bpt = tile_d // block_size
+    pad = n_tiles * bpt - n_blocks
+    sb = jnp.pad(survive.astype(jnp.int32), ((0, 0), (0, pad)))
+    sb = sb.reshape(q, n_tiles, bpt)
+    st = (jnp.sum(sb, axis=2) > 0).astype(jnp.int32)
+    return blockmax_score_batched(tile_docs, tile_terms, tile_scores,
+                                  qterms, sb, st, tile_d=tile_d,
+                                  block_size=block_size, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("n_docs", "block_size", "tile_d",
@@ -63,4 +95,4 @@ def blockmax_score(docs: jnp.ndarray, scores: jnp.ndarray,
     return acc.at[d_of].add(v_of)
 
 
-__all__ = ["blockmax_score", "blockmax_score_ref"]
+__all__ = ["blockmax_score", "blockmax_score_ref", "blockmax_score_tiles"]

@@ -47,6 +47,68 @@ def _accumulate_kernel(lstar_ref, docs_ref, imps_ref, acc_ref, *, tile_d: int):
     acc_ref[0, :] = acc[0, :].astype(jnp.int32)
 
 
+def _accumulate_kernel_batched(qterms_ref, lstar_ref, docs_ref, terms_ref,
+                               imps_ref, acc_ref, *, tile_d: int):
+    """One (query, doc-tile) grid step over the shard's bucketed mirror.
+
+    The ρ budget arrives as the per-query impact-level cut ``lstar``: a lane
+    contributes iff its term is one of the query's terms AND its impact
+    reaches the cut.  The grid is (Q, n_tiles) with the tile buckets indexed
+    by the tile coordinate only — one launch serves the whole query batch
+    against a zero-copy view of the shard, and compiled cost stays a
+    deterministic function of the shard layout (the structural 200 ms
+    guarantee survives batching).
+    """
+    local = docs_ref[0, :]                        # (CAP,) tile-local, -1 pad
+    tterm = terms_ref[0, :]                       # (CAP,) term ids, -1 pad
+    imps = imps_ref[0, :]                         # (CAP,)
+    qt = qterms_ref[0, :]                         # (L,) query terms, -1 pad
+    match = jnp.any(tterm[:, None] == qt[None, :], axis=1)
+    live = (local >= 0) & match & (imps >= lstar_ref[0])
+    v = jnp.where(live, imps, 0).astype(jnp.float32)
+    d = jnp.where(live, local, -1)
+    onehot = (d[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, tile_d), 1)
+              ).astype(jnp.float32)
+    acc = jax.lax.dot_general(v[None, :], onehot,
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    acc_ref[0, 0, :] = acc[0, :].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def impact_accumulate_batched(tile_docs: jnp.ndarray, tile_terms: jnp.ndarray,
+                              tile_imps: jnp.ndarray, qterms: jnp.ndarray,
+                              lstar: jnp.ndarray, *, tile_d: int,
+                              interpret: bool = True) -> jnp.ndarray:
+    """Batched impact accumulation over the shard's bucketed mirror.
+
+    Args:
+      tile_docs/tile_terms/tile_imps: (n_tiles, CAP) build-time bucketed
+        shard mirror — shared (zero-copy) across the query batch.
+      qterms: (Q, L) query term ids, -1 in masked-out slots.
+      lstar: (Q,) int32 per-query impact-level cuts from the ρ budgets.
+    Returns:
+      (Q, n_tiles, tile_d) int32 accumulator tiles.
+    """
+    n_tiles, cap = tile_docs.shape
+    q, L = qterms.shape
+    kern = functools.partial(_accumulate_kernel_batched, tile_d=tile_d)
+    return pl.pallas_call(
+        kern,
+        grid=(q, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda qi, t: (qi, 0)),
+            pl.BlockSpec((1,), lambda qi, t: (qi,)),
+            pl.BlockSpec((1, cap), lambda qi, t: (t, 0)),
+            pl.BlockSpec((1, cap), lambda qi, t: (t, 0)),
+            pl.BlockSpec((1, cap), lambda qi, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tile_d), lambda qi, t: (qi, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, n_tiles, tile_d), jnp.int32),
+        interpret=interpret,
+    )(qterms, lstar, tile_docs, tile_terms, tile_imps)
+
+
 @functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
 def impact_accumulate_bucketed(docs_b: jnp.ndarray, imps_b: jnp.ndarray,
                                lstar: jnp.ndarray, *, tile_d: int,

@@ -1,4 +1,5 @@
-"""jit'd wrapper: flat postings -> bucketed layout -> Pallas accumulate."""
+"""jit'd wrappers: flat postings -> bucketed layout -> Pallas accumulate,
+and the batched shard-mirror entry point used by the serving pipeline."""
 
 from __future__ import annotations
 
@@ -7,8 +8,25 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.impact_accumulate.kernel import impact_accumulate_bucketed
+from repro.kernels.impact_accumulate.kernel import (impact_accumulate_batched,
+                                                    impact_accumulate_bucketed)
 from repro.kernels.impact_accumulate.ref import impact_accumulate_ref
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def impact_accumulate_tiles(tile_docs: jnp.ndarray, tile_terms: jnp.ndarray,
+                            tile_imps: jnp.ndarray, qterms: jnp.ndarray,
+                            lstar: jnp.ndarray, *, tile_d: int,
+                            interpret: bool = True) -> jnp.ndarray:
+    """Batched SAAT accumulation over the shard's bucketed mirror.
+
+    Thin dispatch onto ``impact_accumulate_batched``; exists so the engines
+    depend on the ops layer (mirroring ``blockmax_score_tiles``) rather than
+    on kernel internals.  Returns (Q, n_tiles, tile_d) int32 tiles.
+    """
+    return impact_accumulate_batched(tile_docs, tile_terms, tile_imps,
+                                     qterms, lstar.astype(jnp.int32),
+                                     tile_d=tile_d, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("n_docs", "tile_d", "cap",
@@ -62,4 +80,5 @@ def impact_accumulate(docs: jnp.ndarray, imps: jnp.ndarray,
     return acc
 
 
-__all__ = ["impact_accumulate", "impact_accumulate_ref"]
+__all__ = ["impact_accumulate", "impact_accumulate_ref",
+           "impact_accumulate_tiles"]

@@ -17,6 +17,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -306,11 +307,11 @@ def _gnn_cell(arch_id, config, cell: ShapeCell, mesh, rules) -> Cell:
                    for k in batch}
 
         def loss_sharded(params, batch):
-            return jax.shard_map(
+            return shard_map(
                 lambda p, b_: gnn.loss_fn_partitioned(p, config, b_,
                                                       flat_axes),
                 mesh=mesh, in_specs=(P(), b_specs), out_specs=P(),
-                check_vma=False)(params, batch)
+                check_rep=False)(params, batch)
 
         def train_step(params, opt, batch):
             loss, grads = jax.value_and_grad(loss_sharded)(params, batch)

@@ -26,6 +26,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.models import common
@@ -167,12 +168,12 @@ def moe_forward(p, x, cfg: MoEConfig, rules=None):
     # shard_map via involuntary full replication (tens of GB at 1M tokens)
     x = jax.lax.with_sharding_constraint(
         x, jax.sharding.NamedSharding(mesh, xspec))
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(None, None), wspec, wspec,
                   P("model", None, None) if ep else P(None, None, None),
                   xspec),
         out_specs=(xspec, P()),
-        check_vma=False,
+        check_rep=False,
     )(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
     return shared_part(y), aux

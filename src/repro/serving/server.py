@@ -2,8 +2,10 @@
 production layout): Stage-0 features+predictions → scheduler routing →
 JASS/BMW engine execution → hierarchical top-k merge → latency accounting.
 
-The engines here are the jnp serving engines over a real IndexShard; on a
-mesh the same loop runs with `repro.isn.shard.hybrid_serve_fn`.
+The engines are the batched serving pipelines over a real IndexShard
+(backend-dispatched: compiled Pallas kernels on TPU, fused-jnp elsewhere —
+see ``repro.isn.backend``); on a mesh the same loop runs with
+`repro.isn.shard.hybrid_serve_fn`.
 """
 
 from __future__ import annotations
@@ -17,6 +19,7 @@ from repro.core import features as F
 from repro.core import gbrt
 from repro.index.builder import InvertedIndex
 from repro.index.postings import shard_from_index
+from repro.isn.backend import query_lane_budget
 from repro.isn.daat import daat_serve
 from repro.isn.saat import saat_serve
 from repro.serving.latency import CostModel, over_budget, percentiles
@@ -72,6 +75,7 @@ class HybridServer:
             work_j[rows] = np.asarray(res.work)
         if len(routed.bmw_rows):
             rows = routed.bmw_rows
+            qcap = query_lane_budget(self.index.df, terms[rows], mask[rows])
             res = daat_serve(self.shard, jnp.asarray(terms[rows]),
                              jnp.asarray(mask[rows]),
                              jnp.ones(len(rows), jnp.float32),
@@ -79,22 +83,23 @@ class HybridServer:
                              n_blocks=self.spec.n_blocks,
                              block_size=self.spec.block_size, k=self.k_serve,
                              cap=self.spec.max_df,
-                             bcap=self.spec.max_blocks_per_term)
+                             bcap=self.spec.max_blocks_per_term, qcap=qcap)
             topk[rows] = np.asarray(res.topk_docs)
             t_bmw[rows] = self.cost.daat_time(np.asarray(res.work),
                                               np.asarray(res.blocks))
 
         def jass_time(rows, rho):
-            # deterministic: budget resolves to level cut; time from work
+            # deterministic: budget resolves to level cut; time from work —
+            # one vectorized reduction over the routed rows
             lc = self.index.level_cum[terms[rows]]
             lc = lc * (mask[rows] > 0)[:, :, None]
-            total = lc.sum(axis=1)
-            out = np.zeros(len(rows))
-            for i in range(len(rows)):
-                ok = total[i] <= rho[i]
-                w = total[i][np.argmax(ok)] if ok.any() else 0
-                out[i] = self.cost.saat_time(w)
-            return out
+            total = lc.sum(axis=1)                       # (R, n_levels)
+            ok = total <= np.asarray(rho).reshape(-1, 1)
+            lstar = np.argmax(ok, axis=1)
+            w = np.where(ok.any(axis=1),
+                         np.take_along_axis(total, lstar[:, None],
+                                            axis=1)[:, 0], 0)
+            return self.cost.saat_time(w.astype(np.float64))
 
         lat = self.sched.resolve_times(routed, t_bmw, jass_time)
         stats = dict(self.sched.stats)

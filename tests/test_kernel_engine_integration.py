@@ -6,9 +6,10 @@ import numpy as np
 import pytest
 
 from repro.index.postings import shard_from_index
-from repro.kernels.impact_accumulate.ops import impact_accumulate
+from repro.kernels.impact_accumulate.ops import (impact_accumulate,
+                                                 impact_accumulate_tiles)
 from repro.kernels.score_histogram.ops import histogram_topk
-from repro.isn.saat import _accumulate, _level_cut
+from repro.isn.saat import _accumulate, _level_cut, _level_cut_batched
 
 
 def test_kernel_reproduces_engine_accumulator(small_collection):
@@ -18,7 +19,7 @@ def test_kernel_reproduces_engine_accumulator(small_collection):
     for q in range(4):
         terms = jnp.asarray(ql.terms[q])
         mask = jnp.asarray(ql.mask[q])
-        prefix, work = _level_cut(shard, terms, mask, jnp.asarray(rho))
+        prefix, work, _ = _level_cut(shard, terms, mask, jnp.asarray(rho))
         prefix = jnp.minimum(prefix, rho)
         # engine accumulator (jnp path)
         acc_engine = _accumulate(shard, terms, prefix, spec.n_docs, rho)
@@ -39,12 +40,34 @@ def test_kernel_reproduces_engine_accumulator(small_collection):
                                       np.asarray(acc_kernel))
 
 
+def test_batched_kernel_reproduces_engine_accumulator(small_collection):
+    """The (Q, n_tiles) batched kernel over the build-time bucketed mirror
+    must reproduce the per-query gather+scatter accumulator bit-exactly."""
+    corpus, index, ql = small_collection
+    shard, spec = shard_from_index(index)
+    rho, q = 2048, 4
+    terms = jnp.asarray(ql.terms[:q])
+    mask = jnp.asarray(ql.mask[:q])
+    prefix, _, lstar = _level_cut_batched(shard, terms, mask,
+                                          jnp.full(q, rho))
+    acc_tiles = impact_accumulate_tiles(
+        shard.tile_docs, shard.tile_terms, shard.tile_imps,
+        jnp.where(mask > 0, terms, -1).astype(jnp.int32), lstar,
+        tile_d=spec.tile_d, interpret=True)
+    acc_kernel = np.asarray(acc_tiles).reshape(q, -1)[:, :spec.n_docs]
+    for i in range(q):
+        acc_engine = _accumulate(shard, terms[i],
+                                 jnp.minimum(prefix[i], rho), spec.n_docs,
+                                 rho)
+        np.testing.assert_array_equal(np.asarray(acc_engine), acc_kernel[i])
+
+
 def test_histogram_topk_on_engine_scores(small_collection):
     corpus, index, ql = small_collection
     shard, spec = shard_from_index(index)
     terms = jnp.asarray(ql.terms[0])
     mask = jnp.asarray(ql.mask[0])
-    prefix, _ = _level_cut(shard, terms, mask, jnp.asarray(4096))
+    prefix, _, _ = _level_cut(shard, terms, mask, jnp.asarray(4096))
     acc = _accumulate(shard, terms, jnp.minimum(prefix, 4096), spec.n_docs,
                       4096)
     import jax

@@ -3,10 +3,20 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:            # deterministic metric tests still run
+    HAS_HYPOTHESIS = False
 
 from repro.core import reference as R
+
+
+def _skip_property_test():
+    pytest.skip("hypothesis not installed "
+                "(pip install -r requirements-dev.txt)")
 
 
 def _perm_lists(rng, n, depth):
@@ -32,32 +42,38 @@ def test_med_disjoint_lists_maximal():
     assert abs(med - w.sum()) < 1e-5
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(0, 2**31 - 1), st.integers(5, 40))
-def test_med_monotone_in_cutoff(seed, depth):
-    """MED at cutoff k is non-increasing in k (more candidates never hurt)."""
-    rng = np.random.RandomState(seed)
-    ref = jnp.asarray(rng.permutation(1000)[:depth])
-    ranks = jnp.asarray(rng.randint(0, 500, depth))
-    cutoffs = jnp.asarray([1, 10, 50, 100, 200, 500])
-    med = np.asarray(R.med_rbp_at_cutoffs(ref, ranks, cutoffs, 0.95))
-    assert np.all(np.diff(med) <= 1e-7)
+if HAS_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(5, 40))
+    def test_med_monotone_in_cutoff(seed, depth):
+        """MED at cutoff k is non-increasing in k."""
+        rng = np.random.RandomState(seed)
+        ref = jnp.asarray(rng.permutation(1000)[:depth])
+        ranks = jnp.asarray(rng.randint(0, 500, depth))
+        cutoffs = jnp.asarray([1, 10, 50, 100, 200, 500])
+        med = np.asarray(R.med_rbp_at_cutoffs(ref, ranks, cutoffs, 0.95))
+        assert np.all(np.diff(med) <= 1e-7)
 
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_oracle_cutoff_achieves_eps(seed):
+        rng = np.random.RandomState(seed)
+        depth = 30
+        ref = jnp.asarray(rng.permutation(1000)[:depth])
+        ranks = jnp.asarray(rng.randint(0, 256, depth))
+        cutoffs = jnp.asarray([1, 2, 4, 8, 16, 32, 64, 128, 256, 512])
+        eps = 0.01
+        k = int(R.oracle_cutoff(ref, ranks, cutoffs, 0.95, eps))
+        med_at_k = float(R.med_rbp_at_cutoffs(ref, ranks, jnp.asarray([k]),
+                                              0.95)[0])
+        # either eps is met, or k is the largest cutoff (unreachable)
+        assert med_at_k <= eps + 1e-6 or k == 512
+else:
+    def test_med_monotone_in_cutoff():
+        _skip_property_test()
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_oracle_cutoff_achieves_eps(seed):
-    rng = np.random.RandomState(seed)
-    depth = 30
-    ref = jnp.asarray(rng.permutation(1000)[:depth])
-    ranks = jnp.asarray(rng.randint(0, 256, depth))
-    cutoffs = jnp.asarray([1, 2, 4, 8, 16, 32, 64, 128, 256, 512])
-    eps = 0.01
-    k = int(R.oracle_cutoff(ref, ranks, cutoffs, 0.95, eps))
-    med_at_k = float(R.med_rbp_at_cutoffs(ref, ranks, jnp.asarray([k]),
-                                          0.95)[0])
-    # either eps is met, or k is the largest cutoff (unreachable target)
-    assert med_at_k <= eps + 1e-6 or k == 512
+    def test_oracle_cutoff_achieves_eps():
+        _skip_property_test()
 
 
 def test_rbo_identical_is_one():
@@ -71,13 +87,17 @@ def test_rbo_disjoint_is_zero():
     assert float(R.rbo(a, b, 0.9)) < 1e-6
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_rbo_symmetric(seed):
-    rng = np.random.RandomState(seed)
-    a = jnp.asarray(rng.permutation(100)[:20])
-    b = jnp.asarray(rng.permutation(100)[:20])
-    assert abs(float(R.rbo(a, b, 0.9)) - float(R.rbo(b, a, 0.9))) < 1e-5
+if HAS_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_rbo_symmetric(seed):
+        rng = np.random.RandomState(seed)
+        a = jnp.asarray(rng.permutation(100)[:20])
+        b = jnp.asarray(rng.permutation(100)[:20])
+        assert abs(float(R.rbo(a, b, 0.9)) - float(R.rbo(b, a, 0.9))) < 1e-5
+else:
+    def test_rbo_symmetric():
+        _skip_property_test()
 
 
 def test_overlap_padding_aware():
