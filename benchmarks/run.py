@@ -3,13 +3,12 @@
 ``PYTHONPATH=src python -m benchmarks.run [--queries N] [--quick]``
 
 Prints ``name,us_per_call,derived``-style CSV blocks per table and writes
-the raw results to results/bench_*.json for EXPERIMENTS.md.
+the raw results to results/BENCH_*.json for EXPERIMENTS.md.
 """
 
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -23,9 +22,8 @@ def _section(title):
 
 
 def _save(name, res):
-    os.makedirs("results", exist_ok=True)
-    with open(f"results/bench_{name}.json", "w") as f:
-        json.dump(res, f, indent=2, default=float)
+    from benchmarks.common import write_bench_artifact
+    write_bench_artifact(name, res)
 
 
 def main() -> None:
@@ -56,6 +54,11 @@ def main() -> None:
     print(bench_engines.render_serving(sr))
     print(f"artifact: {sr['artifact']}")
 
+    _section("Cascade throughput (batched pipeline vs per-query loop)")
+    cr = bench_hybrid.run_cascade()
+    print(bench_hybrid.render_cascade(cr))
+    print(f"artifact: {cr['artifact']}")
+
     _section(f"Loading experiment ({args.queries} queries)")
     exp = load_experiment(args.queries)
     print(f"queries kept: {int(exp.labels.keep.sum())}/{args.queries} "
@@ -64,7 +67,9 @@ def main() -> None:
     _section("Fig 3: engine latency distributions")
     er = bench_engines.run(exp)
     print(bench_engines.render(er))
-    _save("engines", {"table": er["table"]})
+    # "engines" is the serving-throughput artifact written above — the
+    # Fig-3 latency table gets its own name so neither clobbers the other
+    _save("engine_latency", {"table": er["table"]})
 
     _section("Table 1: tail-latency query overlap")
     tr = bench_tail_overlap.run(er)

@@ -18,8 +18,9 @@ from repro.core import features as F, gbrt
 from repro.core.labels import LabelConfig, generate_labels
 from repro.index.builder import build_index
 from repro.index.corpus import CorpusParams, build_corpus, build_queries
+from repro.ltr.ranker import ltr_training_set, train_ltr
+from repro.serving.pipeline import CascadePipeline
 from repro.serving.scheduler import SchedulerConfig
-from repro.serving.server import HybridServer
 
 
 def main():
@@ -49,23 +50,33 @@ def main():
                                 gbrt.GBRTParams(n_trees=32, depth=4,
                                                 loss="quantile", tau=tau))
 
-    print("4) hybrid serving under a latency budget")
+    print("4) Stage-2 LTR model from the reference lists")
+    train_rows = np.flatnonzero(labels.keep)[:128]
+    lf, lg = ltr_training_set(index, corpus, ql, labels.ref_lists, train_rows)
+    ltr = train_ltr(lf, lg, n_trees=32)
+
+    print("5) full-cascade serving under a latency budget")
     budget = float(np.percentile(labels.t_bmw, 90))
-    server = HybridServer(index, models,
-                          SchedulerConfig(algorithm=2, budget=budget,
-                                          t_time=budget * 0.6,
-                                          rho_max=1 << 14,
-                                          t_k=float(np.median(
-                                              labels.oracle_k))))
-    res = server.serve(ql.terms, ql.mask)
+    pipe = CascadePipeline(index, models,
+                           SchedulerConfig(algorithm=2, budget=budget,
+                                           t_time=budget * 0.6,
+                                           rho_max=1 << 14,
+                                           t_k=float(np.median(
+                                               labels.oracle_k))),
+                           corpus=corpus, ltr=ltr)
+    res = pipe.serve(ql.terms, ql.mask, ql.topic)
     s = res.stats
     print(f"   routed jass={s['jass']} bmw={s['bmw']} hedged={s['hedged']}")
-    print(f"   latency p50={s['p50']:.1f} p99={s['p99']:.1f} "
+    for name, p in s["stages"].items():
+        print(f"   {name} p50={p['p50']:.2f} p99={p['p99']:.2f}")
+    print(f"   cascade latency p50={s['p50']:.1f} p99={s['p99']:.1f} "
           f"max={s['max']:.1f} (budget {budget:.1f})")
     print(f"   over budget: {s['over_budget']} queries "
           f"({s['over_budget_pct']:.3f}%)")
     print(f"   vs fixed exhaustive BMW over budget: "
           f"{100 * np.mean(labels.t_bmw > budget):.1f}%")
+    print(f"   final top-{res.final.shape[1]} lists from "
+          f"{res.candidates_used.mean():.0f} candidates/query")
 
 
 if __name__ == "__main__":

@@ -93,3 +93,48 @@ def predict(model: GBRTModel, x: jnp.ndarray) -> jnp.ndarray:
     xb = T.apply_bins(jnp.asarray(x, jnp.float32), model.bin_edges)
     return model.base + T.forest_predict_binned(
         model.forest, xb, model.params.depth, reduce="sum")
+
+
+# ---------------------------------------------------------------------------
+# fused multi-model inference (Stage-0 serves k, ρ and t in one call)
+# ---------------------------------------------------------------------------
+
+class StackedGBRT(NamedTuple):
+    """M same-shaped GBRT ensembles stacked along a leading model axis so
+    inference for all of them is one fused device call (the per-query
+    Stage-0 budget in the paper is < 0.75 ms for *all three* predictions)."""
+    forest: T.Forest           # every leaf carries a leading (M,) axis
+    base: jnp.ndarray          # (M,)
+    bin_edges: jnp.ndarray     # (M, F, n_bins - 1)
+
+
+def stack_models(models: list[GBRTModel]) -> tuple[StackedGBRT, int]:
+    """Stack models sharing (n_trees, depth, n_bins); loss/τ may differ.
+
+    Returns (stacked, depth); raises ValueError on shape mismatch so callers
+    can fall back to per-model prediction.
+    """
+    shapes = {(m.params.n_trees, m.params.depth, m.params.n_bins)
+              for m in models}
+    if len(shapes) != 1:
+        raise ValueError(f"cannot stack GBRTs with mixed shapes: {shapes}")
+    feats = {m.bin_edges.shape for m in models}
+    if len(feats) != 1:
+        raise ValueError(f"cannot stack GBRTs with mixed feature sets: {feats}")
+    forest = T.Forest(*(jnp.stack([getattr(m.forest, f) for m in models])
+                        for f in T.Forest._fields))
+    base = jnp.stack([jnp.asarray(m.base, jnp.float32).reshape(())
+                      for m in models])
+    edges = jnp.stack([m.bin_edges for m in models])
+    (_, depth, _), = shapes
+    return StackedGBRT(forest, base, edges), depth
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def predict_stacked(stacked: StackedGBRT, x: jnp.ndarray,
+                    depth: int) -> jnp.ndarray:
+    """(M, Q) predictions for all stacked models in one fused call."""
+    x = jnp.asarray(x, jnp.float32)
+    xb = jax.vmap(lambda e: T.apply_bins(x, e))(stacked.bin_edges)
+    preds = T.forest_predict_stacked(stacked.forest, xb, depth)
+    return stacked.base[:, None] + preds

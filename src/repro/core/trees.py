@@ -180,3 +180,19 @@ def forest_predict_binned(forest: Forest, xb: jnp.ndarray, depth: int,
             forest.feat, forest.thresh, forest.leaf)
         return jnp.sum(leaves) if reduce == "sum" else jnp.mean(leaves)
     return jax.vmap(per_row)(xb)
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "reduce"))
+def forest_predict_stacked(forests: Forest, xb: jnp.ndarray, depth: int,
+                           reduce: str = "sum") -> jnp.ndarray:
+    """Predict M stacked ensembles in one fused on-device call.
+
+    ``forests`` is a Forest whose arrays carry a leading (M,) model axis
+    (same tree count and depth per model — stack with ``jnp.stack``);
+    ``xb`` is (M, n, F) pre-binned features, one binning per model.  The
+    per-model math is the exact gather chain of ``forest_predict_binned``
+    vmapped over the model axis, so the Stage-0 k/ρ/t predictors run as one
+    array program instead of three dispatches.  Returns (M, n).
+    """
+    return jax.vmap(
+        lambda f, b: forest_predict_binned(f, b, depth, reduce))(forests, xb)

@@ -20,6 +20,10 @@ happens in-register and each step reduces one bucket into a
 * ``impact_accumulate`` — SAAT/JASS accumulation.  The ρ budget arrives as
   the per-query impact-level cut ``lstar``; compiled cost is a
   deterministic function of the layout (the structural 200 ms guarantee).
+* ``qd_feature_gather`` — Stage-2 LTR featurization: per-(query,
+  candidate) term-score aggregates {Σ score, max, match count} over the
+  batch's compacted posting lanes, reduced with the same one-hot MXU
+  matmul idiom (grid (Q, lane-tiles), accumulating output block).
 * ``score_histogram`` — histogram-based top-k over quantized accumulators.
 * ``flash_attention`` — attention kernels for the stage-2/LM workloads.
 

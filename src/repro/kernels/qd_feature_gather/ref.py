@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the Stage-2 qd-feature gather kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qd_feature_gather_ref(lane_docs: jnp.ndarray, lane_scores: jnp.ndarray,
+                          cand: jnp.ndarray):
+    """Per-(query, candidate) term-score aggregates, dense reference.
+
+    Args:
+      lane_docs: (Q, P) int32 doc ids, -1 = dead lane.
+      lane_scores: (Q, P) float32 exact scores.
+      cand: (Q, C) int32 candidate doc ids, -1 = padding.
+    Returns:
+      (bm25, mx, cnt): (Q, C) Σ score / max score / match count.
+    """
+    match = ((lane_docs[:, :, None] == cand[:, None, :])
+             & (lane_docs >= 0)[:, :, None] & (cand >= 0)[:, None, :])
+    sc = jnp.where(match, lane_scores[:, :, None], 0.0)
+    return (jnp.sum(sc, axis=1), jnp.max(sc, axis=1),
+            jnp.sum(match, axis=1).astype(jnp.int32))

@@ -1,6 +1,7 @@
 """Serving entry point: build a synthetic collection, train the Stage-0
-predictors, and serve a query trace through the hybrid first stage with
-tail-latency accounting.
+predictors and the Stage-2 LTR model, and serve a query trace through the
+**full cascade pipeline** (Stage-0 → hybrid routing → Stage-1 engines →
+Stage-2 re-rank) with end-to-end tail-latency accounting.
 
 ``python -m repro.launch.serve --queries 2000 --budget 200``
 """
@@ -17,6 +18,9 @@ def main():
     ap.add_argument("--queries", type=int, default=2000)
     ap.add_argument("--budget", type=float, default=200.0)
     ap.add_argument("--algorithm", type=int, default=2)
+    ap.add_argument("--t-final", type=int, default=10)
+    ap.add_argument("--no-ltr", action="store_true",
+                    help="serve the first stage only (no Stage-2 re-rank)")
     args = ap.parse_args()
 
     import numpy as np
@@ -25,8 +29,9 @@ def main():
     from repro.core.labels import LabelConfig, generate_labels
     from repro.index.builder import build_index
     from repro.index.corpus import CorpusParams, build_corpus, build_queries
+    from repro.ltr.ranker import ltr_training_set, train_ltr
+    from repro.serving.pipeline import CascadePipeline
     from repro.serving.scheduler import SchedulerConfig
-    from repro.serving.server import HybridServer
     import jax.numpy as jnp
 
     print("[serve] building collection + labels ...")
@@ -49,18 +54,33 @@ def main():
             x, np.log1p(y.astype(np.float32)),
             gbrt.GBRTParams(n_trees=48, depth=5, loss="quantile", tau=tau))
 
+    ltr = None
+    if not args.no_ltr:
+        print("[serve] training Stage-2 LTR model ...")
+        train_rows = np.flatnonzero(labels.keep)[:256]
+        lf, lg = ltr_training_set(index, corpus, ql, labels.ref_lists,
+                                  train_rows)
+        ltr = train_ltr(lf, lg)
+
     cfg = SchedulerConfig(algorithm=args.algorithm, budget=args.budget,
                           rho_max=1 << 18)
-    server = HybridServer(index, models, cfg)
-    print("[serve] serving trace ...")
-    res = server.serve(ql.terms, ql.mask)
+    pipe = CascadePipeline(index, models, cfg, corpus=corpus, ltr=ltr,
+                           t_final=args.t_final)
+    print("[serve] serving trace through the cascade ...")
+    res = pipe.serve(ql.terms, ql.mask, ql.topic)
     s = res.stats
     print(f"[serve] routed: jass={s['jass']} bmw={s['bmw']} "
           f"hedged={s['hedged']} late={s['late_hedged']}")
-    print(f"[serve] latency ms: p50={s['p50']:.1f} p99={s['p99']:.1f} "
+    for name, p in s.get("stages", {}).items():
+        print(f"[serve] {name:7s} ms: p50={p['p50']:.2f} p99={p['p99']:.2f} "
+              f"max={p['max']:.2f}")
+    print(f"[serve] cascade ms: p50={s['p50']:.1f} p99={s['p99']:.1f} "
           f"p99.99={s['p99.99']:.1f} max={s['max']:.1f}")
     print(f"[serve] over budget ({args.budget:.0f}): {s['over_budget']} "
           f"({s['over_budget_pct']:.4f}%)")
+    if res.final is not None:
+        print(f"[serve] stage-2: mean candidates={res.candidates_used.mean():.1f} "
+              f"final depth={res.final.shape[1]}")
 
 
 if __name__ == "__main__":

@@ -5,15 +5,36 @@ stage must pass on; this module is the consumer: query-document features
 (BM25 decomposition + topical affinity) and a GBRT point-wise LTR model
 trained from reference-list labels — plus the cascade driver that chains
 stage-0 prediction → candidate generation → re-ranking.
+
+Two implementations of the feature extractor coexist:
+
+* ``qd_features`` — the original per-query numpy loop (one CSR
+  ``searchsorted`` per query term).  Kept as the parity oracle for
+  ``rerank_loop``.
+* ``qd_features_batched`` — the serving path: one array program over the
+  whole ``(Q, C)`` candidate grid.  The per-term exact scores come from a
+  branch-free CSR binary search over *all* query terms at once (``"jnp"``
+  backend — the portable CPU fast path, bit-identical to the loop) or from
+  the ``qd_feature_gather`` Pallas kernel over compacted posting lanes
+  (``"pallas"`` / ``"interpret"`` backends — the TPU path, same backend
+  switch as the Stage-1 engines).  Transcendentals are precomputed
+  host-side into gather tables (``Stage2Arrays.log1p_doclen``) so the
+  batched features match the numpy loop bit-for-bit on the jnp backend.
 """
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
+from typing import NamedTuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gbrt
+from repro.isn.backend import compact_lanes
+from repro.kernels.qd_feature_gather.ops import qd_feature_gather
 
 N_LTR_FEATURES = 8
 
@@ -30,10 +51,12 @@ def qd_features(index, corpus, terms_row, mask_row, topic, doc_ids):
     mx = np.zeros(len(doc_ids), np.float32)
     for tt in t:
         lo, hi = index.offsets[tt], index.offsets[tt + 1]
+        if hi <= lo:
+            continue                      # term absent from this shard
         seg = index.docs[lo:hi]
         pos = np.searchsorted(seg, doc_ids)
-        pos = np.minimum(pos, max(hi - lo - 1, 0))
-        hit = seg[pos] == doc_ids if hi > lo else np.zeros(len(doc_ids), bool)
+        pos = np.minimum(pos, hi - lo - 1)
+        hit = seg[pos] == doc_ids
         sc = np.where(hit, index.bm25_score[lo:hi][pos], 0.0)
         bm25 += sc
         mx = np.maximum(mx, sc)
@@ -46,6 +69,144 @@ def qd_features(index, corpus, terms_row, mask_row, topic, doc_ids):
     feats[:, 6] = corpus.doc_topics[doc_ids].max(axis=1)
     feats[:, 7] = len(t)
     return feats
+
+
+# ---------------------------------------------------------------------------
+# batched (Q, C) candidate-grid featurization
+# ---------------------------------------------------------------------------
+
+class Stage2Arrays(NamedTuple):
+    """Device-resident inputs of the batched Stage-2 featurizer."""
+    offsets: jnp.ndarray       # (V+1,) int32 — doc-ordered CSR
+    docs: jnp.ndarray          # (P,) int32, doc-sorted within each term
+    score: jnp.ndarray         # (P,) float32 exact BM25
+    doclen: jnp.ndarray        # (N,) float32
+    log1p_doclen: jnp.ndarray  # (N,) float32 — np.log1p table (exactness)
+    doc_topics: jnp.ndarray    # (N, K) float32
+    doc_topics_max: jnp.ndarray  # (N,) float32 — row max, precomputed
+
+
+def stage2_arrays(index, corpus) -> Stage2Arrays:
+    """Materialize the Stage-2 gather tables from the index + corpus."""
+    dl32 = index.doclen.astype(np.float32)
+    return Stage2Arrays(
+        offsets=jnp.asarray(index.offsets, jnp.int32),
+        docs=jnp.asarray(index.docs, jnp.int32),
+        score=jnp.asarray(index.bm25_score, jnp.float32),
+        doclen=jnp.asarray(dl32),
+        log1p_doclen=jnp.asarray(np.log1p(dl32)),
+        doc_topics=jnp.asarray(corpus.doc_topics, jnp.float32),
+        doc_topics_max=jnp.asarray(corpus.doc_topics.max(axis=1)
+                                   .astype(np.float32)),
+    )
+
+
+def csr_search_iters(max_df: int) -> int:
+    """Bisection steps that exhaust a posting range of ``max_df`` entries."""
+    return max(1, int(np.ceil(np.log2(max(max_df, 2)))) + 1)
+
+
+def _csr_term_stats(offsets, docs, score, terms, tmask, cand, cmask,
+                    n_iter: int):
+    """(Σ score, max score, match count) per (query, candidate) via a
+    branch-free CSR binary search over all query terms at once.
+
+    Each of the ``n_iter`` unrolled steps halves every (q, l, c) search
+    range with pure gathers — no Python loop over queries or terms.  The
+    final per-term reduction is unrolled left-to-right over the (≤ L) term
+    slots, matching the numpy loop's accumulation order bit-for-bit.
+    """
+    q, l_dim = terms.shape
+    c_dim = cand.shape[1]
+    p = docs.shape[0]
+    lo = offsets[terms][:, :, None]                    # (Q, L, 1)
+    hi = offsets[terms + 1][:, :, None]
+    tgt = cand[:, None, :]                             # (Q, 1, C)
+    lo_b = jnp.broadcast_to(lo, (q, l_dim, c_dim))
+    hi_b = jnp.broadcast_to(hi, (q, l_dim, c_dim))
+    for _ in range(n_iter):
+        active = lo_b < hi_b
+        mid = (lo_b + hi_b) // 2
+        v = docs[jnp.minimum(mid, p - 1)]
+        go_right = (v < tgt) & active
+        lo_b = jnp.where(go_right, mid + 1, lo_b)
+        hi_b = jnp.where(active & ~go_right, mid, hi_b)
+    pos = jnp.minimum(lo_b, p - 1)
+    hit = ((lo_b < hi) & (docs[pos] == tgt)
+           & tmask[:, :, None] & cmask[:, None, :])
+    sc = jnp.where(hit, score[pos], 0.0)               # (Q, L, C)
+    # left-to-right over term slots: dead slots add an exact 0.0
+    bm25, mx, nm = sc[:, 0], sc[:, 0], hit[:, 0].astype(jnp.float32)
+    for l in range(1, l_dim):
+        bm25 = bm25 + sc[:, l]
+        mx = jnp.maximum(mx, sc[:, l])
+        nm = nm + hit[:, l].astype(jnp.float32)
+    return bm25, mx, nm
+
+
+def _lane_term_stats(offsets, docs, score, terms, tmask, cand, qcap: int,
+                     p_tile: int, interpret: bool):
+    """Kernel-backed aggregates: compact the batch's ragged per-term posting
+    ranges into (Q, qcap) dense lanes, then one ``qd_feature_gather``
+    launch over the candidate grid."""
+    base = offsets[terms]                              # (Q, L)
+    dfs = (offsets[terms + 1] - base) * tmask.astype(jnp.int32)
+    pos, live = compact_lanes(base, dfs.astype(jnp.int32), qcap)
+    pos = jnp.minimum(pos, docs.shape[0] - 1)
+    lane_docs = jnp.where(live, docs[pos], -1)
+    lane_scores = jnp.where(live, score[pos], 0.0)
+    bm25, mx, cnt = qd_feature_gather(lane_docs, lane_scores, cand,
+                                      p_tile=p_tile, interpret=interpret)
+    return bm25, mx, cnt.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iter", "backend", "qcap",
+                                             "p_tile"))
+def qd_features_batched(arrs: Stage2Arrays, terms: jnp.ndarray,
+                        mask: jnp.ndarray, topics: jnp.ndarray,
+                        cand: jnp.ndarray, *, n_iter: int,
+                        backend: str = "jnp", qcap: int | None = None,
+                        p_tile: int = 512) -> jnp.ndarray:
+    """LTR features for the whole (Q, C) candidate grid in one call.
+
+    Args:
+      arrs: ``stage2_arrays`` gather tables.
+      terms/mask: (Q, L) padded query terms.
+      topics: (Q,) query topic ids.
+      cand: (Q, C) candidate doc ids, -1 padding (padded rows yield garbage
+        features — mask downstream, as ``rerank_batched`` does).
+      n_iter: static bisection depth (``csr_search_iters(max_df)``).
+      backend: "jnp" (CSR binary search — bit-identical to the numpy loop)
+        or "interpret"/"pallas" (``qd_feature_gather`` kernel over compacted
+        lanes; ``qcap`` must then bound the batch's per-query postings).
+    Returns:
+      (Q, C, 8) float32 feature grid.
+    """
+    tmask = mask > 0
+    cmask = cand >= 0
+    c_safe = jnp.maximum(cand, 0)
+    if backend == "jnp":
+        bm25, mx, nm = _csr_term_stats(arrs.offsets, arrs.docs, arrs.score,
+                                       terms, tmask, cand, cmask, n_iter)
+    else:
+        if qcap is None:
+            raise ValueError("kernel backends need a static qcap lane budget")
+        bm25, mx, nm = _lane_term_stats(arrs.offsets, arrs.docs, arrs.score,
+                                        terms, tmask, cand, qcap, p_tile,
+                                        backend == "interpret")
+    dl = arrs.doclen[c_safe]                           # (Q, C)
+    n_terms = jnp.sum(tmask.astype(jnp.float32), axis=1)
+    feats = jnp.stack([
+        arrs.log1p_doclen[c_safe],
+        bm25,
+        mx,
+        nm / jnp.maximum(n_terms, 1.0)[:, None],
+        bm25 / jnp.maximum(dl, 1.0),
+        arrs.doc_topics[c_safe, topics[:, None]],
+        arrs.doc_topics_max[c_safe],
+        jnp.broadcast_to(n_terms[:, None], c_safe.shape),
+    ], axis=-1)
+    return feats.astype(jnp.float32)
 
 
 @dataclass
@@ -62,3 +223,21 @@ def train_ltr(feats: np.ndarray, gains: np.ndarray,
                  gbrt.GBRTParams(n_trees=n_trees, depth=4, loss="l2",
                                  learning_rate=0.2))
     return LTRModel(m)
+
+
+def ltr_training_set(index, corpus, ql, ref_lists, rows,
+                     n_pos: int = 24, n_neg: int = 24, seed: int = 0):
+    """(features, gains) pairs from reference lists: graded gains for the
+    top reference docs, zero for random negatives."""
+    rng = np.random.RandomState(seed)
+    feats, gains = [], []
+    for q in rows:
+        pos = ref_lists[q][:n_pos]
+        neg = rng.randint(0, index.n_docs, n_neg)
+        docs = np.concatenate([pos, neg]).astype(np.int64)
+        g = np.concatenate([1.0 / np.log2(np.arange(len(pos)) + 2),
+                            np.zeros(len(neg))])
+        feats.append(qd_features(index, corpus, ql.terms[q], ql.mask[q],
+                                 ql.topic[q], docs))
+        gains.append(g)
+    return np.concatenate(feats), np.concatenate(gains).astype(np.float32)

@@ -14,7 +14,9 @@ the dry-run exercises on the production meshes.
 
 from __future__ import annotations
 
+import contextlib
 import math
+import threading
 from typing import Any, Callable
 
 import jax
@@ -22,6 +24,39 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 Pytree = Any
+
+# ---------------------------------------------------------------------------
+# abstract-mesh compat (jax 0.4.37)
+# ---------------------------------------------------------------------------
+
+# jax.sharding.{get,use}_abstract_mesh only exist on jax >= 0.5.  The
+# thread-local fallback preserves the contract the model stack relies on:
+# inside ``use_abstract_mesh(m)``, ``get_abstract_mesh()`` returns ``m`` —
+# including during jit tracing, which runs on the calling thread.
+_MESH_STACK = threading.local()
+
+
+def _fallback_get_abstract_mesh():
+    stack = getattr(_MESH_STACK, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def _fallback_use_abstract_mesh(mesh):
+    stack = getattr(_MESH_STACK, "stack", None)
+    if stack is None:
+        stack = _MESH_STACK.stack = []
+    stack.append(mesh)
+    try:
+        yield mesh
+    finally:
+        stack.pop()
+
+
+get_abstract_mesh = getattr(jax.sharding, "get_abstract_mesh",
+                            _fallback_get_abstract_mesh)
+use_abstract_mesh = getattr(jax.sharding, "use_abstract_mesh",
+                            _fallback_use_abstract_mesh)
 
 # ---------------------------------------------------------------------------
 # logical sharding
@@ -108,8 +143,8 @@ def constrain(x, names: tuple, rules: dict, mesh=None):
 
 
 def get_abstract_mesh_or_none():
-    m = jax.sharding.get_abstract_mesh()
-    return m if m and m.axis_names else None
+    m = get_abstract_mesh()
+    return m if m is not None and m and m.axis_names else None
 
 
 # ---------------------------------------------------------------------------

@@ -34,14 +34,23 @@ PS = 1e-6  # picoseconds -> microseconds
 
 @dataclass(frozen=True)
 class CostModel:
-    """Engine cost model. Units are abstract "time units" fixed by the
-    constructor used; the tail-latency study uses ``paper_scale`` (ms)."""
+    """Cascade cost model — Stage-0 prediction, Stage-1 engines and the
+    Stage-2 LTR re-ranker.  Units are abstract "time units" fixed by the
+    constructor used; the tail-latency study uses ``paper_scale`` (ms).
+
+    Stage-0 is the fused three-predictor call (``predict_us`` covers all of
+    k/ρ/t — the paper's < 0.75 ms budget).  Stage-2 is a fixed dispatch
+    cost plus a per-candidate term: featurization is O(|q| · log df) gathers
+    and GBRT inference O(trees · depth) per candidate, both linear in the
+    candidate count the Stage-0 P_k prediction admits."""
     saat_fixed_us: float = 10.0
     saat_per_posting_us: float = 10.0 * PS
     daat_fixed_us: float = 20.0
     daat_per_posting_us: float = 12.2 * PS
     daat_per_block_us: float = 0.2
     predict_us: float = 0.75  # paper §5: <0.75 ms per prediction, scaled
+    ltr_fixed_us: float = 5.0
+    ltr_per_candidate_us: float = 0.04
 
     @classmethod
     def v5e_shard(cls) -> "CostModel":
@@ -59,7 +68,8 @@ class CostModel:
         paper's 200 ms budget directly meaningful."""
         return cls(saat_fixed_us=3.0, saat_per_posting_us=6.4e-3,
                    daat_fixed_us=4.0, daat_per_posting_us=7.6e-3,
-                   daat_per_block_us=25e-3, predict_us=0.75)
+                   daat_per_block_us=25e-3, predict_us=0.75,
+                   ltr_fixed_us=1.0, ltr_per_candidate_us=15e-3)
 
     def saat_time(self, work: np.ndarray) -> np.ndarray:
         return self.saat_fixed_us + work * self.saat_per_posting_us
@@ -67,6 +77,12 @@ class CostModel:
     def daat_time(self, work: np.ndarray, blocks: np.ndarray) -> np.ndarray:
         return (self.daat_fixed_us + work * self.daat_per_posting_us
                 + blocks * self.daat_per_block_us)
+
+    def ltr_time(self, n_candidates: np.ndarray) -> np.ndarray:
+        """Stage-2 re-ranking time from the per-query candidate count."""
+        return (self.ltr_fixed_us
+                + np.asarray(n_candidates, np.float64)
+                * self.ltr_per_candidate_us)
 
 
 def percentiles(t: np.ndarray) -> dict:

@@ -1,29 +1,39 @@
-"""End-to-end first-stage serving loop (single-host demonstration of the
-production layout): Stage-0 features+predictions → scheduler routing →
-JASS/BMW engine execution → hierarchical top-k merge → latency accounting.
+"""End-to-end serving loop (single-host demonstration of the production
+layout), now a thin compatibility wrapper over the unified cascade
+pipeline (``repro.serving.pipeline``).
 
-The engines are the batched serving pipelines over a real IndexShard
-(backend-dispatched: compiled Pallas kernels on TPU, fused-jnp elsewhere —
-see ``repro.isn.backend``); on a mesh the same loop runs with
-`repro.isn.shard.hybrid_serve_fn`.
+Architecture: one query batch flows Stage-0 → routing → Stage-1 → Stage-2
+as a sequence of batched array programs —
+
+* Stage-0 features + the three GBRT predictors run as ONE fused device
+  call (stacked forests, ``gbrt.predict_stacked``);
+* the scheduler routes the batch (Algorithms 1/2 + hedging) with pure
+  array ops;
+* the routed sub-batches dispatch through the batched ``daat_serve`` /
+  ``saat_serve`` engines over a real IndexShard (backend-dispatched:
+  compiled Pallas kernels on TPU, fused-jnp elsewhere — see
+  ``repro.isn.backend``); on a mesh the same loop runs with
+  ``repro.isn.shard.hybrid_serve_fn``;
+* optionally, Stage-2 re-ranks the candidate grid in one batched LTR pass
+  (``repro.ltr.cascade.rerank_batched``).
+
+``HybridServer`` keeps the historical Stage-1-only interface (the tests'
+budget-guarantee suite drives it); new code should use
+``repro.serving.pipeline.CascadePipeline`` directly, which also threads
+per-stage latency accounting through the result so the reported tail is
+the *cascade* tail.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import features as F
-from repro.core import gbrt
 from repro.index.builder import InvertedIndex
-from repro.index.postings import shard_from_index
-from repro.isn.backend import query_lane_budget
-from repro.isn.daat import daat_serve
-from repro.isn.saat import saat_serve
-from repro.serving.latency import CostModel, over_budget, percentiles
-from repro.serving.scheduler import SchedulerConfig, StageZeroScheduler
+from repro.serving.latency import CostModel
+from repro.serving.pipeline import CascadePipeline
+from repro.serving.scheduler import SchedulerConfig
 
 
 @dataclass
@@ -34,77 +44,31 @@ class ServeResult:
 
 
 class HybridServer:
-    """One ISN worth of the paper's hybrid system, servable end to end."""
+    """One ISN worth of the paper's hybrid system, servable end to end.
+
+    Thin wrapper over ``CascadePipeline`` without a Stage-2 model: serves
+    the first stage and reports Stage-0 + Stage-1 latency, exactly as
+    before the pipeline refactor.
+    """
 
     def __init__(self, index: InvertedIndex, models: dict,
                  cfg: SchedulerConfig, k_serve: int = 128,
                  cost: CostModel | None = None):
+        self.pipeline = CascadePipeline(index, models, cfg, k_serve=k_serve,
+                                        cost=cost)
+        # historical attribute surface
         self.index = index
-        self.shard, self.spec = shard_from_index(index)
-        self.models = models          # {"k": GBRTModel, "rho": ..., "t": ...}
-        self.cost = cost or CostModel.paper_scale()
-        self.sched = StageZeroScheduler(cfg, self.cost)
+        self.shard = self.pipeline.shard
+        self.spec = self.pipeline.spec
+        self.models = models
+        self.cost = self.pipeline.cost
+        self.sched = self.pipeline.sched
         self.k_serve = k_serve
-        self.term_stats = jnp.asarray(index.term_stats)
-        self.df = jnp.asarray(index.df)
 
     def stage0(self, terms: np.ndarray, mask: np.ndarray):
-        x = np.asarray(F.extract(self.term_stats, self.df,
-                                 jnp.asarray(terms), jnp.asarray(mask)))
-        pk = np.expm1(np.asarray(gbrt.predict(self.models["k"], x)))
-        pr = np.expm1(np.asarray(gbrt.predict(self.models["rho"], x)))
-        pt = np.expm1(np.asarray(gbrt.predict(self.models["t"], x)))
-        return pk, pr, pt
+        return self.pipeline.stage0(terms, mask)
 
     def serve(self, terms: np.ndarray, mask: np.ndarray) -> ServeResult:
-        q = terms.shape[0]
-        pk, pr, pt = self.stage0(terms, mask)
-        routed = self.sched.route(pk, pr, pt)
-        topk = np.zeros((q, self.k_serve), np.int64)
-        work_j = np.zeros(q)
-        t_bmw = np.zeros(q)
-
-        if len(routed.jass_rows):
-            rows = routed.jass_rows
-            res = saat_serve(self.shard, jnp.asarray(terms[rows]),
-                             jnp.asarray(mask[rows]),
-                             jnp.asarray(routed.rho[rows]),
-                             n_docs=self.spec.n_docs, k=self.k_serve,
-                             cap=int(self.sched.cfg.rho_max))
-            topk[rows] = np.asarray(res.topk_docs)
-            work_j[rows] = np.asarray(res.work)
-        if len(routed.bmw_rows):
-            rows = routed.bmw_rows
-            qcap = query_lane_budget(self.index.df, terms[rows], mask[rows])
-            res = daat_serve(self.shard, jnp.asarray(terms[rows]),
-                             jnp.asarray(mask[rows]),
-                             jnp.ones(len(rows), jnp.float32),
-                             n_docs=self.spec.n_docs,
-                             n_blocks=self.spec.n_blocks,
-                             block_size=self.spec.block_size, k=self.k_serve,
-                             cap=self.spec.max_df,
-                             bcap=self.spec.max_blocks_per_term, qcap=qcap)
-            topk[rows] = np.asarray(res.topk_docs)
-            t_bmw[rows] = self.cost.daat_time(np.asarray(res.work),
-                                              np.asarray(res.blocks))
-
-        def jass_time(rows, rho):
-            # deterministic: budget resolves to level cut; time from work —
-            # one vectorized reduction over the routed rows
-            lc = self.index.level_cum[terms[rows]]
-            lc = lc * (mask[rows] > 0)[:, :, None]
-            total = lc.sum(axis=1)                       # (R, n_levels)
-            ok = total <= np.asarray(rho).reshape(-1, 1)
-            lstar = np.argmax(ok, axis=1)
-            w = np.where(ok.any(axis=1),
-                         np.take_along_axis(total, lstar[:, None],
-                                            axis=1)[:, 0], 0)
-            return self.cost.saat_time(w.astype(np.float64))
-
-        lat = self.sched.resolve_times(routed, t_bmw, jass_time)
-        stats = dict(self.sched.stats)
-        stats.update(percentiles(lat))
-        n_over, pct = over_budget(lat, self.sched.cfg.budget)
-        stats["over_budget"] = n_over
-        stats["over_budget_pct"] = pct
-        return ServeResult(topk=topk, latency=lat, stats=stats)
+        res = self.pipeline.serve(terms, mask)
+        return ServeResult(topk=res.topk, latency=res.latency,
+                           stats=res.stats)

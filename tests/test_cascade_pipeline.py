@@ -1,0 +1,245 @@
+"""Parity suite for the batched end-to-end cascade pipeline.
+
+The unified array-program cascade (fused Stage-0, batched Stage-2 LTR
+re-rank, per-stage latency accounting) must reproduce the per-query
+reference paths: the numpy ``qd_features`` loop, the ``rerank_loop``
+cascade driver, and the pre-refactor ``HybridServer`` serving loop.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gbrt
+from repro.ltr import cascade, ranker
+from repro.serving.latency import CostModel
+from repro.serving.pipeline import CascadePipeline
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.server import HybridServer
+
+
+@pytest.fixture(scope="module")
+def stage2(small_collection):
+    corpus, index, ql = small_collection
+    arrs = ranker.stage2_arrays(index, corpus)
+    n_iter = ranker.csr_search_iters(int(index.df.max()))
+    rng = np.random.RandomState(7)
+    c = 48
+    cand = np.sort(rng.choice(index.n_docs, (96, c)), axis=1).astype(np.int64)
+    cand[0, 40:] = -1                       # ragged padding
+    cand[3] = -1                            # fully empty candidate list
+    return corpus, index, ql, arrs, n_iter, cand
+
+
+@pytest.fixture(scope="module")
+def ltr_model(stage2):
+    corpus, index, ql, arrs, n_iter, cand = stage2
+    rng = np.random.RandomState(11)
+    feats = []
+    for q in range(24):
+        sel = cand[q][cand[q] >= 0]
+        feats.append(ranker.qd_features(index, corpus, ql.terms[q],
+                                        ql.mask[q], ql.topic[q], sel))
+    feats = np.concatenate(feats)
+    gains = (feats[:, 5] + 0.2 * feats[:, 1]
+             + 0.05 * rng.randn(len(feats))).astype(np.float32)
+    return ranker.train_ltr(feats, gains, n_trees=24)
+
+
+# ---------------------------------------------------------------------------
+# batched featurization vs the per-query numpy loop — exact
+# ---------------------------------------------------------------------------
+
+def test_qd_features_batched_matches_loop_exactly(stage2):
+    corpus, index, ql, arrs, n_iter, cand = stage2
+    feats = np.asarray(ranker.qd_features_batched(
+        arrs, jnp.asarray(ql.terms), jnp.asarray(ql.mask),
+        jnp.asarray(ql.topic), jnp.asarray(cand, jnp.int32), n_iter=n_iter))
+    assert feats.shape == (96, cand.shape[1], ranker.N_LTR_FEATURES)
+    for q in range(96):
+        sel = cand[q] >= 0
+        if not sel.any():
+            continue
+        ref = ranker.qd_features(index, corpus, ql.terms[q], ql.mask[q],
+                                 ql.topic[q], cand[q][sel])
+        np.testing.assert_array_equal(feats[q][sel], ref)
+
+
+def test_rerank_batched_matches_loop_exactly(stage2, ltr_model):
+    corpus, index, ql, arrs, n_iter, cand = stage2
+    rng = np.random.RandomState(3)
+    k_per_query = rng.randint(0, cand.shape[1] + 16, 96)
+    k_per_query[5] = 0                      # k = 0 edge case
+    a = cascade.rerank_batched(arrs, ltr_model, ql.terms, ql.mask, ql.topic,
+                               cand, k_per_query, t_final=10, n_iter=n_iter)
+    b = cascade.rerank_loop(index, corpus, ql, np.arange(96), cand,
+                            k_per_query, ltr_model, t_final=10)
+    np.testing.assert_array_equal(a.final, b.final)
+    np.testing.assert_array_equal(a.candidates_used, b.candidates_used)
+
+
+def test_rerank_batched_empty_candidates(stage2, ltr_model):
+    """A query with no candidates yields the loop's zero row and used == 0."""
+    corpus, index, ql, arrs, n_iter, cand = stage2
+    k = np.full(96, cand.shape[1])
+    res = cascade.rerank_batched(arrs, ltr_model, ql.terms, ql.mask,
+                                 ql.topic, cand, k, t_final=10, n_iter=n_iter)
+    assert res.candidates_used[3] == 0
+    np.testing.assert_array_equal(res.final[3], np.zeros(10, np.int64))
+    # short candidate lists pad the tail of the final list with -1
+    res_short = cascade.rerank_batched(arrs, ltr_model, ql.terms, ql.mask,
+                                       ql.topic, cand,
+                                       np.full(96, 4), t_final=10,
+                                       n_iter=n_iter)
+    assert np.all(res_short.final[1, 4:] == -1)
+    assert np.all(res_short.final[1, :4] >= 0)
+
+
+# ---------------------------------------------------------------------------
+# the qd_feature_gather kernel (interpret mode = the kernel program on CPU)
+# ---------------------------------------------------------------------------
+
+def test_qd_feature_gather_kernel_matches_ref():
+    from repro.kernels.qd_feature_gather.ops import (qd_feature_gather,
+                                                     qd_feature_gather_ref)
+    rng = np.random.RandomState(0)
+    q, p, c = 5, 700, 37
+    lane_docs = rng.randint(-1, 60, (q, p)).astype(np.int32)
+    lane_scores = np.where(lane_docs >= 0,
+                           rng.random_sample((q, p)) * 6, 0).astype(np.float32)
+    cand = rng.randint(-1, 60, (q, c)).astype(np.int32)
+    bm, mx, cnt = qd_feature_gather(jnp.asarray(lane_docs),
+                                    jnp.asarray(lane_scores),
+                                    jnp.asarray(cand), p_tile=256,
+                                    interpret=True)
+    bm_r, mx_r, cnt_r = qd_feature_gather_ref(jnp.asarray(lane_docs),
+                                              jnp.asarray(lane_scores),
+                                              jnp.asarray(cand))
+    np.testing.assert_allclose(np.asarray(bm), np.asarray(bm_r), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(mx), np.asarray(mx_r))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_r))
+
+
+def test_qd_features_interpret_backend_matches_jnp(stage2):
+    """The kernel-backed featurizer agrees with the CSR binary-search path
+    (float sums to tolerance; counts and gathers exactly)."""
+    corpus, index, ql, arrs, n_iter, cand = stage2
+    q = 8
+    terms = jnp.asarray(ql.terms[:q])
+    mask = jnp.asarray(ql.mask[:q])
+    topics = jnp.asarray(ql.topic[:q])
+    cd = jnp.asarray(cand[:q], jnp.int32)
+    from repro.isn.backend import query_lane_budget
+    qcap = query_lane_budget(index.df, ql.terms[:q], ql.mask[:q])
+    a = np.asarray(ranker.qd_features_batched(arrs, terms, mask, topics, cd,
+                                              n_iter=n_iter,
+                                              backend="interpret", qcap=qcap))
+    b = np.asarray(ranker.qd_features_batched(arrs, terms, mask, topics, cd,
+                                              n_iter=n_iter, backend="jnp"))
+    np.testing.assert_allclose(a, b, atol=1e-4)
+    # non-sum features are exact across backends
+    for col in (0, 2, 3, 5, 6, 7):
+        np.testing.assert_array_equal(a[..., col], b[..., col])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end pipeline vs the HybridServer serving loop
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def stage0_models(small_collection):
+    corpus, index, ql = small_collection
+    from repro.core import features as F
+    x = np.asarray(F.extract(jnp.asarray(index.term_stats),
+                             jnp.asarray(index.df),
+                             jnp.asarray(ql.terms), jnp.asarray(ql.mask)))
+    rng = np.random.RandomState(5)
+    # cheap pseudo-labels: routing only needs plausible heavy-tailed targets
+    eff_df = index.df[ql.terms] * (ql.mask > 0)
+    base = eff_df.sum(axis=1).astype(np.float64)
+    models = {}
+    for name, scale, tau in (("k", 0.05, 0.55), ("rho", 0.5, 0.45),
+                             ("t", 0.002, 0.5)):
+        y = base * scale * np.exp(rng.randn(len(base)) * 0.3)
+        models[name] = gbrt.fit(x, np.log1p(y.astype(np.float32)),
+                                gbrt.GBRTParams(n_trees=24, depth=4,
+                                                loss="quantile", tau=tau))
+    return x, models
+
+
+def test_pipeline_stage0_matches_per_model(small_collection, stage0_models):
+    corpus, index, ql = small_collection
+    x, models = stage0_models
+    cfg = SchedulerConfig(budget=100.0)
+    pipe = CascadePipeline(index, models, cfg)
+    assert pipe._stacked is not None, "same-shaped ensembles must stack"
+    pk, pr, pt = pipe.stage0(ql.terms, ql.mask)
+    for name, got in (("k", pk), ("rho", pr), ("t", pt)):
+        want = np.expm1(np.asarray(gbrt.predict(models[name],
+                                                jnp.asarray(x))))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_pipeline_matches_hybrid_server(small_collection, stage0_models):
+    """Stage-1-only pipeline == HybridServer: same top-k, same latency."""
+    corpus, index, ql = small_collection
+    x, models = stage0_models
+    cfg = SchedulerConfig(budget=100.0, rho_max=1 << 14)
+    cost = CostModel.paper_scale()
+    pipe = CascadePipeline(index, models, cfg, cost=cost)
+    server = HybridServer(index, models,
+                          SchedulerConfig(budget=100.0, rho_max=1 << 14),
+                          cost=cost)
+    a = pipe.serve(ql.terms, ql.mask)
+    b = server.serve(ql.terms, ql.mask)
+    np.testing.assert_array_equal(a.topk, b.topk)
+    np.testing.assert_allclose(a.latency, b.latency)
+    for key in ("jass", "bmw", "p50", "p99", "over_budget"):
+        assert a.stats[key] == b.stats[key]
+
+
+def test_pipeline_full_cascade_matches_loop(small_collection, stage0_models,
+                                            ltr_model):
+    """End-to-end: the pipeline's Stage-2 output equals running rerank_loop
+    over the served Stage-1 candidates, and the cascade latency decomposes
+    into the per-stage accounts."""
+    corpus, index, ql = small_collection
+    x, models = stage0_models
+    cfg = SchedulerConfig(budget=100.0, rho_max=1 << 14)
+    pipe = CascadePipeline(index, models, cfg, corpus=corpus, ltr=ltr_model,
+                           k_serve=64, t_final=10)
+    res = pipe.serve(ql.terms, ql.mask, ql.topic)
+    assert res.final is not None and res.final.shape == (96, 10)
+
+    routed = pipe.sched.route(*pipe.stage0(ql.terms, ql.mask))
+    k2 = np.minimum(routed.k, 64)
+    ref = cascade.rerank_loop(index, corpus, ql, np.arange(96),
+                              res.topk, k2, ltr_model, t_final=10)
+    np.testing.assert_array_equal(res.final, ref.final)
+    np.testing.assert_array_equal(res.candidates_used, ref.candidates_used)
+
+    total = (res.stage_latency["stage0"] + res.stage_latency["stage1"]
+             + res.stage_latency["stage2"])
+    np.testing.assert_allclose(res.latency, total)
+    assert set(res.stats["stages"]) == {"stage0", "stage1", "stage2"}
+    # stage-2 cost follows the candidate count
+    np.testing.assert_allclose(
+        res.stage_latency["stage2"],
+        pipe.cost.ltr_time(res.candidates_used))
+
+
+def test_cascade_budget_reserves_stage2(small_collection, stage0_models,
+                                        ltr_model):
+    """With an LTR model attached, the scheduler enforces Stage-0+1 against
+    budget - worst-case Stage-2 cost, so the late-hedge guarantee covers
+    the cascade; without one the budget is untouched."""
+    corpus, index, ql = small_collection
+    x, models = stage0_models
+    cfg = SchedulerConfig(budget=30.0, rho_max=1 << 14)
+    pipe = CascadePipeline(index, models, cfg, corpus=corpus, ltr=ltr_model,
+                           k_serve=64)
+    reserve = float(pipe.cost.ltr_time(np.asarray(64)))
+    assert pipe.sched.cfg.budget == pytest.approx(30.0 - reserve)
+    assert pipe.budget == 30.0                 # reporting uses the full budget
+    plain = CascadePipeline(index, models, cfg)
+    assert plain.sched.cfg.budget == 30.0
