@@ -10,8 +10,8 @@ Systems per MED target (0.05, 0.10):
   Hybrid_h      Algorithm 2 (predict k, ρ, time)
   Oracle_k/h    routing on true labels (upper bound)
 
-``run_cascade`` wall-clocks the unified batched pipeline
-(``repro.serving.pipeline.CascadePipeline``) against the per-query
+``run_cascade`` wall-clocks the unified batched cascade (a single-shard
+spec-built ``repro.serving.system.SearchSystem``) against the per-query
 baseline (per-model Stage-0 numpy round trips, ``lax.map`` engines, the
 ``rerank_loop`` Stage-2 driver), verifies the final top-t lists are
 bit-identical, and emits ``results/BENCH_cascade.json``.  Run standalone
@@ -269,8 +269,10 @@ def run_cascade(q_batch: int = 64, n_docs: int = 8192, reps: int = 10,
     from repro.index.builder import build_index
     from repro.index.corpus import CorpusParams, build_corpus, build_queries
     from repro.ltr.ranker import qd_features, train_ltr
-    from repro.serving.pipeline import CascadePipeline
     from repro.serving.scheduler import SchedulerConfig
+    from repro.serving.spec import (BackendSpec, CascadeSpec, DeploySpec,
+                                    Stage2Spec)
+    from repro.serving.system import build_system, routing_spec
     import jax.numpy as jnp
 
     rng = np.random.RandomState(seed)
@@ -310,18 +312,23 @@ def run_cascade(q_batch: int = 64, n_docs: int = 8192, reps: int = 10,
     cfg = SchedulerConfig(algorithm=2, budget=BUDGET,
                           t_k=float(np.percentile(pk0, 60)),
                           t_time=BUDGET * 0.75, rho_max=1 << 14)
-    pipe = CascadePipeline(index, models, cfg, corpus=corpus, ltr=ltr,
-                           k_serve=k_serve, t_final=t_final, cost=cost,
-                           backend=backend)
+    spec = CascadeSpec(routing=routing_spec(cfg),
+                       stage2=Stage2Spec(enabled=True, k_serve=k_serve,
+                                         t_final=t_final),
+                       backend=BackendSpec(backend=backend),
+                       deploy=DeploySpec(n_shards=1, replicas=2),
+                       name="bench_cascade")
+    pipe = build_system(spec, index, corpus=corpus, models=models, ltr=ltr,
+                        cost=cost)
 
     def run_batched():
         pipe.sched.stats = {k: 0 for k in pipe.sched.stats}
         return pipe.serve(ql.terms, ql.mask, ql.topic)
 
     def run_loop():
-        return _loop_cascade_baseline(index, corpus, ql, pipe.shard,
-                                      pipe.spec, models, ltr, cfg, cost,
-                                      k_serve, t_final)
+        return _loop_cascade_baseline(index, corpus, ql, pipe.shards[0],
+                                      pipe.shard_specs[0], models, ltr, cfg,
+                                      cost, k_serve, t_final)
 
     def timed(fn, n):
         fn()                               # untimed jit warmup

@@ -1,0 +1,155 @@
+"""Multi-shard scaling study of the spec-built ``SearchSystem``.
+
+Serves the same Q-query batch through the full cascade at ``n_shards`` ∈
+{1, 3} (same trained models, jnp backend by default) and records
+
+* **output parity** — the merged scatter-gather top-k (and final top-t)
+  must match the single-shard run exactly on the jnp backend (DAAT is
+  rank-safe per shard; SAAT resolves a *global* impact-level cut; the
+  merge tie-break is lower global doc id — see ``repro.serving.system``);
+* **modeled Stage-1 tail** — per-query latency is the max over shards
+  (scatter-gather), so sharding shrinks the tail even though total work is
+  unchanged: the paper's tail story at deployment scale;
+* wall-clock batch time per configuration and replica-pool health.
+
+Emits ``results/BENCH_system.json``.  Run standalone with
+``PYTHONPATH=src:. python benchmarks/bench_system.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import write_bench_artifact
+
+
+def run_system(q_batch: int = 64, n_docs: int = 8192,
+               shards: tuple = (1, 3), reps: int = 5, seed: int = 7,
+               backend: str | None = None) -> dict:
+    from repro.configs.cascade_presets import get_preset
+    from repro.index.corpus import CorpusParams, build_corpus, build_queries
+    from repro.isn.backend import resolve_backend
+    from repro.serving.spec import BackendSpec, DeploySpec
+    from repro.serving.system import build_system
+
+    corpus = build_corpus(CorpusParams(n_docs=n_docs,
+                                       vocab=max(n_docs // 2, 2048),
+                                       avg_doclen=96, zipf_a=1.05,
+                                       seed=seed))
+    base = dataclasses.replace(get_preset("paper_200ms"),
+                               backend=BackendSpec(backend=backend))
+    ql = build_queries(corpus, q_batch, stop_k=base.index.stop_k,
+                       seed=seed + 4)
+
+    systems = {}
+    models = ltr = index = None
+    for n in shards:
+        spec = dataclasses.replace(
+            base, deploy=dataclasses.replace(base.deploy, n_shards=n))
+        sys_n = build_system(spec, index if index is not None else corpus,
+                             corpus=corpus, models=models, ltr=ltr)
+        index = sys_n.index                      # build the index only once
+        if models is None:
+            sys_n.fit(ql, None, seed=seed)      # pseudo-labels: see fit()
+            models, ltr = sys_n.models, sys_n.ltr
+            # every configuration routes with the SAME calibrated
+            # thresholds, so the comparison isolates the deployment shape
+            base = dataclasses.replace(
+                base, routing=dataclasses.replace(
+                    base.routing, t_k=sys_n._base_cfg.t_k,
+                    t_time=sys_n._base_cfg.t_time, calibrate=False))
+            spec = dataclasses.replace(
+                base, deploy=dataclasses.replace(base.deploy, n_shards=n))
+            sys_n = build_system(spec, index, corpus=corpus, models=models,
+                                 ltr=ltr)
+        systems[n] = sys_n
+
+    exact = resolve_backend(backend) == "jnp"
+    results = {}
+    ref = None
+    for n, sys_n in systems.items():
+        res = sys_n.serve(ql.terms, ql.mask, ql.topic)
+        if ref is None:
+            ref = res
+        elif exact:
+            if not np.array_equal(res.topk, ref.topk):
+                raise RuntimeError(
+                    f"scatter-gather divergence: n_shards={n} top-k != "
+                    f"single-shard top-k on the jnp backend")
+            if not np.array_equal(res.final, ref.final):
+                raise RuntimeError(
+                    f"scatter-gather divergence: n_shards={n} final top-t "
+                    f"!= single-shard run")
+        t = np.zeros(reps)
+        for i in range(reps):
+            t0 = time.perf_counter()
+            sys_n.serve(ql.terms, ql.mask, ql.topic)
+            t[i] = time.perf_counter() - t0
+        s1 = res.stage_latency["stage1"]
+        results[f"shards_{n}"] = {
+            "n_shards": n,
+            "wall_batch_ms": float(t.mean() * 1e3),
+            "wall_qps": float(q_batch / t.mean()),
+            "stage1_ms": {"p50": float(np.percentile(s1, 50)),
+                          "p99": float(np.percentile(s1, 99)),
+                          "max": float(s1.max())},
+            "cascade_ms": {"p50": res.stats["p50"], "p99": res.stats["p99"],
+                           "max": res.stats["max"]},
+            "pool": sys_n.stats()["pool"],
+        }
+
+    n0, n1 = shards[0], shards[-1]
+    payload = {
+        "config": {"q_batch": q_batch, "n_docs": n_docs,
+                   "shards": list(shards), "reps": reps, "seed": seed,
+                   "backend": backend or "auto"},
+        "topk_identical_across_shards": bool(exact),
+        "stage1_max_shrink": (
+            results[f"shards_{n0}"]["stage1_ms"]["max"]
+            / max(results[f"shards_{n1}"]["stage1_ms"]["max"], 1e-9)),
+        **results,
+    }
+    payload["artifact"] = write_bench_artifact("system", payload)
+    return payload
+
+
+def render_system(res) -> str:
+    lines = ["n_shards,wall_batch_ms,wall_qps,stage1_p50,stage1_p99,"
+             "stage1_max,cascade_p99"]
+    for key, r in res.items():
+        if not key.startswith("shards_"):
+            continue
+        lines.append(f"{r['n_shards']},{r['wall_batch_ms']:.2f},"
+                     f"{r['wall_qps']:.1f},{r['stage1_ms']['p50']:.2f},"
+                     f"{r['stage1_ms']['p99']:.2f},"
+                     f"{r['stage1_ms']['max']:.2f},"
+                     f"{r['cascade_ms']['p99']:.2f}")
+    lines.append(f"stage1 max-latency shrink {res['config']['shards'][0]}→"
+                 f"{res['config']['shards'][-1]} shards: "
+                 f"{res['stage1_max_shrink']:.2f}x "
+                 f"(identical top-k: {res['topk_identical_across_shards']})")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--q-batch", type=int, default=64)
+    ap.add_argument("--n-docs", type=int, default=8192)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--shards", type=int, nargs="+", default=[1, 3])
+    ap.add_argument("--backend", default=None,
+                    help="pallas | interpret | jnp (default: auto)")
+    args = ap.parse_args()
+    res = run_system(q_batch=args.q_batch, n_docs=args.n_docs,
+                     reps=args.reps, shards=tuple(args.shards),
+                     backend=args.backend)
+    print(render_system(res))
+    print(f"artifact: {res['artifact']}")
+
+
+if __name__ == "__main__":
+    main()

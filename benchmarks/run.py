@@ -39,7 +39,8 @@ def main() -> None:
 
     from benchmarks import (bench_engines, bench_heldout, bench_hybrid,
                             bench_kernels, bench_predict_k, bench_predict_rho,
-                            bench_predict_time, bench_tail_overlap)
+                            bench_predict_time, bench_system,
+                            bench_tail_overlap)
     from benchmarks.common import load_experiment
 
     t0 = time.time()
@@ -58,6 +59,11 @@ def main() -> None:
     cr = bench_hybrid.run_cascade()
     print(bench_hybrid.render_cascade(cr))
     print(f"artifact: {cr['artifact']}")
+
+    _section("Multi-shard scaling (SearchSystem scatter-gather, Q=64)")
+    ms = bench_system.run_system()
+    print(bench_system.render_system(ms))
+    print(f"artifact: {ms['artifact']}")
 
     _section(f"Loading experiment ({args.queries} queries)")
     exp = load_experiment(args.queries)

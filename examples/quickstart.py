@@ -1,8 +1,10 @@
-"""Quickstart: the paper's full pipeline on a small synthetic collection.
+"""Quickstart: the paper's full pipeline on a small synthetic collection,
+through the declarative ``SearchSystem`` API.
 
-Builds the two index mirrors, generates reference-list labels, trains the
-Stage-0 quantile-GBRT predictors, and serves a query trace through the
-hybrid first stage with a hard latency budget.
+One spec describes the deployment (index layout, Stage-0 predictors,
+routing thresholds, Stage-2 re-ranker, shards x replicas); ``build_system``
+instantiates it, ``fit`` trains it, ``serve`` runs the multi-shard cascade
+under a hard latency budget.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,60 +13,50 @@ import sys
 import os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
-import jax.numpy as jnp
+import dataclasses
 
-from repro.core import features as F, gbrt
+import numpy as np
+
+from repro.configs.cascade_presets import get_preset
 from repro.core.labels import LabelConfig, generate_labels
-from repro.index.builder import build_index
 from repro.index.corpus import CorpusParams, build_corpus, build_queries
-from repro.ltr.ranker import ltr_training_set, train_ltr
-from repro.serving.pipeline import CascadePipeline
-from repro.serving.scheduler import SchedulerConfig
+from repro.serving.system import build_system
 
 
 def main():
     print("1) synthetic collection (8k docs) + query trace")
     corpus = build_corpus(CorpusParams(n_docs=8192, vocab=4096,
                                        avg_doclen=120, zipf_a=1.05))
-    index = build_index(corpus, stop_k=16)
-    ql = build_queries(corpus, 600, stop_k=16)
+    spec = get_preset("paper_200ms")
+    system = build_system(spec, corpus)
+    ql = build_queries(corpus, 600, stop_k=spec.index.stop_k)
 
     print("2) oracle labels via MED-RBP reference lists")
-    labels = generate_labels(index, corpus, ql,
+    labels = generate_labels(system.index, corpus, ql,
                              LabelConfig(max_k=2048, batch=200,
                                          rho_grid=(256, 1024, 4096, 16384)))
     print(f"   oracle k:   median={np.median(labels.oracle_k):.0f} "
           f"mean={labels.oracle_k.mean():.0f} (heavy-tailed)")
     print(f"   oracle rho: median={np.median(labels.oracle_rho):.0f}")
 
-    print("3) Stage-0 quantile-GBRT predictors (147 features)")
-    x = np.asarray(F.extract(jnp.asarray(index.term_stats),
-                             jnp.asarray(index.df),
-                             jnp.asarray(ql.terms), jnp.asarray(ql.mask)))
-    models = {}
-    for name, y, tau in (("k", labels.oracle_k, 0.55),
-                         ("rho", labels.oracle_rho, 0.45),
-                         ("t", labels.t_bmw, 0.5)):
-        models[name] = gbrt.fit(x, np.log1p(y.astype(np.float32)),
-                                gbrt.GBRTParams(n_trees=32, depth=4,
-                                                loss="quantile", tau=tau))
-
-    print("4) Stage-2 LTR model from the reference lists")
-    train_rows = np.flatnonzero(labels.keep)[:128]
-    lf, lg = ltr_training_set(index, corpus, ql, labels.ref_lists, train_rows)
-    ltr = train_ltr(lf, lg, n_trees=32)
-
-    print("5) full-cascade serving under a latency budget")
+    print("3) name the operating point from the data, then fit")
     budget = float(np.percentile(labels.t_bmw, 90))
-    pipe = CascadePipeline(index, models,
-                           SchedulerConfig(algorithm=2, budget=budget,
-                                           t_time=budget * 0.6,
-                                           rho_max=1 << 14,
-                                           t_k=float(np.median(
-                                               labels.oracle_k))),
-                           corpus=corpus, ltr=ltr)
-    res = pipe.serve(ql.terms, ql.mask, ql.topic)
+    spec = dataclasses.replace(
+        spec,
+        routing=dataclasses.replace(spec.routing, budget=budget,
+                                    rho_max=1 << 14),
+        deploy=dataclasses.replace(spec.deploy, n_shards=2),
+    ).validate()
+    # reuse the step-1 index: only the deployment shape changed
+    system = build_system(spec, system.index, corpus=corpus)
+    system.fit(ql, labels)
+    print(f"   spec: {spec.name} @ budget {budget:.1f}, "
+          f"{spec.deploy.n_shards} shards x {spec.deploy.replicas} replicas")
+    print(f"   round-trips: "
+          f"{spec == type(spec).from_json(spec.to_json())}")
+
+    print("4) full-cascade serving under the latency budget")
+    res = system.serve(ql.terms, ql.mask, ql.topic)
     s = res.stats
     print(f"   routed jass={s['jass']} bmw={s['bmw']} hedged={s['hedged']}")
     for name, p in s["stages"].items():
@@ -77,6 +69,13 @@ def main():
           f"{100 * np.mean(labels.t_bmw > budget):.1f}%")
     print(f"   final top-{res.final.shape[1]} lists from "
           f"{res.candidates_used.mean():.0f} candidates/query")
+
+    print("5) deployment health")
+    st = system.stats()
+    pool = st["pool"]
+    print(f"   shards={st['n_shards']} ({st['shard_docs']} docs), "
+          f"pool {pool['healthy']}/{pool['replicas']} healthy, "
+          f"mirror split jass={pool['jass']}/bmw={pool['bmw']}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,101 @@
+"""Named cascade operating points.
+
+The judgment-free trade-off framing (Clarke et al., arXiv:1506.00717) and
+the dynamic trade-off predictors (Culpepper/Clarke/Lin, arXiv:1610.02502)
+both assume an operator can *name* a deployment operating point and
+instantiate it; this registry is that name → :class:`CascadeSpec` mapping.
+
+    from repro.configs.cascade_presets import get_preset
+    system = build_system(get_preset("paper_200ms"), corpus)
+
+Presets (serving-time units follow ``CostModel.paper_scale``, i.e. ms on
+the synthetic experiment collection):
+
+=============  ==========================================================
+paper_200ms    The paper's headline point: 200 ms budget, Algorithm 2
+               routing with hedging, full Stage-2 re-rank.
+throughput     Capacity-first: tighter budget, shallower candidate grid,
+               hedging off (duplicated work costs capacity).
+quality        Effectiveness-first: deep candidate grid, generous budget
+               and ρ cap, deeper final lists.
+stage1_only    First stage as the product: no Stage-2 re-rank, latency is
+               the Stage-0+1 tail alone.
+=============  ==========================================================
+
+Every preset trains with ``RoutingSpec.calibrate=True``, so the routing
+thresholds (t_k, t_time) are re-anchored to the trained predictors'
+distribution at ``fit`` time — the spec names the trade-off, the data
+names the thresholds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serving.spec import (CascadeSpec, DeploySpec, RoutingSpec,
+                                Stage2Spec)
+
+
+def _paper_200ms() -> CascadeSpec:
+    return CascadeSpec(
+        name="paper_200ms",
+        routing=RoutingSpec(algorithm=2, budget=200.0, rho_max=1 << 18,
+                            calibrate=True),
+        stage2=Stage2Spec(enabled=True, k_serve=128, t_final=10),
+        deploy=DeploySpec(n_shards=1, replicas=2),
+    )
+
+
+def _throughput() -> CascadeSpec:
+    return CascadeSpec(
+        name="throughput",
+        routing=RoutingSpec(algorithm=2, budget=120.0, rho_max=1 << 16,
+                            enable_hedging=False, calibrate=True),
+        stage2=Stage2Spec(enabled=True, k_serve=64, t_final=10),
+        deploy=DeploySpec(n_shards=1, replicas=2),
+    )
+
+
+def _quality() -> CascadeSpec:
+    return CascadeSpec(
+        name="quality",
+        routing=RoutingSpec(algorithm=2, budget=400.0, rho_max=1 << 18,
+                            calibrate=True),
+        stage2=Stage2Spec(enabled=True, k_serve=256, t_final=20,
+                          ltr_trees=64),
+        deploy=DeploySpec(n_shards=1, replicas=2),
+    )
+
+
+def _stage1_only() -> CascadeSpec:
+    return CascadeSpec(
+        name="stage1_only",
+        routing=RoutingSpec(algorithm=2, budget=200.0, rho_max=1 << 18,
+                            calibrate=True),
+        stage2=Stage2Spec(enabled=False, k_serve=128, t_final=10),
+        deploy=DeploySpec(n_shards=1, replicas=2),
+    )
+
+
+PRESETS = {
+    "paper_200ms": _paper_200ms,
+    "throughput": _throughput,
+    "quality": _quality,
+    "stage1_only": _stage1_only,
+}
+
+
+def get_preset(name: str, **overrides) -> CascadeSpec:
+    """A fresh validated spec for a named operating point.
+
+    ``overrides`` replace top-level ``CascadeSpec`` fields (already-built
+    node values, e.g. ``deploy=DeploySpec(n_shards=4)``).
+    """
+    try:
+        spec = PRESETS[name]()
+    except KeyError:
+        raise ValueError(f"unknown preset {name!r}; "
+                         f"available: {sorted(PRESETS)}") from None
+    if overrides:
+        spec = dataclasses.replace(spec, **overrides)
+    return spec.validate()

@@ -76,6 +76,22 @@ class IndexShard(NamedTuple):
     tile_imps: jnp.ndarray     # (n_tiles, tile_cap) int32 quantized impacts
 
 
+def shard_ranges(n_docs: int, n_shards: int) -> list[tuple[int, int]]:
+    """Contiguous doc-range partition of [0, n_docs) into n_shards shards.
+
+    Ranges are as even as possible (first ``n_docs % n_shards`` shards get
+    one extra doc) and returned in ascending order — the order the
+    scatter-gather merge relies on for its doc-id tie-break.
+    """
+    if not 1 <= n_shards <= n_docs:
+        raise ValueError(f"n_shards must be in [1, {n_docs}], got {n_shards}")
+    base, extra = divmod(n_docs, n_shards)
+    bounds = [0]
+    for s in range(n_shards):
+        bounds.append(bounds[-1] + base + (1 if s < extra else 0))
+    return list(zip(bounds[:-1], bounds[1:]))
+
+
 def shard_from_index(index: InvertedIndex, doc_lo: int = 0,
                      doc_hi: int | None = None,
                      tile_d: int = 128) -> tuple[IndexShard, IndexShardSpec]:

@@ -135,6 +135,24 @@ def topk_from_tiles(acc_tiles: jnp.ndarray, k: int,
     return sc, ids.astype(jnp.int32)
 
 
+def merge_shard_topk(scores: list, ids: list, k: int):
+    """Scatter-gather merge of per-shard top-k candidate lists.
+
+    ``scores[s]`` / ``ids[s]`` are the (Q, k_s) ranked candidates of shard
+    ``s`` with ids already global to the collection.  Shards must be passed
+    in ascending doc-range order: ``lax.top_k`` keeps the earliest position
+    on score ties, and within a shard candidates are already (score desc,
+    doc id asc), so the merged tie-break is *lower global doc id first* —
+    exactly the tie-break of a single-shard top-k over the dense
+    accumulator.  Returns (ids, scores) of shape (Q, k).
+    """
+    sc = jnp.concatenate(scores, axis=1)
+    di = jnp.concatenate(ids, axis=1)
+    top_sc, pos = jax.lax.top_k(sc, min(k, sc.shape[1]))
+    top_id = jnp.take_along_axis(di, pos, axis=1)
+    return top_id, top_sc
+
+
 def tiled_topk(acc: jnp.ndarray, k: int, tile_d: int = 128):
     """Tiled top-k over a dense (Q, n_docs) accumulator.
 

@@ -1,73 +1,90 @@
-"""Serving entry point: build a synthetic collection, train the Stage-0
-predictors and the Stage-2 LTR model, and serve a query trace through the
-**full cascade pipeline** (Stage-0 → hybrid routing → Stage-1 engines →
-Stage-2 re-rank) with end-to-end tail-latency accounting.
+"""Serving entry point: name an operating point, build the system it
+describes, fit it, and serve a query trace through the multi-shard cascade
+with end-to-end tail-latency accounting.
 
-``python -m repro.launch.serve --queries 2000 --budget 200``
+The whole assembly is the declarative lifecycle —
+``build_system(preset, corpus).fit(queries, labels).serve(...)`` — the
+inline corpus/train/assemble code this file used to carry lives behind
+``SearchSystem`` now.
+
+``python -m repro.launch.serve --preset paper_200ms --shards 3``
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="paper_200ms",
+                    help="named operating point "
+                         "(repro.configs.cascade_presets)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="doc-range shards for scatter-gather Stage-1")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="ISN replicas per shard partition")
     ap.add_argument("--n-docs", type=int, default=16384)
     ap.add_argument("--vocab", type=int, default=8192)
     ap.add_argument("--queries", type=int, default=2000)
-    ap.add_argument("--budget", type=float, default=200.0)
-    ap.add_argument("--algorithm", type=int, default=2)
-    ap.add_argument("--t-final", type=int, default=10)
+    ap.add_argument("--budget", type=float, default=None,
+                    help="override the preset's latency budget")
+    ap.add_argument("--backend", default=None,
+                    help="pallas | interpret | jnp (default: preset/auto)")
     ap.add_argument("--no-ltr", action="store_true",
                     help="serve the first stage only (no Stage-2 re-rank)")
+    ap.add_argument("--pseudo-labels", action="store_true",
+                    help="skip the label oracle; fit on cheap pseudo-labels "
+                         "(CI smokes)")
+    ap.add_argument("--spec-json", default=None,
+                    help="write the resolved spec to this path and exit")
     args = ap.parse_args()
 
-    import numpy as np
-
-    from repro.core import features as F, gbrt
+    from repro.configs.cascade_presets import get_preset
     from repro.core.labels import LabelConfig, generate_labels
-    from repro.index.builder import build_index
     from repro.index.corpus import CorpusParams, build_corpus, build_queries
-    from repro.ltr.ranker import ltr_training_set, train_ltr
-    from repro.serving.pipeline import CascadePipeline
-    from repro.serving.scheduler import SchedulerConfig
-    import jax.numpy as jnp
+    from repro.serving.system import build_system
 
-    print("[serve] building collection + labels ...")
+    spec = get_preset(args.preset)
+    spec = dataclasses.replace(
+        spec,
+        deploy=dataclasses.replace(spec.deploy, n_shards=args.shards,
+                                   replicas=args.replicas),
+        routing=(spec.routing if args.budget is None else
+                 dataclasses.replace(spec.routing, budget=args.budget)),
+        stage2=(spec.stage2 if not args.no_ltr else
+                dataclasses.replace(spec.stage2, enabled=False)),
+        backend=(spec.backend if args.backend is None else
+                 dataclasses.replace(spec.backend, backend=args.backend)),
+    ).validate()
+    if args.spec_json:
+        with open(args.spec_json, "w") as f:
+            f.write(spec.to_json() + "\n")
+        print(f"[serve] wrote spec to {args.spec_json}")
+        return
+
+    print(f"[serve] preset={spec.name} shards={args.shards} "
+          f"budget={spec.routing.budget:.0f}")
+    print("[serve] building collection ...")
     corpus = build_corpus(CorpusParams(n_docs=args.n_docs, vocab=args.vocab,
                                        avg_doclen=150, zipf_a=1.05))
-    index = build_index(corpus, stop_k=16)
-    ql = build_queries(corpus, args.queries, stop_k=16)
-    labels = generate_labels(index, corpus, ql,
-                             LabelConfig(max_k=4096, batch=256))
+    system = build_system(spec, corpus)
+    ql = build_queries(corpus, args.queries, stop_k=spec.index.stop_k)
 
-    x = np.asarray(F.extract(jnp.asarray(index.term_stats),
-                             jnp.asarray(index.df),
-                             jnp.asarray(ql.terms), jnp.asarray(ql.mask)))
-    print("[serve] training Stage-0 predictors (QR) ...")
-    models = {}
-    for name, y, tau in (("k", labels.oracle_k, 0.55),
-                         ("rho", labels.oracle_rho, 0.45),
-                         ("t", labels.t_bmw, 0.5)):
-        models[name] = gbrt.fit(
-            x, np.log1p(y.astype(np.float32)),
-            gbrt.GBRTParams(n_trees=48, depth=5, loss="quantile", tau=tau))
+    labels = None
+    if not args.pseudo_labels:
+        print("[serve] generating oracle labels ...")
+        labels = generate_labels(system.index, corpus, ql,
+                                 LabelConfig(max_k=4096, batch=256))
+    print("[serve] fitting Stage-0 predictors"
+          + ("" if args.no_ltr or not spec.stage2.enabled
+             else " + Stage-2 LTR model") + " ...")
+    system.fit(ql, labels)
 
-    ltr = None
-    if not args.no_ltr:
-        print("[serve] training Stage-2 LTR model ...")
-        train_rows = np.flatnonzero(labels.keep)[:256]
-        lf, lg = ltr_training_set(index, corpus, ql, labels.ref_lists,
-                                  train_rows)
-        ltr = train_ltr(lf, lg)
-
-    cfg = SchedulerConfig(algorithm=args.algorithm, budget=args.budget,
-                          rho_max=1 << 18)
-    pipe = CascadePipeline(index, models, cfg, corpus=corpus, ltr=ltr,
-                           t_final=args.t_final)
     print("[serve] serving trace through the cascade ...")
-    res = pipe.serve(ql.terms, ql.mask, ql.topic)
+    res = system.serve(ql.terms, ql.mask,
+                       ql.topic if system.ltr is not None else None)
     s = res.stats
     print(f"[serve] routed: jass={s['jass']} bmw={s['bmw']} "
           f"hedged={s['hedged']} late={s['late_hedged']}")
@@ -76,11 +93,17 @@ def main():
               f"max={p['max']:.2f}")
     print(f"[serve] cascade ms: p50={s['p50']:.1f} p99={s['p99']:.1f} "
           f"p99.99={s['p99.99']:.1f} max={s['max']:.1f}")
-    print(f"[serve] over budget ({args.budget:.0f}): {s['over_budget']} "
+    print(f"[serve] over budget ({system.budget:.0f}): {s['over_budget']} "
           f"({s['over_budget_pct']:.4f}%)")
     if res.final is not None:
-        print(f"[serve] stage-2: mean candidates={res.candidates_used.mean():.1f} "
+        print(f"[serve] stage-2: mean candidates="
+              f"{res.candidates_used.mean():.1f} "
               f"final depth={res.final.shape[1]}")
+    pool = system.stats()["pool"]
+    print(f"[serve] pool: {pool['healthy']}/{pool['replicas']} healthy, "
+          f"mirrors jass={pool['jass']} bmw={pool['bmw']} "
+          f"(fraction {pool['jass_fraction']:.2f}), "
+          f"served={pool['served']}")
 
 
 if __name__ == "__main__":

@@ -51,6 +51,11 @@ class CostModel:
     predict_us: float = 0.75  # paper §5: <0.75 ms per prediction, scaled
     ltr_fixed_us: float = 5.0
     ltr_per_candidate_us: float = 0.04
+    # scatter-gather: per-extra-shard fan-out/merge overhead.  A sharded
+    # Stage-1 finishes at max-over-shards + this term — the tail is a max,
+    # which is the paper's tail story at deployment scale.  0 keeps the
+    # single-shard pipeline's accounting bit-identical.
+    gather_per_shard_us: float = 0.0
 
     @classmethod
     def v5e_shard(cls) -> "CostModel":
@@ -83,6 +88,13 @@ class CostModel:
         return (self.ltr_fixed_us
                 + np.asarray(n_candidates, np.float64)
                 * self.ltr_per_candidate_us)
+
+    def gather_time(self, t_shards: np.ndarray) -> np.ndarray:
+        """Scatter-gather Stage-1 time over an (n_shards, Q) per-shard time
+        matrix: the query finishes when its *slowest* shard responds, plus
+        the per-extra-shard fan-out/merge overhead."""
+        t = np.asarray(t_shards, np.float64)
+        return t.max(axis=0) + self.gather_per_shard_us * (t.shape[0] - 1)
 
 
 def percentiles(t: np.ndarray) -> dict:

@@ -1,69 +1,41 @@
-"""Unified batched cascade pipeline: Stage-0 → routing → Stage-1 → Stage-2.
+"""Compatibility shim: the historical ``CascadePipeline`` constructor on
+top of the spec-built ``SearchSystem``.
 
-The paper's framework spans *all* stages of a multi-stage architecture, and
-so does this pipeline: one query batch flows through
+The unified cascade (Stage-0 → routing → Stage-1 → Stage-2 as one batched
+array program) now lives in ``repro.serving.system.SearchSystem``, built
+from a declarative ``repro.serving.spec.CascadeSpec`` — which adds
+multi-shard scatter-gather Stage-1, replica-pool load balancing, and the
+spec/preset lifecycle (``build_system(spec).fit(...).serve(...)``).
 
-* **Stage-0** — feature extraction + Forest inference for all three
-  predictors (k, ρ, t) in one fused on-device call: the k/ρ/t ensembles
-  are stacked along a model axis (``gbrt.stack_models``) and evaluated
-  with ``trees.forest_predict_stacked`` — no per-model numpy round trips.
-* **Routing** — the Stage-0 scheduler (Algorithms 1/2 + hedging) as pure
-  array ops over the prediction vectors.
-* **Stage-1** — the routed sub-batches dispatch through the batched
-  ``daat_serve`` / ``saat_serve`` engines (Pallas kernels on TPU, fused
-  jnp elsewhere) over one shard's index mirrors.
-* **Stage-2** — the batched LTR re-ranker (``rerank_batched``): a (Q, C)
-  candidate-grid featurization (CSR binary search or the
-  ``qd_feature_gather`` kernel) + one fused GBRT inference + masked top-t.
-
-Latency accounting covers the **cascade**, not just Stage-1: per-stage
-arrays (`stage0`/`stage1`/`stage2`) are threaded through the result and
-``stats`` reports percentiles / over-budget counts of their sum, which is
-what the paper's 200 ms tail guarantee is about end to end.  When an LTR
-model is attached, the worst-case Stage-2 cost (``ltr_time(k_serve)`` —
-deterministic, since the candidate grid is capped at ``k_serve``) is
-*reserved* out of the scheduler's budget, so the late-hedge machinery
-enforces Stage-0+1 against the remainder and the end-to-end guarantee
-survives re-ranking.
-
-``repro.serving.server.HybridServer`` is a thin compatibility wrapper over
-this pipeline (Stage-1 only); ``repro.launch.serve`` runs the full
-cascade.
+``CascadePipeline`` keeps the pre-spec keyword surface (untyped model dict
+plus loose knobs) for existing callers and tests: it assembles the
+equivalent single-shard ``CascadeSpec`` internally and delegates
+everything to ``SearchSystem``.  A one-shard system is bit-identical to
+the historical pipeline — same engine calls, same latency accounting, same
+top-k/final lists.  New code should build a spec (or pick a preset from
+``repro.configs.cascade_presets``) and use ``build_system`` directly.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import features as F
-from repro.core import gbrt
 from repro.index.builder import InvertedIndex
-from repro.index.postings import shard_from_index
-from repro.isn.backend import query_lane_budget, resolve_backend
-from repro.isn.daat import daat_serve
-from repro.isn.saat import saat_serve
-from repro.ltr.cascade import CascadeResult, rerank_batched
-from repro.ltr.ranker import LTRModel, csr_search_iters, stage2_arrays
-from repro.serving.latency import CostModel, over_budget, percentiles
-from repro.serving.scheduler import SchedulerConfig, StageZeroScheduler
+from repro.ltr.ranker import LTRModel
+from repro.serving.latency import CostModel
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.spec import (BackendSpec, CascadeSpec, DeploySpec,
+                                IndexSpec, Stage2Spec)
+from repro.serving.system import (PipelineResult, SearchSystem,  # noqa: F401
+                                  routing_spec)
 
 
-@dataclass
-class PipelineResult:
-    """One served batch, end to end."""
-    topk: np.ndarray                 # (Q, k_serve) Stage-1 candidates
-    final: np.ndarray | None         # (Q, t_final) re-ranked (None: no LTR)
-    candidates_used: np.ndarray | None   # (Q,) candidates entering Stage-2
-    latency: np.ndarray              # (Q,) full-cascade latency
-    stage_latency: dict              # {"stage0"|"stage1"|"stage2": (Q,)}
-    stats: dict
-
-
-class CascadePipeline:
+class CascadePipeline(SearchSystem):
     """The whole multi-stage retrieval cascade as one batched query program.
+
+    Thin shim over :class:`~repro.serving.system.SearchSystem` with the
+    historical keyword surface; a single-shard spec is assembled from the
+    old knobs, so results are bit-identical to the pre-spec pipeline.
 
     Args:
       index: the built collection (both mirrors + Stage-0 stats).
@@ -82,151 +54,31 @@ class CascadePipeline:
                  ltr: LTRModel | None = None, k_serve: int = 128,
                  t_final: int = 10, cost: CostModel | None = None,
                  backend: str | None = None):
-        self.index = index
-        self.shard, self.spec = shard_from_index(index)
-        self.models = models
-        self.cost = cost or CostModel.paper_scale()
-        self.budget = cfg.budget
-        if ltr is not None:
-            # reserve the (deterministic) worst-case Stage-2 cost so the
-            # scheduler's late-hedge enforces the *cascade* budget
-            reserve = float(self.cost.ltr_time(np.asarray(k_serve)))
-            cfg = replace(cfg, budget=max(cfg.budget - reserve, 0.0))
-        self.sched = StageZeroScheduler(cfg, self.cost)
-        self.k_serve = k_serve
-        self.t_final = t_final
-        self.backend = backend
-        self.term_stats = jnp.asarray(index.term_stats)
-        self.df = jnp.asarray(index.df)
-        # fused Stage-0: one stacked forest when the three ensembles share a
-        # shape (the launch path always trains them that way); per-model
-        # fallback otherwise — same predictions either way, bit-for-bit.
-        try:
-            self._stacked, self._stack_depth = gbrt.stack_models(
-                [models[n] for n in ("k", "rho", "t")])
-        except ValueError:
-            self._stacked = None
-        self.ltr = ltr
-        if ltr is not None:
-            if corpus is None:
-                raise ValueError("Stage-2 re-ranking needs the corpus "
-                                 "(doc topic mixtures)")
-            self.s2 = stage2_arrays(index, corpus)
-            self.n_iter = csr_search_iters(int(index.df.max()))
+        spec = CascadeSpec(
+            index=IndexSpec(block_size=index.block_size),
+            routing=routing_spec(cfg),
+            stage2=Stage2Spec(enabled=ltr is not None, k_serve=k_serve,
+                              t_final=t_final),
+            backend=BackendSpec(backend=backend),
+            # replicas=2 so the single partition holds one replica of EACH
+            # mirror (a 1-replica pool is JASS-only and would count all BMW
+            # traffic through the mirror-exhaustion fallback)
+            deploy=DeploySpec(n_shards=1, replicas=2, rebalance_every=0),
+            name="compat_pipeline",
+        )
+        super().__init__(spec, index, corpus=corpus, models=models, ltr=ltr,
+                         cost=cost)
 
-    # ------------------------------------------------------------------
-    # stages
-    # ------------------------------------------------------------------
+    # historical attribute surface: the single shard and its spec
+    @property
+    def shard(self):
+        return self.shards[0]
 
-    def stage0(self, terms: np.ndarray, mask: np.ndarray):
-        """All three predictions in one fused device call: (pk, pr, pt)."""
-        x = F.extract(self.term_stats, self.df, jnp.asarray(terms),
-                      jnp.asarray(mask))
-        if self._stacked is not None:
-            p = np.expm1(np.asarray(
-                gbrt.predict_stacked(self._stacked, x, self._stack_depth)))
-            return p[0], p[1], p[2]
-        return tuple(np.expm1(np.asarray(gbrt.predict(self.models[n], x)))
-                     for n in ("k", "rho", "t"))
+    @property
+    def spec(self):
+        return self.shard_specs[0]
 
     def stage1(self, terms: np.ndarray, mask: np.ndarray, routed):
-        """Dispatch the routed sub-batches through the batched engines.
-
-        Returns (topk, t_bmw, jass_time_fn) — the scheduler folds the times
-        into per-query latency under hedging semantics."""
-        q = terms.shape[0]
-        topk = np.zeros((q, self.k_serve), np.int64)
-        t_bmw = np.zeros(q)
-
-        if len(routed.jass_rows):
-            rows = routed.jass_rows
-            res = saat_serve(self.shard, jnp.asarray(terms[rows]),
-                             jnp.asarray(mask[rows]),
-                             jnp.asarray(routed.rho[rows]),
-                             n_docs=self.spec.n_docs, k=self.k_serve,
-                             cap=int(self.sched.cfg.rho_max),
-                             tile_d=self.spec.tile_d, backend=self.backend)
-            topk[rows] = np.asarray(res.topk_docs)
-        if len(routed.bmw_rows):
-            rows = routed.bmw_rows
-            qcap = query_lane_budget(self.index.df, terms[rows], mask[rows])
-            res = daat_serve(self.shard, jnp.asarray(terms[rows]),
-                             jnp.asarray(mask[rows]),
-                             jnp.ones(len(rows), jnp.float32),
-                             n_docs=self.spec.n_docs,
-                             n_blocks=self.spec.n_blocks,
-                             block_size=self.spec.block_size, k=self.k_serve,
-                             cap=self.spec.max_df,
-                             bcap=self.spec.max_blocks_per_term, qcap=qcap,
-                             tile_d=self.spec.tile_d, backend=self.backend)
-            topk[rows] = np.asarray(res.topk_docs)
-            t_bmw[rows] = self.cost.daat_time(np.asarray(res.work),
-                                              np.asarray(res.blocks))
+        """Historical signature: returns (topk, t_bmw)."""
+        topk, t_bmw, _ = self._stage1_full(terms, mask, routed)
         return topk, t_bmw
-
-    def _jass_time(self, terms, mask):
-        """Deterministic JASS time: the ρ budget resolves to a level cut;
-        time follows the cut's work — one vectorized reduction per call."""
-        def fn(rows, rho):
-            lc = self.index.level_cum[terms[rows]]
-            lc = lc * (mask[rows] > 0)[:, :, None]
-            total = lc.sum(axis=1)                       # (R, n_levels)
-            ok = total <= np.asarray(rho).reshape(-1, 1)
-            lstar = np.argmax(ok, axis=1)
-            w = np.where(ok.any(axis=1),
-                         np.take_along_axis(total, lstar[:, None],
-                                            axis=1)[:, 0], 0)
-            return self.cost.saat_time(w.astype(np.float64))
-        return fn
-
-    def stage2(self, terms, mask, topics, cand, k_per_query) -> CascadeResult:
-        """Batched LTR re-rank of the Stage-1 candidate grid."""
-        backend = resolve_backend(self.backend)
-        qcap = None
-        if backend != "jnp":
-            qcap = query_lane_budget(self.index.df, terms, mask)
-        return rerank_batched(self.s2, self.ltr, terms, mask, topics,
-                              cand, k_per_query, t_final=self.t_final,
-                              n_iter=self.n_iter, backend=backend, qcap=qcap,
-                              lane_need=qcap)
-
-    # ------------------------------------------------------------------
-    # end to end
-    # ------------------------------------------------------------------
-
-    def serve(self, terms: np.ndarray, mask: np.ndarray,
-              topics: np.ndarray | None = None) -> PipelineResult:
-        q = terms.shape[0]
-        pk, pr, pt = self.stage0(terms, mask)
-        routed = self.sched.route(pk, pr, pt)
-        topk, t_bmw = self.stage1(terms, mask, routed)
-
-        lat01 = self.sched.resolve_times(routed, t_bmw,
-                                         self._jass_time(terms, mask))
-        t0 = np.full(q, self.cost.predict_us)
-        stage_latency = {"stage0": t0, "stage1": lat01 - t0}
-
-        final = None
-        used = None
-        if self.ltr is not None:
-            if topics is None:
-                raise ValueError("Stage-2 re-ranking needs per-query topics")
-            k2 = np.minimum(routed.k, self.k_serve)
-            res2 = self.stage2(terms, mask, topics, topk.astype(np.int32), k2)
-            final, used = res2.final, res2.candidates_used
-            stage_latency["stage2"] = self.cost.ltr_time(used)
-        else:
-            stage_latency["stage2"] = np.zeros(q)
-
-        lat = lat01 + stage_latency["stage2"]
-        stats = dict(self.sched.stats)
-        stats.update(percentiles(lat))
-        n_over, pct = over_budget(lat, self.budget)
-        stats["over_budget"] = n_over
-        stats["over_budget_pct"] = pct
-        stats["stages"] = {name: percentiles(t)
-                           for name, t in stage_latency.items()
-                           if np.any(t > 0)}
-        return PipelineResult(topk=topk, final=final, candidates_used=used,
-                              latency=lat, stage_latency=stage_latency,
-                              stats=stats)

@@ -86,11 +86,15 @@ class ReplicaPool:
         return ra if key(ra) <= key(rb) else rb
 
     def route_query(self, mirror: str) -> list[Replica] | None:
-        """A query fans out to one replica of EVERY partition."""
+        """A query fans out to one replica of EVERY partition; all-or-
+        nothing — a partition with no healthy replica releases the picks
+        already made so no inflight count leaks."""
         picks = []
         for p in range(self.cfg.n_partitions):
             r = self.pick(p, mirror)
             if r is None:
+                for rr in picks:
+                    rr.inflight = max(rr.inflight - 1, 0)
                 return None
             r.inflight += 1
             picks.append(r)
@@ -119,8 +123,15 @@ class ReplicaPool:
     # ------------------------------------------------------------------
     def rebalance(self, observed_jass_fraction: float):
         """Re-split mirrors toward the observed routing mix (rounded to
-        whole replicas; each partition keeps >= 1 of each mirror)."""
+        whole replicas; each partition keeps >= 1 of each mirror).
+
+        Driven online by ``SearchSystem.serve`` from the scheduler's
+        observed JASS fraction (``DeploySpec.rebalance_every``), not just by
+        offline simulation.  A partition needs >= 2 replicas to hold both
+        mirrors — single-replica deployments keep their static split."""
         cfg = self.cfg
+        if cfg.replicas_per_partition < 2:
+            return
         want = int(round(cfg.replicas_per_partition
                          * np.clip(observed_jass_fraction, 0.2, 0.8)))
         want = min(max(want, 1), cfg.replicas_per_partition - 1)
@@ -128,19 +139,30 @@ class ReplicaPool:
             reps = sorted((r for r in self.replicas if r.partition == p),
                           key=lambda r: r.replica_id)
             for i, r in enumerate(reps):
-                r.mirror = JASS if i < want else BMW
+                mirror = JASS if i < want else BMW
+                if mirror != r.mirror:
+                    r.mirror = mirror
+                    # latency history belongs to the old mirror; restart
+                    # the estimate so pick() is not biased by stale data
+                    r.ewma_latency = 1.0
         self.cfg = PoolConfig(**{**cfg.__dict__,
                                  "jass_fraction": want
                                  / cfg.replicas_per_partition})
 
     def stats(self) -> dict:
         healthy = sum(r.healthy for r in self.replicas)
+        ewma = {m: [r.ewma_latency for r in self.replicas
+                    if r.mirror == m and r.served]
+                for m in (JASS, BMW)}
         return {
             "replicas": len(self.replicas),
             "healthy": healthy,
             "jass": sum(r.mirror == JASS for r in self.replicas),
             "bmw": sum(r.mirror == BMW for r in self.replicas),
+            "jass_fraction": self.cfg.jass_fraction,
             "served": sum(r.served for r in self.replicas),
             "max_inflight": max((r.inflight for r in self.replicas),
                                 default=0),
+            "ewma_latency": {m: (float(np.mean(v)) if v else None)
+                             for m, v in ewma.items()},
         }

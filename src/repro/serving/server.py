@@ -1,27 +1,17 @@
-"""End-to-end serving loop (single-host demonstration of the production
-layout), now a thin compatibility wrapper over the unified cascade
-pipeline (``repro.serving.pipeline``).
+"""Compatibility shim: the historical Stage-1-only ``HybridServer``
+interface on top of the spec-built serving stack.
 
-Architecture: one query batch flows Stage-0 → routing → Stage-1 → Stage-2
-as a sequence of batched array programs —
+``HybridServer(index, models, cfg)`` assembles a single-shard,
+Stage-1-only ``CascadeSpec`` internally (via the ``CascadePipeline`` shim)
+and delegates serving to ``repro.serving.system.SearchSystem`` — the same
+``stage1_only`` operating point the preset registry names.  Results are
+bit-identical to the pre-spec server: the tests' budget-guarantee suite
+still drives this class.
 
-* Stage-0 features + the three GBRT predictors run as ONE fused device
-  call (stacked forests, ``gbrt.predict_stacked``);
-* the scheduler routes the batch (Algorithms 1/2 + hedging) with pure
-  array ops;
-* the routed sub-batches dispatch through the batched ``daat_serve`` /
-  ``saat_serve`` engines over a real IndexShard (backend-dispatched:
-  compiled Pallas kernels on TPU, fused-jnp elsewhere — see
-  ``repro.isn.backend``); on a mesh the same loop runs with
-  ``repro.isn.shard.hybrid_serve_fn``;
-* optionally, Stage-2 re-ranks the candidate grid in one batched LTR pass
-  (``repro.ltr.cascade.rerank_batched``).
-
-``HybridServer`` keeps the historical Stage-1-only interface (the tests'
-budget-guarantee suite drives it); new code should use
-``repro.serving.pipeline.CascadePipeline`` directly, which also threads
-per-stage latency accounting through the result so the reported tail is
-the *cascade* tail.
+New code should build a spec (or pick a preset from
+``repro.configs.cascade_presets``) and use
+``repro.serving.system.build_system`` directly, which adds multi-shard
+scatter-gather Stage-1, replica-pool load balancing, and Stage-2.
 """
 
 from __future__ import annotations
@@ -46,9 +36,9 @@ class ServeResult:
 class HybridServer:
     """One ISN worth of the paper's hybrid system, servable end to end.
 
-    Thin wrapper over ``CascadePipeline`` without a Stage-2 model: serves
-    the first stage and reports Stage-0 + Stage-1 latency, exactly as
-    before the pipeline refactor.
+    Thin wrapper over the spec-built stack without a Stage-2 model (a
+    ``stage1_only`` operating point): serves the first stage and reports
+    Stage-0 + Stage-1 latency, exactly as before the spec refactor.
     """
 
     def __init__(self, index: InvertedIndex, models: dict,

@@ -1,0 +1,174 @@
+"""Declarative serving configuration: one typed, serializable spec tree
+describes an entire deployment of the paper's multi-stage system.
+
+The paper pitches a *unified framework* that can be "easily applied in
+large-scale IR systems" across all stages; the spec is the API form of
+that claim: a single :class:`CascadeSpec` names an operating point — index
+layout, Stage-0 predictors, routing thresholds, Stage-2 re-ranker, kernel
+backend, and the deployment shape (shards x replicas) — and
+``repro.serving.system.build_system`` instantiates it.  Named operating
+points live in ``repro.configs.cascade_presets``.
+
+Every node is a frozen dataclass of JSON-plain scalars, so
+``spec.to_json()`` / ``CascadeSpec.from_json()`` round-trip exactly and a
+spec can be checked into a config repo, diffed, and shipped to a serving
+fleet.  ``replace``-style evolution works through ``dataclasses.replace``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+
+SPEC_VERSION = 1
+
+
+@dataclass(frozen=True)
+class IndexSpec:
+    """Index build + device-mirror layout parameters."""
+    block_size: int = 64        # DAAT block-max block width (docs)
+    stop_k: int = 16            # drop the stop_k most frequent terms
+    tile_d: int = 128           # docs per bucketed serving tile (kernels)
+
+    def validate(self) -> None:
+        if self.tile_d % self.block_size:
+            raise ValueError(f"tile_d={self.tile_d} must be a multiple of "
+                             f"block_size={self.block_size}")
+
+
+@dataclass(frozen=True)
+class Stage0Spec:
+    """Quantile-GBRT predictor training configuration (k, rho, t)."""
+    n_trees: int = 48
+    depth: int = 5
+    tau_k: float = 0.55
+    tau_rho: float = 0.45
+    tau_t: float = 0.5
+
+    def validate(self) -> None:
+        if self.n_trees < 1 or self.depth < 1:
+            raise ValueError("Stage0Spec needs n_trees >= 1 and depth >= 1")
+
+
+@dataclass(frozen=True)
+class RoutingSpec:
+    """Stage-0 scheduler thresholds (paper Algorithms 1/2 + hedging)."""
+    algorithm: int = 2
+    budget: float = 200.0
+    t_k: float = 1000.0
+    t_time: float = 150.0
+    rho_max: int = 1 << 20
+    rho_min: int = 4096
+    hedge_band: float = 0.25
+    enable_hedging: bool = True
+    calibrate: bool = False     # fit(): set t_k/t_time from the trained
+                                # predictors' distribution
+
+    def validate(self) -> None:
+        if self.algorithm not in (1, 2):
+            raise ValueError(f"algorithm must be 1 or 2, got {self.algorithm}")
+        if self.budget <= 0:
+            raise ValueError("budget must be positive")
+        if self.rho_min > self.rho_max:
+            raise ValueError("rho_min must not exceed rho_max")
+
+
+@dataclass(frozen=True)
+class Stage2Spec:
+    """Candidate depth and LTR re-ranker configuration."""
+    enabled: bool = True
+    k_serve: int = 128          # Stage-1 retrieval depth (candidate grid C)
+    t_final: int = 10           # final result-list depth
+    ltr_trees: int = 48
+    n_train_queries: int = 256  # queries used to fit the LTR model
+
+    def validate(self) -> None:
+        if self.k_serve < 1:
+            raise ValueError("k_serve must be >= 1")
+        if self.enabled and self.t_final < 1:
+            raise ValueError("t_final must be >= 1 when Stage-2 is enabled")
+
+
+@dataclass(frozen=True)
+class BackendSpec:
+    """Kernel backend + cost-model selection."""
+    backend: str | None = None  # "pallas" | "interpret" | "jnp" | None=auto
+    cost: str = "paper_scale"   # CostModel constructor name
+
+    def validate(self) -> None:
+        if self.backend not in (None, "pallas", "interpret", "jnp"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.cost not in ("paper_scale", "v5e_shard"):
+            raise ValueError(f"unknown cost model {self.cost!r}")
+
+
+@dataclass(frozen=True)
+class DeploySpec:
+    """Deployment shape: document shards x replicas per shard.
+
+    ``n_shards`` doc-range partitions serve Stage-1 scatter-gather;
+    ``replicas`` ISN replicas back each partition (split across the
+    BMW/JASS mirrors by ``jass_fraction``, re-split online every
+    ``rebalance_every`` batches from the observed routing mix).
+    """
+    n_shards: int = 1
+    replicas: int = 2
+    jass_fraction: float = 0.5
+    rebalance_every: int = 1    # batches between pool rebalances (0 = off)
+    seed: int = 0
+
+    def validate(self) -> None:
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if self.replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        if not 0.0 <= self.jass_fraction <= 1.0:
+            raise ValueError("jass_fraction must be in [0, 1]")
+
+
+_NODES = {"index": IndexSpec, "stage0": Stage0Spec, "routing": RoutingSpec,
+          "stage2": Stage2Spec, "backend": BackendSpec, "deploy": DeploySpec}
+
+
+@dataclass(frozen=True)
+class CascadeSpec:
+    """The whole deployment, as one declarative value."""
+    index: IndexSpec = field(default_factory=IndexSpec)
+    stage0: Stage0Spec = field(default_factory=Stage0Spec)
+    routing: RoutingSpec = field(default_factory=RoutingSpec)
+    stage2: Stage2Spec = field(default_factory=Stage2Spec)
+    backend: BackendSpec = field(default_factory=BackendSpec)
+    deploy: DeploySpec = field(default_factory=DeploySpec)
+    name: str = "custom"
+
+    def validate(self) -> "CascadeSpec":
+        for node in _NODES:
+            getattr(self, node).validate()
+        return self
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["version"] = SPEC_VERSION
+        return d
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CascadeSpec":
+        d = dict(d)
+        version = d.pop("version", SPEC_VERSION)
+        if version != SPEC_VERSION:
+            raise ValueError(f"unsupported spec version {version}")
+        kwargs = {}
+        for node, node_cls in _NODES.items():
+            if node in d:
+                kwargs[node] = node_cls(**d.pop(node))
+        kwargs.update(d)                 # remaining scalars (name)
+        return cls(**kwargs).validate()
+
+    @classmethod
+    def from_json(cls, s: str) -> "CascadeSpec":
+        return cls.from_dict(json.loads(s))

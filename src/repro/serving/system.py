@@ -1,0 +1,554 @@
+"""``SearchSystem``: one declarative spec → a multi-shard serving cascade.
+
+This is the unified serving facade the paper's framework implies: a
+:class:`~repro.serving.spec.CascadeSpec` names an operating point and
+``build_system`` instantiates the full lifecycle —
+
+    spec = get_preset("paper_200ms")
+    system = build_system(spec, corpus)      # builds + shards the index
+    system.fit(ql, labels)                   # Stage-0 predictors + LTR
+    res = system.serve(ql.terms, ql.mask, ql.topic)
+    system.stats()                           # tails + pool health
+
+Deployment shape (``DeploySpec``)
+---------------------------------
+The index is partitioned into ``n_shards`` contiguous **doc-range shards**
+(``shard_from_index`` over ``shard_ranges``); Stage-1 fans each routed
+sub-batch out across every shard's batched DAAT/SAAT engine and merges the
+per-shard top-k with ``merge_shard_topk`` — shards are merged in ascending
+doc-range order, so score ties break toward the **lower global doc id**,
+exactly the tie-break of a single-shard run (a one-shard deployment is
+bit-identical to the historical ``CascadePipeline``).
+
+Multi-shard exactness: DAAT is rank-safe per shard, so the merged top-k is
+the exact global top-k.  For SAAT, the ρ budget resolves to a **global**
+impact-level cut (from the full-collection level table); each shard then
+processes exactly its slice of that cut's posting set, so the union equals
+the single-shard traversal and — accumulation being integer — the merged
+top-k matches bit-for-bit.
+
+Latency is scatter-gather: a query finishes when its *slowest* shard
+responds (``CostModel.gather_time`` = max over shards + fan-out overhead)
+— the tail is a max, which is the paper's tail-latency story at deployment
+scale.  Each partition is backed by a :class:`~repro.serving.replicas.
+ReplicaPool` of BMW/JASS mirror replicas: every served query routes through
+power-of-two-choices replica selection, observed per-(query, shard)
+latencies feed the pool's EWMA estimates back, and the mirror split is
+re-balanced online toward the scheduler's observed routing mix.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import features as F
+from repro.core import gbrt
+from repro.index.builder import InvertedIndex, build_index
+from repro.index.corpus import Corpus
+from repro.index.postings import shard_from_index, shard_ranges
+from repro.isn.backend import (merge_shard_topk, query_lane_budget,
+                               resolve_backend)
+from repro.isn.daat import daat_serve
+from repro.isn.saat import saat_serve
+from repro.ltr.cascade import CascadeResult, rerank_batched
+from repro.ltr.ranker import (LTRModel, csr_search_iters, ltr_training_set,
+                              qd_features, stage2_arrays, train_ltr)
+from repro.serving.latency import CostModel, over_budget, percentiles
+from repro.serving.replicas import BMW, JASS, PoolConfig, ReplicaPool
+from repro.serving.scheduler import SchedulerConfig, StageZeroScheduler
+from repro.serving.spec import CascadeSpec, RoutingSpec
+
+
+@dataclass
+class PipelineResult:
+    """One served batch, end to end."""
+    topk: np.ndarray                 # (Q, k_serve) Stage-1 candidates
+    final: np.ndarray | None         # (Q, t_final) re-ranked (None: no LTR)
+    candidates_used: np.ndarray | None   # (Q,) candidates entering Stage-2
+    latency: np.ndarray              # (Q,) full-cascade latency
+    stage_latency: dict              # {"stage0"|"stage1"|"stage2": (Q,)}
+    stats: dict
+
+
+def scheduler_config(routing: RoutingSpec) -> SchedulerConfig:
+    """The runtime scheduler configuration a RoutingSpec describes."""
+    return SchedulerConfig(
+        algorithm=routing.algorithm, t_k=routing.t_k, t_time=routing.t_time,
+        rho_max=routing.rho_max, rho_min=routing.rho_min,
+        budget=routing.budget, hedge_band=routing.hedge_band,
+        enable_hedging=routing.enable_hedging)
+
+
+def routing_spec(cfg: SchedulerConfig) -> RoutingSpec:
+    """The RoutingSpec describing a runtime SchedulerConfig (shim path)."""
+    return RoutingSpec(
+        algorithm=cfg.algorithm, t_k=cfg.t_k, t_time=cfg.t_time,
+        rho_max=cfg.rho_max, rho_min=cfg.rho_min, budget=cfg.budget,
+        hedge_band=cfg.hedge_band, enable_hedging=cfg.enable_hedging)
+
+
+def build_system(spec: CascadeSpec, corpus_or_index, *, corpus=None,
+                 models: dict | None = None, ltr: LTRModel | None = None,
+                 cost: CostModel | None = None) -> "SearchSystem":
+    """Instantiate the deployment a spec describes.
+
+    ``corpus_or_index`` is either a :class:`Corpus` (the index is built
+    with the spec's ``IndexSpec``) or a pre-built :class:`InvertedIndex`
+    (pass ``corpus=`` separately if Stage-2 needs doc topics).  Pre-trained
+    ``models``/``ltr`` can be attached directly; otherwise call
+    :meth:`SearchSystem.fit`.
+
+    With a pre-built index the spec's ``block_size`` is reconciled from
+    the index (the index is ground truth), so ``to_json()`` describes the
+    deployed layout; ``stop_k`` is not recoverable from a built index —
+    when shipping a spec for rebuild elsewhere, keep it truthful.
+    """
+    if isinstance(corpus_or_index, InvertedIndex):
+        index = corpus_or_index
+    elif isinstance(corpus_or_index, Corpus):
+        corpus = corpus_or_index if corpus is None else corpus
+        index = build_index(corpus_or_index,
+                            block_size=spec.index.block_size,
+                            stop_k=spec.index.stop_k)
+    else:
+        raise TypeError("build_system needs a Corpus or an InvertedIndex, "
+                        f"got {type(corpus_or_index).__name__}")
+    return SearchSystem(spec, index, corpus=corpus, models=models, ltr=ltr,
+                        cost=cost)
+
+
+class SearchSystem:
+    """A spec-built multi-shard cascade with the full serving lifecycle."""
+
+    def __init__(self, spec: CascadeSpec, index: InvertedIndex, *,
+                 corpus=None, models: dict | None = None,
+                 ltr: LTRModel | None = None, cost: CostModel | None = None):
+        if index.block_size != spec.index.block_size:
+            # the built index is ground truth for its own layout; fold it
+            # back so spec.to_json() describes the deployed system
+            spec = replace(spec, index=replace(spec.index,
+                                               block_size=index.block_size))
+        spec.validate()
+        self.cascade_spec = spec
+        self.index = index
+        self.corpus = corpus
+        self.cost = cost or getattr(CostModel, spec.backend.cost)()
+        self.k_serve = spec.stage2.k_serve
+        self.t_final = spec.stage2.t_final
+        self.backend = spec.backend.backend
+        self.budget = spec.routing.budget
+        self._base_cfg = scheduler_config(spec.routing)
+
+        # ---- shard the index into doc-range partitions ----
+        ranges = shard_ranges(index.n_docs, spec.deploy.n_shards)
+        self.doc_lo = [lo for lo, _ in ranges]
+        built = [shard_from_index(index, lo, hi, tile_d=spec.index.tile_d)
+                 for lo, hi in ranges]
+        self.shards = [s for s, _ in built]
+        self.shard_specs = [sp for _, sp in built]
+        min_docs = min(sp.n_docs for sp in self.shard_specs)
+        if min_docs < self.k_serve:
+            raise ValueError(
+                f"k_serve={self.k_serve} exceeds the smallest shard "
+                f"({min_docs} docs at n_shards={spec.deploy.n_shards}); "
+                f"use fewer shards or a smaller k_serve")
+        self._df_host = [np.asarray(s.df) for s in self.shards]
+        # host-side impact-level tables: the global SAAT level cut (and the
+        # deterministic JASS cost) are resolved against the full collection,
+        # then split per shard — see module docstring for why this keeps
+        # multi-shard SAAT bit-identical to the single-shard traversal
+        self._level_cum_host = ([index.level_cum] if len(self.shards) == 1
+                                else [np.asarray(s.level_cum)
+                                      for s in self.shards])
+
+        self.term_stats = jnp.asarray(index.term_stats)
+        self.df = jnp.asarray(index.df)
+
+        self.pool = ReplicaPool(
+            PoolConfig(n_partitions=spec.deploy.n_shards,
+                       replicas_per_partition=spec.deploy.replicas,
+                       jass_fraction=spec.deploy.jass_fraction),
+            seed=spec.deploy.seed)
+        self._batches = 0
+        self._last_stats: dict = {}
+
+        self.models: dict | None = None
+        self.ltr: LTRModel | None = None
+        self._stacked = None
+        self.sched = StageZeroScheduler(self._base_cfg, self.cost)
+        if models is not None:
+            self.set_models(models, ltr)
+        elif ltr is not None:
+            raise ValueError("ltr without Stage-0 models — pass both")
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    # ------------------------------------------------------------------
+    # lifecycle: attach / train models
+    # ------------------------------------------------------------------
+
+    def set_models(self, models: dict, ltr: LTRModel | None = None):
+        """Attach pre-trained Stage-0 predictors (and optionally the
+        Stage-2 LTR model); rebuilds the scheduler so the cascade budget
+        reservation matches the attached stages."""
+        self.models = models
+        # fused Stage-0: one stacked forest when the three ensembles share a
+        # shape (fit() always trains them that way); per-model fallback
+        # otherwise — same predictions either way, bit-for-bit.
+        try:
+            self._stacked, self._stack_depth = gbrt.stack_models(
+                [models[n] for n in ("k", "rho", "t")])
+        except ValueError:
+            self._stacked = None
+        self.ltr = ltr
+        cfg = self._base_cfg
+        if ltr is not None:
+            if self.corpus is None:
+                raise ValueError("Stage-2 re-ranking needs the corpus "
+                                 "(doc topic mixtures)")
+            self.s2 = stage2_arrays(self.index, self.corpus)
+            self.n_iter = csr_search_iters(int(self.index.df.max()))
+            # reserve the (deterministic) worst-case Stage-2 cost so the
+            # scheduler's late-hedge enforces the *cascade* budget
+            reserve = float(self.cost.ltr_time(np.asarray(self.k_serve)))
+            cfg = replace(cfg, budget=max(cfg.budget - reserve, 0.0))
+        self.sched = StageZeroScheduler(cfg, self.cost)
+        return self
+
+    def fit(self, ql, labels=None, *, seed: int = 0) -> "SearchSystem":
+        """Train the spec's Stage-0 predictors (and Stage-2 LTR model when
+        enabled) from a query log.
+
+        ``labels`` is a ``generate_labels`` result (oracle k/ρ/t targets +
+        reference lists).  ``labels=None`` falls back to cheap pseudo-labels
+        derived from posting-list mass — enough to exercise routing and
+        re-ranking in benchmarks and CI smokes without the label oracle.
+        """
+        s0 = self.cascade_spec.stage0
+        x = np.asarray(F.extract(self.term_stats, self.df,
+                                 jnp.asarray(ql.terms), jnp.asarray(ql.mask)))
+        rng = np.random.RandomState(seed)
+        if labels is not None:
+            targets = {"k": labels.oracle_k, "rho": labels.oracle_rho,
+                       "t": labels.t_bmw}
+        else:
+            eff = ((self.index.df[ql.terms] * (ql.mask > 0))
+                   .sum(axis=1).astype(np.float64))
+            targets = {n: eff * sc * np.exp(rng.randn(len(eff)) * 0.3)
+                       for n, sc in (("k", 0.05), ("rho", 0.5), ("t", 0.002))}
+        taus = {"k": s0.tau_k, "rho": s0.tau_rho, "t": s0.tau_t}
+        models = {
+            name: gbrt.fit(
+                x, np.log1p(y.astype(np.float32)),
+                gbrt.GBRTParams(n_trees=s0.n_trees, depth=s0.depth,
+                                loss="quantile", tau=taus[name]))
+            for name, y in targets.items()}
+
+        ltr = None
+        if self.cascade_spec.stage2.enabled:
+            if self.corpus is None:
+                raise ValueError("Stage-2 training needs the corpus")
+            s2 = self.cascade_spec.stage2
+            if labels is not None:
+                rows = np.flatnonzero(labels.keep)[:s2.n_train_queries]
+                lf, lg = ltr_training_set(self.index, self.corpus, ql,
+                                          labels.ref_lists, rows)
+            else:
+                feats = []
+                for q in range(min(len(ql.terms), 32)):
+                    docs = rng.randint(0, self.index.n_docs, 64)
+                    feats.append(qd_features(self.index, self.corpus,
+                                             ql.terms[q], ql.mask[q],
+                                             ql.topic[q],
+                                             docs.astype(np.int64)))
+                lf = np.concatenate(feats)
+                lg = (lf[:, 5] + 0.2 * lf[:, 1]).astype(np.float32)
+            ltr = train_ltr(lf, lg, n_trees=s2.ltr_trees)
+
+        if self.cascade_spec.routing.calibrate:
+            # name the operating point from the data: route on the trained
+            # predictors' own distribution (paper trains thresholds the
+            # same way), keeping both pools in play on any collection
+            pk = np.expm1(np.asarray(gbrt.predict(models["k"],
+                                                  jnp.asarray(x))))
+            pt = np.expm1(np.asarray(gbrt.predict(models["t"],
+                                                  jnp.asarray(x))))
+            t_k = float(np.percentile(pk, 60))
+            t_time = float(min(self.budget * 0.75, np.percentile(pt, 75)))
+            self._base_cfg = replace(self._base_cfg, t_k=t_k, t_time=t_time)
+            # fold the resolved thresholds back into the spec so
+            # to_json() captures the *operating* point, not the template —
+            # a round-tripped spec then serves bit-identically
+            self.cascade_spec = replace(
+                self.cascade_spec,
+                routing=replace(self.cascade_spec.routing, t_k=t_k,
+                                t_time=t_time))
+        return self.set_models(models, ltr)
+
+    # ------------------------------------------------------------------
+    # stages
+    # ------------------------------------------------------------------
+
+    def stage0(self, terms: np.ndarray, mask: np.ndarray):
+        """All three predictions in one fused device call: (pk, pr, pt)."""
+        if self.models is None:
+            raise RuntimeError("no Stage-0 models: call fit() or "
+                               "set_models() first")
+        x = F.extract(self.term_stats, self.df, jnp.asarray(terms),
+                      jnp.asarray(mask))
+        if self._stacked is not None:
+            p = np.expm1(np.asarray(
+                gbrt.predict_stacked(self._stacked, x, self._stack_depth)))
+            return p[0], p[1], p[2]
+        return tuple(np.expm1(np.asarray(gbrt.predict(self.models[n], x)))
+                     for n in ("k", "rho", "t"))
+
+    def _jass_split(self, terms, mask, rows, rho, cache: dict | None = None):
+        """Resolve the ρ budget to the global impact-level cut and split the
+        cut's work per shard.  Returns (per-shard work list, any_ok).
+
+        ``cache`` memoizes on (rows, rho) for the duration of one served
+        batch — stage-1 budgeting, hedging resolution, and pool feedback
+        all ask for the same splits, and the host-side level-table gather
+        is the heaviest numpy work in the serve path.
+        """
+        key = None
+        if cache is not None:
+            key = (np.asarray(rows).tobytes(),
+                   np.asarray(rho, np.float64).tobytes())
+            if key in cache:
+                return cache[key]
+        m = (mask[rows] > 0)[:, :, None]
+        totals = [(lc[terms[rows]] * m).sum(axis=1)       # (R, n_levels)
+                  for lc in self._level_cum_host]
+        total_g = totals[0] if len(totals) == 1 else np.sum(totals, axis=0)
+        ok = total_g <= np.asarray(rho).reshape(-1, 1)
+        lstar = np.argmax(ok, axis=1)
+        any_ok = ok.any(axis=1)
+        rr = np.arange(len(rows))
+        work_s = [np.where(any_ok, t[rr, lstar], 0) for t in totals]
+        if key is not None:
+            cache[key] = (work_s, any_ok)
+        return work_s, any_ok
+
+    def _jass_time(self, terms, mask, cache: dict | None = None):
+        """Deterministic JASS time under scatter-gather: the ρ budget
+        resolves to a global level cut, each shard's slice of the cut costs
+        its own work, and the query waits for the slowest shard."""
+        def fn(rows, rho):
+            work_s, _ = self._jass_split(terms, mask, rows, rho, cache)
+            t = np.stack([self.cost.saat_time(w.astype(np.float64))
+                          for w in work_s])
+            return self.cost.gather_time(t)
+        return fn
+
+    def stage1(self, terms: np.ndarray, mask: np.ndarray, routed):
+        """Public alias of :meth:`_stage1_full` (shims may narrow the
+        return signature; ``serve`` always uses the full form)."""
+        return self._stage1_full(terms, mask, routed)
+
+    def _stage1_full(self, terms: np.ndarray, mask: np.ndarray, routed,
+                     cache: dict | None = None):
+        """Fan the routed sub-batches out across every shard's batched
+        engine and merge the per-shard top-k.
+
+        Returns (topk, t_bmw, t_shards): merged global candidates, the
+        scatter-gather BMW time per query, and the (n_shards, Q) per-shard
+        engine-time matrix that feeds the replica pool's EWMA estimates.
+        """
+        q = terms.shape[0]
+        ns = self.n_shards
+        topk = np.zeros((q, self.k_serve), np.int64)
+        t_bmw = np.zeros(q)
+        t_shards = np.zeros((ns, q))
+
+        if len(routed.jass_rows):
+            rows = routed.jass_rows
+            rho_rows = routed.rho[rows]
+            if ns > 1:
+                # one global level cut → per-shard budgets that reproduce
+                # exactly the single-shard posting set (see module docstring)
+                work_s, any_ok = self._jass_split(terms, mask, rows,
+                                                  rho_rows, cache)
+                rho_per_shard = [np.where(any_ok, w, -1.0).astype(np.float64)
+                                 for w in work_s]
+            else:
+                rho_per_shard = [rho_rows]
+            sc_list, id_list = [], []
+            for s in range(ns):
+                res = saat_serve(self.shards[s], jnp.asarray(terms[rows]),
+                                 jnp.asarray(mask[rows]),
+                                 jnp.asarray(rho_per_shard[s]),
+                                 n_docs=self.shard_specs[s].n_docs,
+                                 k=self.k_serve,
+                                 cap=int(self.sched.cfg.rho_max),
+                                 tile_d=self.shard_specs[s].tile_d,
+                                 backend=self.backend)
+                sc_list.append(res.topk_scores)
+                id_list.append(res.topk_docs + self.doc_lo[s])
+                t_shards[s, rows] = self.cost.saat_time(
+                    np.asarray(res.work).astype(np.float64))
+            if ns == 1:
+                topk[rows] = np.asarray(id_list[0])
+            else:
+                ids, _ = merge_shard_topk(sc_list, id_list, self.k_serve)
+                topk[rows] = np.asarray(ids)
+
+        if len(routed.bmw_rows):
+            rows = routed.bmw_rows
+            sc_list, id_list = [], []
+            for s in range(ns):
+                spec_s = self.shard_specs[s]
+                qcap = query_lane_budget(self._df_host[s], terms[rows],
+                                         mask[rows])
+                res = daat_serve(self.shards[s], jnp.asarray(terms[rows]),
+                                 jnp.asarray(mask[rows]),
+                                 jnp.ones(len(rows), jnp.float32),
+                                 n_docs=spec_s.n_docs,
+                                 n_blocks=spec_s.n_blocks,
+                                 block_size=spec_s.block_size,
+                                 k=self.k_serve, cap=spec_s.max_df,
+                                 bcap=spec_s.max_blocks_per_term, qcap=qcap,
+                                 tile_d=spec_s.tile_d, backend=self.backend)
+                sc_list.append(res.topk_scores)
+                id_list.append(res.topk_docs + self.doc_lo[s])
+                t_shards[s, rows] = self.cost.daat_time(
+                    np.asarray(res.work), np.asarray(res.blocks))
+            if ns == 1:
+                topk[rows] = np.asarray(id_list[0])
+            else:
+                ids, _ = merge_shard_topk(sc_list, id_list, self.k_serve)
+                topk[rows] = np.asarray(ids)
+            t_bmw[rows] = self.cost.gather_time(t_shards[:, rows])
+        return topk, t_bmw, t_shards
+
+    def stage2(self, terms, mask, topics, cand, k_per_query) -> CascadeResult:
+        """Batched LTR re-rank of the merged Stage-1 candidate grid (the
+        re-ranker sees global doc ids, so it is shard-agnostic)."""
+        backend = resolve_backend(self.backend)
+        qcap = None
+        if backend != "jnp":
+            qcap = query_lane_budget(self.index.df, terms, mask)
+        return rerank_batched(self.s2, self.ltr, terms, mask, topics,
+                              cand, k_per_query, t_final=self.t_final,
+                              n_iter=self.n_iter, backend=backend, qcap=qcap,
+                              lane_need=qcap)
+
+    # ------------------------------------------------------------------
+    # replica-pool bookkeeping
+    # ------------------------------------------------------------------
+
+    def _pool_route(self, routed, n_queries: int):
+        """Pick one replica of every partition for each query (its routed
+        mirror; hedged queries also occupy the JASS mirror)."""
+        is_jass = np.zeros(n_queries, bool)
+        is_jass[routed.jass_rows] = True
+        picks = [self.pool.route_query(JASS if is_jass[i] else BMW)
+                 for i in range(n_queries)]
+        hedge_picks = {int(i): self.pool.route_query(JASS)
+                       for i in routed.hedged_rows}
+        return picks, hedge_picks
+
+    def _pool_complete(self, terms, mask, routed, picks, hedge_picks,
+                       t_shards, cache: dict | None = None):
+        """Feed observed per-(query, shard) latencies back into the pool."""
+        for i, reps in enumerate(picks):
+            if reps is None:
+                continue
+            for s, r in enumerate(reps):
+                self.pool.complete(r, latency=float(t_shards[s, i]))
+        if hedge_picks:
+            rows = np.fromiter(hedge_picks, dtype=np.int64)
+            work_s, _ = self._jass_split(terms, mask, rows,
+                                         routed.rho[rows], cache)
+            t_h = np.stack([self.cost.saat_time(w.astype(np.float64))
+                            for w in work_s])
+            for j, i in enumerate(rows):
+                reps = hedge_picks[int(i)]
+                if reps is None:
+                    continue
+                for s, r in enumerate(reps):
+                    self.pool.complete(r, latency=float(t_h[s, j]))
+        self._batches += 1
+        every = self.cascade_spec.deploy.rebalance_every
+        if every and self._batches % every == 0:
+            n_j = len(routed.jass_rows)
+            n_b = len(routed.bmw_rows)
+            if n_j + n_b:
+                self.pool.rebalance(n_j / (n_j + n_b))
+
+    # ------------------------------------------------------------------
+    # end to end
+    # ------------------------------------------------------------------
+
+    def serve(self, terms: np.ndarray, mask: np.ndarray,
+              topics: np.ndarray | None = None) -> PipelineResult:
+        q = terms.shape[0]
+        pk, pr, pt = self.stage0(terms, mask)
+        routed = self.sched.route(pk, pr, pt)
+        # route replicas before the engines run so the pool sees the whole
+        # batch in flight (power-of-two-choices balances against inflight)
+        picks, hedge_picks = self._pool_route(routed, q)
+        split_cache: dict = {}
+        topk, t_bmw, t_shards = self._stage1_full(terms, mask, routed,
+                                                  split_cache)
+
+        lat01 = self.sched.resolve_times(
+            routed, t_bmw, self._jass_time(terms, mask, split_cache))
+        t0 = np.full(q, self.cost.predict_us)
+        stage_latency = {"stage0": t0, "stage1": lat01 - t0}
+
+        final = None
+        used = None
+        if self.ltr is not None:
+            if topics is None:
+                raise ValueError("Stage-2 re-ranking needs per-query topics")
+            k2 = np.minimum(routed.k, self.k_serve)
+            res2 = self.stage2(terms, mask, topics, topk.astype(np.int32), k2)
+            final, used = res2.final, res2.candidates_used
+            stage_latency["stage2"] = self.cost.ltr_time(used)
+        else:
+            stage_latency["stage2"] = np.zeros(q)
+
+        self._pool_complete(terms, mask, routed, picks, hedge_picks,
+                            t_shards, split_cache)
+
+        lat = lat01 + stage_latency["stage2"]
+        stats = dict(self.sched.stats)
+        stats.update(percentiles(lat))
+        n_over, pct = over_budget(lat, self.budget)
+        stats["over_budget"] = n_over
+        stats["over_budget_pct"] = pct
+        stats["stages"] = {name: percentiles(t)
+                           for name, t in stage_latency.items()
+                           if np.any(t > 0)}
+        stats["n_shards"] = self.n_shards
+        stats["pool"] = self.pool.stats()
+        self._last_stats = stats
+        return PipelineResult(topk=topk, final=final, candidates_used=used,
+                              latency=lat, stage_latency=stage_latency,
+                              stats=stats)
+
+    def stats(self) -> dict:
+        """Deployment-level health: spec identity, shard layout, scheduler
+        counters, replica-pool health, and the last batch's tail."""
+        s = {
+            "spec": self.cascade_spec.name,
+            "n_shards": self.n_shards,
+            "shard_docs": [sp.n_docs for sp in self.shard_specs],
+            "replicas": self.cascade_spec.deploy.replicas,
+            "batches": self._batches,
+            "scheduler": dict(self.sched.stats),
+            "pool": self.pool.stats(),
+        }
+        if self._last_stats:
+            s["last_batch"] = {k: self._last_stats[k]
+                               for k in ("p50", "p99", "p99.99", "max",
+                                         "over_budget", "over_budget_pct")
+                               if k in self._last_stats}
+        return s
