@@ -1,0 +1,206 @@
+"""Tail-guarantee certification: the budget-enforcement subsystem vs the
+seed scheduler, on the same trace, at bit-identical output.
+
+The paper's headline claim is a *hard* response-time guarantee at 99.99 %:
+budget-blowing executions are detected at ``budget·hedge_deadline`` and
+re-issued to JASS with a **small** ρ cap, so the worst case is
+``budget·d + ρ_late·c_s`` — under the budget whenever
+``ρ_late ≤ SchedulerConfig.max_late_rho(cost)``.  The seed implementation
+re-issued with ``min(ρ, rho_max)``, which ``clamp_parameters`` had already
+applied — a no-op that left the tail unbounded.
+
+This benchmark serves one trace through two systems sharing the index,
+Stage-0 predictors, LTR model, and routing thresholds:
+
+* **seed-mode** — ``late_rho = rho_max`` (the no-op re-issue) and
+  ``enforce_budget=False`` (no JASS deadline re-route, no Stage-2 trim):
+  the seed scheduler's semantics, which must leak >= 1 violation;
+* **enforced** — a ``late_rho`` sized from the cost model so the analytic
+  bound collapses to the budget: must show 0 violations.
+
+Because hedging only affects *latency resolution* (results come from the
+mirrors either way, and the Stage-2 reservation guarantees the candidate
+trim never fires when the Stage-1 bound holds), the Stage-1 top-k and
+final top-t must be bit-identical between the two runs on the jnp
+backend — the guarantee costs nothing in effectiveness on a conforming
+trace.  The budget is picked from the raw (unhedged) latency distribution
+so the trace genuinely stresses the tail.
+
+Emits ``results/BENCH_tail.json``; the CLI exits non-zero if the enforced
+run has any violation, if the seed run leaks none (regression not
+demonstrated), or if outputs diverge — CI runs it as a smoke.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import write_bench_artifact
+
+
+def run_tail(q_batch: int = 256, n_docs: int = 8192, seed: int = 7,
+             pcts: tuple = (85, 70, 50), backend: str = "jnp") -> dict:
+    from repro.configs.cascade_presets import get_preset
+    from repro.index.corpus import CorpusParams, build_corpus, build_queries
+    from repro.serving.scheduler import SchedulerConfig
+    from repro.serving.spec import BackendSpec
+    from repro.serving.system import build_system
+
+    corpus = build_corpus(CorpusParams(n_docs=n_docs,
+                                       vocab=max(n_docs // 2, 2048),
+                                       avg_doclen=96, zipf_a=1.05,
+                                       seed=seed))
+    base = dataclasses.replace(get_preset("paper_200ms"),
+                               backend=BackendSpec(backend=backend))
+    ql = build_queries(corpus, q_batch, stop_k=base.index.stop_k,
+                       seed=seed + 4)
+
+    fit_sys = build_system(base, corpus)
+    fit_sys.fit(ql, None, seed=seed)
+    index, models, ltr = fit_sys.index, fit_sys.models, fit_sys.ltr
+    cost = fit_sys.cost
+    # every configuration below routes with the SAME calibrated thresholds
+    # and never adapts them, so the seed/enforced comparison is pure
+    base = dataclasses.replace(
+        base, routing=dataclasses.replace(
+            base.routing, t_k=fit_sys._base_cfg.t_k,
+            t_time=fit_sys._base_cfg.t_time, calibrate=False,
+            adapt_every=0))
+
+    def system(**routing_kw):
+        spec = dataclasses.replace(
+            base, routing=dataclasses.replace(base.routing, **routing_kw))
+        return build_system(spec, index, corpus=corpus, models=models,
+                            ltr=ltr)
+
+    # raw tail: no hedging, no enforcement, effectively infinite budget —
+    # the latency distribution the budget must be chosen against
+    probe = system(budget=1e9, enable_hedging=False, enforce_budget=False)
+    lat_raw = probe.serve(ql.terms, ql.mask, ql.topic).latency
+
+    from repro.serving.latency import budget_attribution
+    chosen = None
+    for pct in pcts:
+        budget = float(np.percentile(lat_raw, pct))
+        budget1 = budget_attribution(budget, cost,
+                                     base.stage2.k_serve)["stage1"]
+        if budget1 <= 0:
+            continue
+        probe_cfg = SchedulerConfig(budget=budget1,
+                                    hedge_deadline=base.routing.hedge_deadline)
+        late_rho = min(probe_cfg.max_late_rho(cost), base.routing.rho_min)
+        if late_rho < 1:
+            continue
+
+        seed_sys = system(budget=budget, late_rho=base.routing.rho_max,
+                          enforce_budget=False)
+        enf_sys = system(budget=budget, late_rho=late_rho,
+                         enforce_budget=True)
+        res_seed = seed_sys.serve(ql.terms, ql.mask, ql.topic)
+        res_enf = enf_sys.serve(ql.terms, ql.mask, ql.topic)
+        cand = (pct, budget, late_rho, seed_sys, enf_sys, res_seed,
+                res_enf)
+        if res_seed.stats["over_budget"] >= 1 and chosen is None:
+            chosen = cand
+        # keep lowering the budget until the *BMW* no-op late hedge is
+        # exercised too (seed late_hedged >= 1), not just the JASS leak —
+        # the headline fix must be on the certified path
+        if (res_seed.stats["over_budget"] >= 1
+                and res_seed.stats["late_hedged"] >= 1):
+            chosen = cand
+            break
+    if chosen is None:
+        raise RuntimeError("no feasible budget found on this trace — "
+                           "raise q_batch/n_docs")
+    pct, budget, late_rho, seed_sys, enf_sys, res_seed, res_enf = chosen
+
+    identical_topk = bool(np.array_equal(res_seed.topk, res_enf.topk))
+    identical_final = bool(np.array_equal(res_seed.final, res_enf.final))
+    bound = enf_sys.worst_case_us()
+    payload = {
+        "config": {"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
+                   "backend": backend, "budget_percentile": pct},
+        "budget": budget,
+        "late_rho": int(late_rho),
+        "raw_max": float(lat_raw.max()),
+        "worst_case_bound": float(bound),
+        "bound_holds": bool(res_enf.latency.max() <= bound + 1e-9),
+        "seed_scheduler": {
+            "over_budget": int(res_seed.stats["over_budget"]),
+            "over_budget_pct": float(res_seed.stats["over_budget_pct"]),
+            "max": float(res_seed.latency.max()),
+            "late_hedged": int(res_seed.stats["late_hedged"]),
+        },
+        "enforced": {
+            "over_budget": int(res_enf.stats["over_budget"]),
+            "over_budget_pct": float(res_enf.stats["over_budget_pct"]),
+            "max": float(res_enf.latency.max()),
+            "late_hedged": int(res_enf.stats["late_hedged"]),
+            "late_hedged_jass": int(res_enf.stats["late_hedged_jass"]),
+            "stage2_trimmed": int(
+                res_enf.stats["budget"]["stage2_trimmed"]),
+            "stage2_skipped": int(
+                res_enf.stats["budget"]["stage2_skipped"]),
+        },
+        "identical_topk": identical_topk,
+        "identical_final": identical_final,
+        "regression_demonstrated": int(res_seed.stats["over_budget"]) >= 1,
+        "bmw_late_hedge_exercised": int(res_seed.stats["late_hedged"]) >= 1,
+        "guarantee_holds": int(res_enf.stats["over_budget"]) == 0,
+    }
+    payload["artifact"] = write_bench_artifact("tail", payload)
+    return payload
+
+
+def render_tail(res: dict) -> str:
+    s, e = res["seed_scheduler"], res["enforced"]
+    lines = [
+        "scheduler,over_budget,over_pct,max_ms,late_hedged",
+        f"seed(no-op late hedge),{s['over_budget']},"
+        f"{s['over_budget_pct']:.2f},{s['max']:.1f},{s['late_hedged']}",
+        f"enforced(late_rho={res['late_rho']}),{e['over_budget']},"
+        f"{e['over_budget_pct']:.2f},{e['max']:.1f},"
+        f"{e['late_hedged']}+{e['late_hedged_jass']}jass",
+        f"budget={res['budget']:.1f} (p{res['config']['budget_percentile']}"
+        f" of raw tail, raw max {res['raw_max']:.1f}); analytic bound "
+        f"{res['worst_case_bound']:.1f} holds={res['bound_holds']}",
+        f"bit-identical: topk={res['identical_topk']} "
+        f"final={res['identical_final']}; stage2 trimmed="
+        f"{e['stage2_trimmed']} skipped={e['stage2_skipped']}",
+    ]
+    return "\n".join(lines)
+
+
+def main() -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--q-batch", type=int, default=256)
+    ap.add_argument("--n-docs", type=int, default=8192)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--backend", default="jnp",
+                    help="jnp gives the bit-identical parity check")
+    args = ap.parse_args()
+    res = run_tail(q_batch=args.q_batch, n_docs=args.n_docs, seed=args.seed,
+                   backend=args.backend)
+    print(render_tail(res))
+    print(f"artifact: {res['artifact']}")
+    checks = {
+        "guarantee_holds": res["guarantee_holds"],
+        "regression_demonstrated": res["regression_demonstrated"],
+        "bmw_late_hedge_exercised": res["bmw_late_hedge_exercised"],
+        "bound_holds": res["bound_holds"],
+    }
+    if args.backend == "jnp":
+        checks["identical_topk"] = res["identical_topk"]
+        checks["identical_final"] = res["identical_final"]
+    failed = [k for k, v in checks.items() if not v]
+    if failed:
+        print(f"TAIL GUARANTEE CHECK FAILED: {', '.join(failed)}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -39,7 +39,7 @@ def main() -> None:
 
     from benchmarks import (bench_engines, bench_heldout, bench_hybrid,
                             bench_kernels, bench_predict_k, bench_predict_rho,
-                            bench_predict_time, bench_system,
+                            bench_predict_time, bench_system, bench_tail,
                             bench_tail_overlap)
     from benchmarks.common import load_experiment
 
@@ -64,6 +64,19 @@ def main() -> None:
     ms = bench_system.run_system()
     print(bench_system.render_system(ms))
     print(f"artifact: {ms['artifact']}")
+
+    _section("Tail guarantee (budget enforcement vs seed scheduler)")
+    tl = bench_tail.run_tail()
+    print(bench_tail.render_tail(tl))
+    print(f"artifact: {tl['artifact']}")
+    if not tl["guarantee_holds"]:
+        raise RuntimeError("tail guarantee regressed: "
+                           f"{tl['enforced']['over_budget']} queries over "
+                           "budget with enforcement on")
+    if not tl["regression_demonstrated"]:
+        raise RuntimeError("tail benchmark lost its teeth: the seed "
+                           "scheduler leaked no violations on this trace "
+                           "(check the budget-percentile selection)")
 
     _section(f"Loading experiment ({args.queries} queries)")
     exp = load_experiment(args.queries)

@@ -34,7 +34,8 @@ def main():
     print("2) oracle labels via MED-RBP reference lists")
     labels = generate_labels(system.index, corpus, ql,
                              LabelConfig(max_k=2048, batch=200,
-                                         rho_grid=(256, 1024, 4096, 16384)))
+                                         rho_grid=(256, 1024, 4096, 16384)),
+                             cost=system.cost)
     print(f"   oracle k:   median={np.median(labels.oracle_k):.0f} "
           f"mean={labels.oracle_k.mean():.0f} (heavy-tailed)")
     print(f"   oracle rho: median={np.median(labels.oracle_rho):.0f}")

@@ -26,6 +26,13 @@ Every preset trains with ``RoutingSpec.calibrate=True``, so the routing
 thresholds (t_k, t_time) are re-anchored to the trained predictors'
 distribution at ``fit`` time — the spec names the trade-off, the data
 names the thresholds.
+
+Every preset also ships the hard-guarantee knobs explicitly:
+``hedge_deadline`` (straggler detection fraction) and ``late_rho`` (the
+SMALL re-issue cap — the worst case is
+``budget·hedge_deadline + ρ_late·c_s``, see ``repro.serving.scheduler``),
+with ``enforce_budget=True`` so the deadline re-route covers JASS routes
+and Stage-2 grids are trimmed when a query's budget is already spent.
 """
 
 from __future__ import annotations
@@ -40,7 +47,8 @@ def _paper_200ms() -> CascadeSpec:
     return CascadeSpec(
         name="paper_200ms",
         routing=RoutingSpec(algorithm=2, budget=200.0, rho_max=1 << 18,
-                            calibrate=True),
+                            hedge_deadline=0.5, late_rho=4096,
+                            adapt_every=1, calibrate=True),
         stage2=Stage2Spec(enabled=True, k_serve=128, t_final=10),
         deploy=DeploySpec(n_shards=1, replicas=2),
     )
@@ -50,7 +58,8 @@ def _throughput() -> CascadeSpec:
     return CascadeSpec(
         name="throughput",
         routing=RoutingSpec(algorithm=2, budget=120.0, rho_max=1 << 16,
-                            enable_hedging=False, calibrate=True),
+                            enable_hedging=False, hedge_deadline=0.5,
+                            late_rho=2048, calibrate=True),
         stage2=Stage2Spec(enabled=True, k_serve=64, t_final=10),
         deploy=DeploySpec(n_shards=1, replicas=2),
     )
@@ -60,6 +69,7 @@ def _quality() -> CascadeSpec:
     return CascadeSpec(
         name="quality",
         routing=RoutingSpec(algorithm=2, budget=400.0, rho_max=1 << 18,
+                            hedge_deadline=0.6, late_rho=8192,
                             calibrate=True),
         stage2=Stage2Spec(enabled=True, k_serve=256, t_final=20,
                           ltr_trees=64),
@@ -71,6 +81,7 @@ def _stage1_only() -> CascadeSpec:
     return CascadeSpec(
         name="stage1_only",
         routing=RoutingSpec(algorithm=2, budget=200.0, rho_max=1 << 18,
+                            hedge_deadline=0.5, late_rho=4096,
                             calibrate=True),
         stage2=Stage2Spec(enabled=False, k_serve=128, t_final=10),
         deploy=DeploySpec(n_shards=1, replicas=2),

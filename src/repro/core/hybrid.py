@@ -7,8 +7,11 @@ index mirror serves it and with what parameters:
                                 else               → BMW(P_k), rank-safe
 * Algorithm 2 (``Hybrid_h``):  P_k > T_k OR P_t > T_t → JASS, else BMW
 
-ρ is always capped at ρ_max, which is what provides the worst-case response
-time guarantee (ρ_max · per-posting cost < budget).
+ρ is always capped at ρ_max; operating points whose ρ_max · per-posting
+cost is under the budget get the worst-case guarantee from the cap alone.
+For the large-ρ_max presets the guarantee comes from the scheduler's
+deadline re-route instead (`repro.serving.scheduler`, "Guarantee
+accounting"): stragglers are re-issued with the small `late_rho` cap.
 
 These are pure routing functions over arrays; the online path
 (`repro.serving.scheduler`) applies the same logic per request batch.

@@ -1,0 +1,215 @@
+"""Spec-driven serving dry-run: cost a :class:`CascadeSpec` against a query
+log *before* building the index.
+
+The mesh dry-run (``repro.launch.dryrun``) answers "does this model fit and
+what do the rooflines say" without training; this is the serving-side
+counterpart: given an operating point (preset or spec JSON) and a corpus +
+query trace, it predicts the cascade's latency distribution, budget
+violations, and the hard worst-case bound from *collection statistics
+alone* — document frequencies read straight off the corpus postings, no
+inverted index, tile mirrors, or trained predictors required.  An operator
+can therefore cost a ``DeploySpec`` (shards × replicas, ρ caps, budget,
+late-hedge knobs) in seconds and only then pay for the build.
+
+The work proxies are deliberately conservative upper bounds:
+
+* BMW/DAAT work per query = the full posting mass of its terms scaled by
+  ``daat_prune`` (1.0 = exhaustive upper bound; the paper's dynamic
+  pruning typically evaluates far less);
+* JASS/SAAT work = ``min(ρ, mass)`` — the anytime traversal can never do
+  more than its budget nor more than the postings that exist;
+* scatter-gather splits work uniformly across ``n_shards`` doc-range
+  shards (the expectation under random doc placement) and charges
+  ``CostModel.gather_time``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun_cascade --preset paper_200ms
+  PYTHONPATH=src python -m repro.launch.dryrun_cascade \
+      --spec-json spec.json --n-docs 65536 --queries 31642 --out dry.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.index.corpus import Corpus, QueryLog, build_queries
+from repro.serving.latency import (CostModel, budget_attribution,
+                                   over_budget, percentiles, stage2_afford)
+from repro.serving.scheduler import StageZeroScheduler
+from repro.serving.spec import CascadeSpec
+from repro.serving.system import scheduler_config
+
+# bytes per posting in the device mirrors: docid+impact int32 lanes (SAAT)
+# + docid+score+block metadata (DAAT) — matches serving/latency.py
+_MIRROR_BYTES_PER_POSTING = 8 + 10
+
+
+def corpus_df(corpus: Corpus, stop_k: int = 0) -> np.ndarray:
+    """Per-term document frequencies straight off the corpus postings —
+    the only collection statistic the dry-run needs (no index build).
+    ``stop_k`` zeroes the stoplisted most-frequent terms, matching what
+    ``build_index`` would drop."""
+    df = np.bincount(corpus.postings_term, minlength=corpus.vocab)
+    df[:stop_k] = 0
+    return df
+
+
+def dryrun(spec: CascadeSpec, corpus: Corpus, ql: QueryLog | None = None,
+           n_queries: int = 2000, seed: int = 7,
+           daat_prune: float = 1.0) -> dict:
+    """Modeled cascade latency for ``spec`` over a query log; returns the
+    percentile table, violations with and without enforcement, the analytic
+    worst-case bound, and a deployment size estimate."""
+    spec.validate()
+    cost = getattr(CostModel, spec.backend.cost)()
+    df = corpus_df(corpus, spec.index.stop_k).astype(np.float64)
+    if ql is None:
+        ql = build_queries(corpus, n_queries, stop_k=spec.index.stop_k,
+                           seed=seed)
+    q = len(ql.terms)
+    ns = spec.deploy.n_shards
+    mass = (df[ql.terms] * (ql.mask > 0)).sum(axis=1)
+
+    # Stage-0 proxy predictions: the same posting-mass recipe fit() uses
+    # for pseudo-labels, so routing exercises both mirrors realistically
+    rng = np.random.RandomState(seed)
+    noise = [np.exp(rng.randn(q) * 0.3) for _ in range(3)]
+    pred_k = mass * 0.05 * noise[0]
+    pred_rho = mass * 0.5 * noise[1]
+    work_bmw = mass * daat_prune
+    blocks_bmw = work_bmw / spec.index.block_size
+    pred_t = cost.daat_time(work_bmw, blocks_bmw) * noise[2]
+
+    # the same budget attribution SearchSystem.set_models applies
+    cfg = scheduler_config(spec.routing)
+    reserve = budget_attribution(
+        cfg.budget, cost,
+        spec.stage2.k_serve if spec.stage2.enabled else None)
+    reserve2, budget1 = reserve["stage2"], reserve["stage1"]
+
+    def shardwise(time_fn, work, *extra):
+        per = [time_fn(work / ns, *(e / ns for e in extra))
+               for _ in range(ns)]
+        return cost.gather_time(np.stack(per))
+
+    t_bmw = shardwise(cost.daat_time, work_bmw, blocks_bmw)
+
+    def jass_fn(rows, rho):
+        work = np.minimum(np.asarray(rho, np.float64), mass[rows])
+        return shardwise(cost.saat_time, work)
+
+    out = {}
+    for mode, mode_cfg in (
+            ("enforced", dataclasses.replace(cfg, budget=budget1)),
+            ("unenforced", dataclasses.replace(
+                cfg, budget=budget1, enforce_budget=False,
+                late_rho=cfg.rho_max))):
+        sched = StageZeroScheduler(mode_cfg, cost)
+        routed = sched.route(pred_k, pred_rho, pred_t)
+        lat01 = sched.resolve_times(routed, t_bmw, jass_fn)
+        lat = lat01
+        trimmed = skipped = 0
+        if spec.stage2.enabled:
+            k2 = np.minimum(routed.k, spec.stage2.k_serve)
+            if mode_cfg.enforce_budget:
+                afford = stage2_afford(cost, cfg.budget - lat01,
+                                       spec.stage2.k_serve)
+                trimmed = int(np.sum((0 < afford) & (afford < k2)))
+                skipped = int(np.sum((afford == 0) & (k2 > 0)))
+                k2 = np.minimum(k2, afford)
+            lat = lat01 + np.where(k2 > 0, cost.ltr_time(k2), 0.0)
+        n_over, pct = over_budget(lat, cfg.budget)
+        out[mode] = {"percentiles": percentiles(lat),
+                     "over_budget": n_over, "over_budget_pct": pct,
+                     "routed": {k: int(sched.stats[k]) for k in
+                                ("jass", "bmw", "hedged", "late_hedged",
+                                 "late_hedged_jass")},
+                     "stage2_trimmed": trimmed, "stage2_skipped": skipped}
+
+    n_postings = int(corpus.n_postings)
+    enforced_cfg = dataclasses.replace(cfg, budget=budget1)
+    out["config"] = {
+        "spec": spec.name, "n_queries": q, "n_shards": ns,
+        "replicas": spec.deploy.replicas, "budget": cfg.budget,
+        "stage1_budget": budget1, "daat_prune": daat_prune,
+        "worst_case_bound": (enforced_cfg.worst_case_us(cost, ns)
+                             + reserve2),
+        "max_late_rho": enforced_cfg.max_late_rho(cost),
+        "late_rho": enforced_cfg.resolved_late_rho(),
+    }
+    out["deploy_estimate"] = {
+        "n_postings": n_postings,
+        "mirror_bytes_per_shard": (n_postings * _MIRROR_BYTES_PER_POSTING
+                                   // ns),
+        "total_replica_bytes": (n_postings * _MIRROR_BYTES_PER_POSTING
+                                * spec.deploy.replicas),
+    }
+    return out
+
+
+def render(res: dict) -> str:
+    c = res["config"]
+    lines = [f"dryrun spec={c['spec']} shards={c['n_shards']} "
+             f"budget={c['budget']:.1f} (stage-1 {c['stage1_budget']:.1f}) "
+             f"late_rho={c['late_rho']} (max admissible "
+             f"{c['max_late_rho']}) bound={c['worst_case_bound']:.1f}",
+             "mode,p50,p99,p99.99,max,over_budget,late_hedged"]
+    for mode in ("enforced", "unenforced"):
+        r = res[mode]
+        p = r["percentiles"]
+        late = r["routed"]["late_hedged"] + r["routed"]["late_hedged_jass"]
+        lines.append(f"{mode},{p['p50']:.1f},{p['p99']:.1f},"
+                     f"{p['p99.99']:.1f},{p['max']:.1f},"
+                     f"{r['over_budget']},{late}")
+    d = res["deploy_estimate"]
+    lines.append(f"deploy: {d['n_postings']} postings, "
+                 f"{d['mirror_bytes_per_shard'] / 1e6:.1f} MB mirror/shard, "
+                 f"{d['total_replica_bytes'] / 1e6:.1f} MB total replicas")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="paper_200ms")
+    ap.add_argument("--spec-json", default=None,
+                    help="cost a serialized CascadeSpec instead of a preset")
+    ap.add_argument("--n-docs", type=int, default=16384)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--queries", type=int, default=2000)
+    ap.add_argument("--shards", type=int, default=None)
+    ap.add_argument("--daat-prune", type=float, default=1.0,
+                    help="fraction of posting mass BMW evaluates "
+                         "(1.0 = exhaustive upper bound)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.configs.cascade_presets import get_preset
+    from repro.index.corpus import CorpusParams, build_corpus
+
+    if args.spec_json:
+        with open(args.spec_json) as f:
+            spec = CascadeSpec.from_json(f.read())
+    else:
+        spec = get_preset(args.preset)
+    if args.shards is not None:
+        spec = dataclasses.replace(
+            spec, deploy=dataclasses.replace(spec.deploy,
+                                             n_shards=args.shards))
+    corpus = build_corpus(CorpusParams(n_docs=args.n_docs, vocab=args.vocab,
+                                       avg_doclen=150, zipf_a=1.05))
+    res = dryrun(spec, corpus, n_queries=args.queries,
+                 daat_prune=args.daat_prune)
+    print(render(res))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=2, default=float)
+            f.write("\n")
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

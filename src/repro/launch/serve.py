@@ -39,6 +39,10 @@ def main():
                          "(CI smokes)")
     ap.add_argument("--spec-json", default=None,
                     help="write the resolved spec to this path and exit")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="cost the resolved spec against the query log "
+                         "WITHOUT building the index (repro.launch."
+                         "dryrun_cascade) and exit")
     args = ap.parse_args()
 
     from repro.configs.cascade_presets import get_preset
@@ -69,14 +73,21 @@ def main():
     print("[serve] building collection ...")
     corpus = build_corpus(CorpusParams(n_docs=args.n_docs, vocab=args.vocab,
                                        avg_doclen=150, zipf_a=1.05))
+    if args.dryrun:
+        from repro.launch.dryrun_cascade import dryrun, render
+        print(render(dryrun(spec, corpus, n_queries=args.queries)))
+        return
     system = build_system(spec, corpus)
     ql = build_queries(corpus, args.queries, stop_k=spec.index.stop_k)
 
     labels = None
     if not args.pseudo_labels:
         print("[serve] generating oracle labels ...")
+        # label the trace with the SYSTEM's cost model: fit() treats the
+        # label times as measured and regresses them back into the rates
         labels = generate_labels(system.index, corpus, ql,
-                                 LabelConfig(max_k=4096, batch=256))
+                                 LabelConfig(max_k=4096, batch=256),
+                                 cost=system.cost)
     print("[serve] fitting Stage-0 predictors"
           + ("" if args.no_ltr or not spec.stage2.enabled
              else " + Stage-2 LTR model") + " ...")
@@ -87,7 +98,15 @@ def main():
                        ql.topic if system.ltr is not None else None)
     s = res.stats
     print(f"[serve] routed: jass={s['jass']} bmw={s['bmw']} "
-          f"hedged={s['hedged']} late={s['late_hedged']}")
+          f"hedged={s['hedged']} late={s['late_hedged']}"
+          f"+{s['late_hedged_jass']}jass")
+    b = s["budget"]
+    print(f"[serve] guarantee: enforce={b['enforce']} "
+          f"worst-case bound={b['worst_case_bound']:.1f} "
+          f"(budget {b['total']:.0f}, stage-1 reserve "
+          f"{b['reserve']['stage1']:.1f}); "
+          f"stage-2 trimmed={b['stage2_trimmed']} "
+          f"skipped={b['stage2_skipped']}")
     for name, p in s.get("stages", {}).items():
         print(f"[serve] {name:7s} ms: p50={p['p50']:.2f} p99={p['p99']:.2f} "
               f"max={p['max']:.2f}")

@@ -21,6 +21,25 @@ blockmax_score (DAAT):
 The paper's 200 ms budget on a 50 M-doc Xeon ISN maps to ≈ 200 µs on a v5e
 shard at these rates (same ×10⁶ scale as postings/ISN); all experiments
 report budget-relative numbers so the scale factor is transparent.
+
+Guarantee accounting
+--------------------
+The cascade's hard tail bound decomposes over this model, term by term.
+With ``B`` the *cascade* budget, ``d`` the detection fraction
+(``hedge_deadline``), ``ρ_late`` the late-hedge cap and ``C`` the Stage-2
+candidate width (``k_serve``):
+
+    stage 0:   predict_us                              (unconditional)
+    stage 1:   max(B₁,  d·B₁ + saat_fixed + ρ_late·saat_per_posting)
+               where B₁ = B - predict_us - ltr_time(C)  is the scheduler's
+               reserved first-stage budget
+    stage 2:   ltr_fixed + C·ltr_per_candidate  =  ltr_time(C)
+
+so total ≤ B whenever ``saat_fixed + ρ_late·saat_per_posting ≤ (1-d)·B₁``
+(``SchedulerConfig.max_late_rho`` computes the largest such ρ_late).  The
+roofline constants above are the *static* prior; ``CostModel.regressed``
+replaces them with rates fit to measured (work, latency) pairs so the
+bound is enforced against observed hardware, not the datasheet.
 """
 
 from __future__ import annotations
@@ -96,8 +115,79 @@ class CostModel:
         t = np.asarray(t_shards, np.float64)
         return t.max(axis=0) + self.gather_per_shard_us * (t.shape[0] - 1)
 
+    def regressed(self, *, work_saat=None, t_saat=None, work_daat=None,
+                  blocks_daat=None, t_daat=None,
+                  max_rel_err: float = 0.1) -> "CostModel":
+        """Fold measured (work, latency) pairs back into the model.
+
+        Least-squares fits ``t_saat ≈ f_s + w·c_s`` and
+        ``t_daat ≈ f_d + w·c_d + b·c_b`` and returns a model whose
+        constants are the *measured* rates, replacing the static roofline
+        prior — the online half of the tail guarantee (see module
+        docstring).  A fit is rejected (that term keeps its prior) when it
+        produces non-positive rates or its median relative residual
+        exceeds ``max_rel_err`` — a mis-instrumented trace must not relax
+        the enforcement constants.
+        """
+        import dataclasses
+        updates: dict = {}
+
+        def _fit(a, y, names):
+            sol, *_ = np.linalg.lstsq(a, y, rcond=None)
+            pred = a @ sol
+            rel = np.abs(pred - y) / np.maximum(np.abs(y), 1e-12)
+            if np.any(sol <= 0) or float(np.median(rel)) > max_rel_err:
+                return
+            updates.update(zip(names, (float(s) for s in sol)))
+
+        if t_saat is not None and work_saat is not None and len(t_saat) >= 2:
+            w = np.asarray(work_saat, np.float64)
+            _fit(np.stack([np.ones_like(w), w], axis=1),
+                 np.asarray(t_saat, np.float64),
+                 ("saat_fixed_us", "saat_per_posting_us"))
+        if (t_daat is not None and work_daat is not None
+                and blocks_daat is not None and len(t_daat) >= 3):
+            w = np.asarray(work_daat, np.float64)
+            b = np.asarray(blocks_daat, np.float64)
+            _fit(np.stack([np.ones_like(w), w, b], axis=1),
+                 np.asarray(t_daat, np.float64),
+                 ("daat_fixed_us", "daat_per_posting_us",
+                  "daat_per_block_us"))
+        return dataclasses.replace(self, **updates) if updates else self
+
+
+def budget_attribution(budget: float, cost: CostModel,
+                       k_serve: int | None) -> dict:
+    """Split a cascade budget into per-stage reserves (see *Guarantee
+    accounting*): stage 0 gets the unconditional prediction cost, stage 2
+    its deterministic worst case ``ltr_time(k_serve)`` (0 when Stage-2 is
+    disabled — pass ``k_serve=None``), and stage 1 the remainder, which is
+    the budget the scheduler's deadline re-route enforces.  The single
+    source of truth for ``SearchSystem.set_models``, the spec dry-run, and
+    ``bench_tail``."""
+    reserve2 = (float(cost.ltr_time(np.asarray(k_serve)))
+                if k_serve is not None else 0.0)
+    return {"stage0": cost.predict_us,
+            "stage1": max(budget - cost.predict_us - reserve2, 0.0),
+            "stage2": reserve2}
+
+
+def stage2_afford(cost: CostModel, remaining: np.ndarray,
+                  k_serve: int) -> np.ndarray:
+    """Largest per-query candidate count whose ``ltr_time`` fits in the
+    remaining budget, in [0, k_serve].  0 means skip Stage-2 outright; the
+    epsilon keeps an exactly-affordable ``k_serve`` from rounding down."""
+    afford = np.floor((np.asarray(remaining, np.float64)
+                       - cost.ltr_fixed_us)
+                      / max(cost.ltr_per_candidate_us, 1e-12) + 1e-9)
+    return np.clip(afford, 0, k_serve).astype(np.int64)
+
 
 def percentiles(t: np.ndarray) -> dict:
+    t = np.asarray(t)
+    if t.size == 0:
+        raise ValueError("percentiles() needs a non-empty latency array "
+                         "(served batch was empty)")
     return {
         "mean": float(np.mean(t)),
         "p50": float(np.percentile(t, 50)),
@@ -110,5 +200,10 @@ def percentiles(t: np.ndarray) -> dict:
 
 
 def over_budget(t: np.ndarray, budget_us: float) -> tuple[int, float]:
+    """(count, percentage) of queries over budget; an empty batch has no
+    violators (the seed raised ZeroDivisionError here)."""
+    t = np.asarray(t)
+    if t.size == 0:
+        return 0, 0.0
     n = int(np.sum(t > budget_us))
-    return n, 100.0 * n / len(t)
+    return n, 100.0 * n / t.size

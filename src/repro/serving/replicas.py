@@ -149,11 +149,20 @@ class ReplicaPool:
                                  "jass_fraction": want
                                  / cfg.replicas_per_partition})
 
+    def mirror_ewma(self) -> dict:
+        """Mean EWMA latency per mirror over replicas that have served —
+        the pool-side signal ``SearchSystem._adapt_routing`` feeds back
+        into the ``t_time`` routing threshold (None until a mirror has
+        observed traffic)."""
+        out = {}
+        for m in (JASS, BMW):
+            v = [r.ewma_latency for r in self.replicas
+                 if r.mirror == m and r.served]
+            out[m] = float(np.mean(v)) if v else None
+        return out
+
     def stats(self) -> dict:
         healthy = sum(r.healthy for r in self.replicas)
-        ewma = {m: [r.ewma_latency for r in self.replicas
-                    if r.mirror == m and r.served]
-                for m in (JASS, BMW)}
         return {
             "replicas": len(self.replicas),
             "healthy": healthy,
@@ -163,6 +172,5 @@ class ReplicaPool:
             "served": sum(r.served for r in self.replicas),
             "max_inflight": max((r.inflight for r in self.replicas),
                                 default=0),
-            "ewma_latency": {m: (float(np.mean(v)) if v else None)
-                             for m, v in ewma.items()},
+            "ewma_latency": self.mirror_ewma(),
         }

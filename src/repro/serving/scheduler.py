@@ -4,18 +4,44 @@ Receives query batches, runs the Stage-0 predictions (features + GBRT),
 routes each query to the JASS or BMW replica pool (Algorithms 1/2), enforces
 the ρ_max budget cap, and applies straggler mitigation:
 
-* **hedging** — a query routed to BMW whose *predicted* time is within the
-  uncertainty band of the threshold is duplicated onto the JASS mirror; the
-  first responder wins (the JASS copy has a hard deadline by construction).
-* **deadline re-route** — if a BMW execution exceeds the budget fraction
-  `hedge_deadline`, the query is re-issued to JASS with a small ρ (late
-  hedge), bounding the worst case at `budget + ρ_cap·c` — this is the
-  mechanism that turns the paper's 99.99 % into a hard guarantee.
+* **hedging** — a query routed to BMW whose *predicted* time lies inside the
+  uncertainty band ``[T(1-b), T(1+b)]`` around the routing threshold is
+  duplicated onto the JASS mirror; the first responder wins (the JASS copy
+  has a hard deadline by construction).  Queries predicted *far* above the
+  band are not hedged — Algorithm 2 already routed the confidently-slow ones
+  to JASS, and duplicating every slow-predicted straggler would waste a full
+  JASS execution per query.
+* **deadline re-route (late hedge)** — an execution that exceeds the
+  detection deadline ``budget · hedge_deadline`` is re-issued to JASS with
+  the dedicated small ``late_rho`` cap.  This is the mechanism that turns
+  the paper's 99.99 % into a *hard* guarantee.
+
+Guarantee accounting
+--------------------
+With ``B`` the scheduler budget, ``d = hedge_deadline``, ``ρ_late`` the
+late-hedge cap and ``c_s``/``f_s`` the JASS per-posting/fixed costs, every
+query's resolved first-stage time obeys
+
+    t  ≤  max(B,  d·B + f_s + ρ_late·c_s)  + predict_us
+
+term by term: a query either finishes under ``B`` on its own, or it is
+detected at ``d·B`` and re-issued with at most ``ρ_late`` postings of
+anytime JASS work (``f_s + ρ_late·c_s``); Stage-0 prediction cost is paid
+unconditionally.  Choosing ``ρ_late`` so that
+``f_s + ρ_late·c_s ≤ (1-d)·B`` collapses the bound to ``B`` exactly — that
+is what :meth:`SchedulerConfig.max_late_rho` computes and what
+``benchmarks/bench_tail.py`` certifies (0 violations on a full trace).
+With ``enforce_budget`` the same deadline re-route also covers JASS-routed
+queries whose ρ cap alone does not bound them under ``B`` (large
+``rho_max`` operating points), so the bound is cascade-wide, not
+BMW-only.  The seed implementation re-issued with ``min(ρ, rho_max)`` —
+a no-op after ``clamp_parameters`` — leaving the tail unbounded; see
+CHANGES.md PR 4.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -33,6 +59,36 @@ class SchedulerConfig:
     budget: float = 200.0
     hedge_band: float = 0.25            # hedge if pred_t in [T(1-b), T(1+b)]
     enable_hedging: bool = True
+    hedge_deadline: float = 0.5         # detect stragglers at budget * this
+    late_rho: int = 0                   # late-hedge re-issue ρ cap
+                                        # (0 = auto: rho_min)
+    enforce_budget: bool = True         # deadline re-route JASS rows too
+
+    def resolved_late_rho(self) -> int:
+        """The effective late-hedge ρ cap (``late_rho`` or ``rho_min``)."""
+        return int(self.late_rho) if self.late_rho > 0 else int(self.rho_min)
+
+    def max_late_rho(self, cost: CostModel) -> int:
+        """Largest ρ_late for which the worst-case bound collapses to the
+        budget itself: f_s + ρ·c_s ≤ (1 - hedge_deadline) · budget."""
+        slack = (1.0 - self.hedge_deadline) * self.budget - cost.saat_fixed_us
+        if cost.saat_per_posting_us <= 0:
+            return self.rho_max if slack >= 0 else 0
+        return max(int(slack / cost.saat_per_posting_us), 0)
+
+    def worst_case_us(self, cost: CostModel, n_shards: int = 1) -> float:
+        """The documented hard bound on any resolved first-stage latency
+        (see module docstring *Guarantee accounting*)."""
+        gather = cost.gather_per_shard_us * (n_shards - 1)
+        late = float(cost.saat_time(np.float64(self.resolved_late_rho())))
+        reissue = self.budget * self.hedge_deadline + late + gather
+        bound = max(self.budget, reissue)
+        if not self.enforce_budget:
+            # JASS rows are bounded only by their ρ_max-capped traversal
+            bound = max(bound,
+                        float(cost.saat_time(np.float64(self.rho_max)))
+                        + gather)
+        return bound + cost.predict_us
 
 
 @dataclass
@@ -50,7 +106,8 @@ class StageZeroScheduler:
     def __init__(self, cfg: SchedulerConfig, cost: CostModel | None = None):
         self.cfg = cfg
         self.cost = cost or CostModel.paper_scale()
-        self.stats = {"jass": 0, "bmw": 0, "hedged": 0, "late_hedged": 0}
+        self.stats = {"jass": 0, "bmw": 0, "hedged": 0, "late_hedged": 0,
+                      "late_hedged_jass": 0}
 
     def route(self, pred_k: np.ndarray, pred_rho: np.ndarray,
               pred_t: np.ndarray) -> RoutedBatch:
@@ -67,7 +124,11 @@ class StageZeroScheduler:
         jass = ~bmw
         hedged = np.zeros_like(bmw)
         if cfg.enable_hedging:
-            band = (pred_t > cfg.t_time * (1 - cfg.hedge_band)) & bmw
+            # the documented band is two-sided: only *uncertain* predictions
+            # near the threshold hedge; far-above-band queries rely on the
+            # deadline re-route instead of a duplicated JASS execution
+            band = ((pred_t > cfg.t_time * (1 - cfg.hedge_band))
+                    & (pred_t <= cfg.t_time * (1 + cfg.hedge_band)) & bmw)
             hedged = band
         self.stats["jass"] += int(jass.sum())
         self.stats["bmw"] += int(bmw.sum())
@@ -76,20 +137,41 @@ class StageZeroScheduler:
             jass_rows=np.flatnonzero(jass), bmw_rows=np.flatnonzero(bmw),
             hedged_rows=np.flatnonzero(hedged), k=k, rho=rho)
 
+    def _late_hedge(self, routed: RoutedBatch, rows: np.ndarray,
+                    t: np.ndarray, work_jass_fn) -> np.ndarray:
+        """Deadline re-route: detect at ``budget·hedge_deadline``, re-issue
+        with ``min(ρ, late_rho)`` postings of JASS work; the query finishes
+        at whichever execution responds first."""
+        cfg = self.cfg
+        late_cap = np.minimum(routed.rho[rows], cfg.resolved_late_rho())
+        tj = work_jass_fn(rows, late_cap)
+        return np.minimum(t, cfg.budget * cfg.hedge_deadline + tj)
+
     def resolve_times(self, routed: RoutedBatch, t_bmw: np.ndarray,
                       work_jass_fn) -> np.ndarray:
         """Final per-query latency under hedging semantics.
 
         t_bmw: modeled/measured BMW time for every query (used for rows
         routed to BMW); work_jass_fn(rows, rho) -> JASS times for rows.
-        Hedged BMW queries finish at min(bmw, jass); BMW queries that blow
-        the budget are late-hedged: budget_detect + jass re-issue."""
+        Hedged BMW queries finish at min(bmw, jass); any execution that
+        blows the detection deadline is late-hedged — re-issued with the
+        dedicated small ``late_rho`` cap, so the worst case is bounded by
+        ``budget·hedge_deadline + ρ_late·c_s`` (*Guarantee accounting* in
+        the module docstring)."""
         n = len(routed.k)
         t = np.zeros(n)
         cfg = self.cfg
         if len(routed.jass_rows):
-            t[routed.jass_rows] = work_jass_fn(routed.jass_rows,
-                                               routed.rho[routed.jass_rows])
+            rows = routed.jass_rows
+            tj = work_jass_fn(rows, routed.rho[rows])
+            if cfg.enforce_budget:
+                late = tj > cfg.budget
+                if late.any():
+                    tj = tj.copy()
+                    tj[late] = self._late_hedge(routed, rows[late], tj[late],
+                                                work_jass_fn)
+                    self.stats["late_hedged_jass"] += int(late.sum())
+            t[rows] = tj
         if len(routed.bmw_rows):
             tb = t_bmw[routed.bmw_rows].copy()
             hedge_mask = np.isin(routed.bmw_rows, routed.hedged_rows)
@@ -98,13 +180,14 @@ class StageZeroScheduler:
                 tj = work_jass_fn(rows, routed.rho[rows])
                 tb[hedge_mask] = np.minimum(tb[hedge_mask],
                                             tj + self.cost.predict_us)
-            # late hedge: detect at deadline, re-issue to JASS
+            # late hedge: detect at the deadline, re-issue with the SMALL
+            # dedicated cap (the seed used rho_max here — a no-op after
+            # clamp_parameters, leaving the tail unbounded)
             late = tb > cfg.budget
             if late.any():
                 rows = routed.bmw_rows[late]
-                tj = work_jass_fn(rows, np.minimum(routed.rho[rows],
-                                                   cfg.rho_max))
-                tb[late] = np.minimum(tb[late], cfg.budget * 0.5 + tj)
+                tb[late] = self._late_hedge(routed, rows, tb[late],
+                                            work_jass_fn)
                 self.stats["late_hedged"] += int(late.sum())
             t[routed.bmw_rows] = tb
         return t + self.cost.predict_us

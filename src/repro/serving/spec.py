@@ -62,6 +62,14 @@ class RoutingSpec:
     rho_min: int = 4096
     hedge_band: float = 0.25
     enable_hedging: bool = True
+    hedge_deadline: float = 0.5  # straggler detection fraction of the budget
+    late_rho: int = 0            # late-hedge re-issue ρ cap (0 = auto:
+                                 # rho_min) — keep SMALL: the hard bound is
+                                 # budget·hedge_deadline + ρ_late·c_s
+    enforce_budget: bool = True  # cascade-wide enforcement: deadline
+                                 # re-route JASS rows, trim Stage-2 grids
+    adapt_every: int = 0         # batches between online threshold
+                                 # adaptations from pool EWMAs (0 = off)
     calibrate: bool = False     # fit(): set t_k/t_time from the trained
                                 # predictors' distribution
 
@@ -72,6 +80,14 @@ class RoutingSpec:
             raise ValueError("budget must be positive")
         if self.rho_min > self.rho_max:
             raise ValueError("rho_min must not exceed rho_max")
+        if not 0.0 < self.hedge_deadline <= 1.0:
+            raise ValueError("hedge_deadline must be in (0, 1]")
+        if self.late_rho < 0:
+            raise ValueError("late_rho must be >= 0 (0 = auto)")
+        if self.late_rho > self.rho_max:
+            raise ValueError("late_rho must not exceed rho_max")
+        if self.adapt_every < 0:
+            raise ValueError("adapt_every must be >= 0 (0 = off)")
 
 
 @dataclass(frozen=True)
@@ -95,6 +111,8 @@ class BackendSpec:
     """Kernel backend + cost-model selection."""
     backend: str | None = None  # "pallas" | "interpret" | "jnp" | None=auto
     cost: str = "paper_scale"   # CostModel constructor name
+    calibrate_cost: bool = True  # fit(): regress measured work→latency
+                                 # pairs into the CostModel constants
 
     def validate(self) -> None:
         if self.backend not in (None, "pallas", "interpret", "jnp"):

@@ -56,7 +56,8 @@ from repro.isn.saat import saat_serve
 from repro.ltr.cascade import CascadeResult, rerank_batched
 from repro.ltr.ranker import (LTRModel, csr_search_iters, ltr_training_set,
                               qd_features, stage2_arrays, train_ltr)
-from repro.serving.latency import CostModel, over_budget, percentiles
+from repro.serving.latency import (CostModel, budget_attribution,
+                                   over_budget, percentiles, stage2_afford)
 from repro.serving.replicas import BMW, JASS, PoolConfig, ReplicaPool
 from repro.serving.scheduler import SchedulerConfig, StageZeroScheduler
 from repro.serving.spec import CascadeSpec, RoutingSpec
@@ -79,7 +80,9 @@ def scheduler_config(routing: RoutingSpec) -> SchedulerConfig:
         algorithm=routing.algorithm, t_k=routing.t_k, t_time=routing.t_time,
         rho_max=routing.rho_max, rho_min=routing.rho_min,
         budget=routing.budget, hedge_band=routing.hedge_band,
-        enable_hedging=routing.enable_hedging)
+        enable_hedging=routing.enable_hedging,
+        hedge_deadline=routing.hedge_deadline, late_rho=routing.late_rho,
+        enforce_budget=routing.enforce_budget)
 
 
 def routing_spec(cfg: SchedulerConfig) -> RoutingSpec:
@@ -87,7 +90,9 @@ def routing_spec(cfg: SchedulerConfig) -> RoutingSpec:
     return RoutingSpec(
         algorithm=cfg.algorithm, t_k=cfg.t_k, t_time=cfg.t_time,
         rho_max=cfg.rho_max, rho_min=cfg.rho_min, budget=cfg.budget,
-        hedge_band=cfg.hedge_band, enable_hedging=cfg.enable_hedging)
+        hedge_band=cfg.hedge_band, enable_hedging=cfg.enable_hedging,
+        hedge_deadline=cfg.hedge_deadline, late_rho=cfg.late_rho,
+        enforce_budget=cfg.enforce_budget)
 
 
 def build_system(spec: CascadeSpec, corpus_or_index, *, corpus=None,
@@ -174,6 +179,9 @@ class SearchSystem:
             seed=spec.deploy.seed)
         self._batches = 0
         self._last_stats: dict = {}
+        self._budget_reserve = budget_attribution(self.budget, self.cost,
+                                                  None)
+        self._adapt_last = {"late_hedged": 0, "bmw": 0}
 
         self.models: dict | None = None
         self.ltr: LTRModel | None = None
@@ -207,16 +215,19 @@ class SearchSystem:
             self._stacked = None
         self.ltr = ltr
         cfg = self._base_cfg
+        # budget attribution: reserve the unconditional Stage-0 prediction
+        # cost and the (deterministic) worst-case Stage-2 cost, so the
+        # scheduler's deadline re-route enforces the *cascade* budget with
+        # what remains — see "Guarantee accounting" in serving/latency.py
         if ltr is not None:
             if self.corpus is None:
                 raise ValueError("Stage-2 re-ranking needs the corpus "
                                  "(doc topic mixtures)")
             self.s2 = stage2_arrays(self.index, self.corpus)
             self.n_iter = csr_search_iters(int(self.index.df.max()))
-            # reserve the (deterministic) worst-case Stage-2 cost so the
-            # scheduler's late-hedge enforces the *cascade* budget
-            reserve = float(self.cost.ltr_time(np.asarray(self.k_serve)))
-            cfg = replace(cfg, budget=max(cfg.budget - reserve, 0.0))
+        self._budget_reserve = budget_attribution(
+            cfg.budget, self.cost, self.k_serve if ltr is not None else None)
+        cfg = replace(cfg, budget=self._budget_reserve["stage1"])
         self.sched = StageZeroScheduler(cfg, self.cost)
         return self
 
@@ -269,6 +280,19 @@ class SearchSystem:
                 lf = np.concatenate(feats)
                 lg = (lf[:, 5] + 0.2 * lf[:, 1]).astype(np.float32)
             ltr = train_ltr(lf, lg, n_trees=s2.ltr_trees)
+
+        if labels is not None and self.cascade_spec.backend.calibrate_cost:
+            # close the cost-model loop: the label oracle measured per-query
+            # (work, latency) pairs — regress the engine rates from them so
+            # the budget enforcement runs on observed constants, not the
+            # static roofline prior (rejected fits keep the prior)
+            keep = labels.keep
+            self.cost = self.cost.regressed(
+                work_saat=labels.work_exhaustive[keep],
+                t_saat=labels.t_exh[keep],
+                work_daat=labels.work_bmw[keep],
+                blocks_daat=labels.blocks_bmw[keep],
+                t_daat=labels.t_bmw[keep])
 
         if self.cascade_spec.routing.calibrate:
             # name the operating point from the data: route on the trained
@@ -505,18 +529,40 @@ class SearchSystem:
 
         final = None
         used = None
+        enforce = self.sched.cfg.enforce_budget
+        trimmed = skipped = 0
         if self.ltr is not None:
             if topics is None:
                 raise ValueError("Stage-2 re-ranking needs per-query topics")
             k2 = np.minimum(routed.k, self.k_serve)
+            if enforce:
+                # cascade hedge: a query whose Stage-1 time already ate the
+                # budget gets its candidate grid trimmed (masked re-rank) —
+                # or skipped outright — so ltr_time cannot push it over.
+                # When the Stage-1 bound holds, the Stage-2 reservation
+                # guarantees afford >= k_serve and this is a no-op.
+                afford = stage2_afford(self.cost, self.budget - lat01,
+                                       self.k_serve)
+                trimmed = int(np.sum((0 < afford) & (afford < k2)))
+                skipped = int(np.sum((afford == 0) & (k2 > 0)))
+                k2 = np.minimum(k2, afford)
             res2 = self.stage2(terms, mask, topics, topk.astype(np.int32), k2)
             final, used = res2.final, res2.candidates_used
-            stage_latency["stage2"] = self.cost.ltr_time(used)
+            if skipped:
+                # skipped queries serve their Stage-1 order directly (the
+                # rank-safe list) at zero Stage-2 cost
+                skip_rows = np.flatnonzero(k2 == 0)
+                final[skip_rows] = topk[skip_rows, :self.t_final]
+            stage_latency["stage2"] = np.where(
+                used > 0, self.cost.ltr_time(used), 0.0)
         else:
             stage_latency["stage2"] = np.zeros(q)
 
         self._pool_complete(terms, mask, routed, picks, hedge_picks,
                             t_shards, split_cache)
+        every = self.cascade_spec.routing.adapt_every
+        if every and self._batches % every == 0:
+            self._adapt_routing()
 
         lat = lat01 + stage_latency["stage2"]
         stats = dict(self.sched.stats)
@@ -524,15 +570,80 @@ class SearchSystem:
         n_over, pct = over_budget(lat, self.budget)
         stats["over_budget"] = n_over
         stats["over_budget_pct"] = pct
-        stats["stages"] = {name: percentiles(t)
-                           for name, t in stage_latency.items()
-                           if np.any(t > 0)}
+        stats["stages"] = {}
+        for name, t in stage_latency.items():
+            if not np.any(t > 0):
+                continue
+            entry = percentiles(t)
+            # per-stage budget attribution: each stage is accountable to
+            # its reserved share of the cascade budget
+            entry["budget"] = self._budget_reserve[name]
+            entry["over_budget"] = over_budget(t,
+                                               self._budget_reserve[name])[0]
+            stats["stages"][name] = entry
+        stats["budget"] = {
+            "total": self.budget,
+            "reserve": dict(self._budget_reserve),
+            "enforce": enforce,
+            "worst_case_bound": self.worst_case_us(),
+            "stage2_trimmed": trimmed,
+            "stage2_skipped": skipped,
+        }
         stats["n_shards"] = self.n_shards
         stats["pool"] = self.pool.stats()
         self._last_stats = stats
         return PipelineResult(topk=topk, final=final, candidates_used=used,
                               latency=lat, stage_latency=stage_latency,
                               stats=stats)
+
+    def worst_case_us(self) -> float:
+        """The hard analytic bound on any served query's cascade latency:
+        the scheduler's Stage-1 bound (which already pays ``predict_us``)
+        plus the reserved worst-case Stage-2 cost.  With ``enforce_budget``
+        and ``late_rho <= SchedulerConfig.max_late_rho(cost)`` this is at
+        most the cascade budget — the paper's 99.99 % as a hard guarantee
+        (certified on a trace by ``benchmarks/bench_tail.py``)."""
+        return (self.sched.cfg.worst_case_us(self.cost, self.n_shards)
+                + self._budget_reserve["stage2"])
+
+    def _adapt_routing(self):
+        """Close the routing feedback loop from pool EWMAs + scheduler
+        counters (``RoutingSpec.adapt_every``).
+
+        * ``t_time`` tracks the observed mirror balance: when the BMW
+          mirror's EWMA latency rises relative to JASS, the threshold drops
+          and Algorithm 2 routes more traffic to the bounded mirror.
+        * ``hedge_band`` widens after a window that needed late hedges
+          (hedge earlier next time) and decays slowly through clean
+          windows, so duplicated JASS work shrinks when the tail is quiet.
+
+        The adapted values are folded back into ``cascade_spec`` so
+        ``to_json()`` names the *live* operating point.
+        """
+        cfg = self.sched.cfg
+        changed: dict = {}
+        ewma = self.pool.mirror_ewma()
+        e_j, e_b = ewma[JASS], ewma[BMW]
+        if e_j is not None and e_b is not None and e_j + e_b > 0:
+            alpha, b1 = 0.2, cfg.budget
+            target = b1 * float(np.clip(e_j / (e_j + e_b), 0.1, 0.9))
+            changed["t_time"] = float(np.clip(
+                (1 - alpha) * cfg.t_time + alpha * target,
+                0.05 * b1, 0.95 * b1))
+        d_late = self.sched.stats["late_hedged"] \
+            - self._adapt_last["late_hedged"]
+        d_bmw = self.sched.stats["bmw"] - self._adapt_last["bmw"]
+        self._adapt_last = {"late_hedged": self.sched.stats["late_hedged"],
+                            "bmw": self.sched.stats["bmw"]}
+        if d_bmw > 0:
+            band = cfg.hedge_band * (1.25 if d_late > 0 else 0.98)
+            changed["hedge_band"] = float(np.clip(band, 0.05, 0.5))
+        if changed:
+            self.sched.cfg = replace(cfg, **changed)
+            self._base_cfg = replace(self._base_cfg, **changed)
+            self.cascade_spec = replace(
+                self.cascade_spec,
+                routing=replace(self.cascade_spec.routing, **changed))
 
     def stats(self) -> dict:
         """Deployment-level health: spec identity, shard layout, scheduler
@@ -544,6 +655,10 @@ class SearchSystem:
             "replicas": self.cascade_spec.deploy.replicas,
             "batches": self._batches,
             "scheduler": dict(self.sched.stats),
+            "budget": {"total": self.budget,
+                       "reserve": dict(self._budget_reserve),
+                       "enforce": self.sched.cfg.enforce_budget,
+                       "worst_case_bound": self.worst_case_us()},
             "pool": self.pool.stats(),
         }
         if self._last_stats:

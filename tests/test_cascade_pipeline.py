@@ -230,16 +230,19 @@ def test_pipeline_full_cascade_matches_loop(small_collection, stage0_models,
 
 def test_cascade_budget_reserves_stage2(small_collection, stage0_models,
                                         ltr_model):
-    """With an LTR model attached, the scheduler enforces Stage-0+1 against
-    budget - worst-case Stage-2 cost, so the late-hedge guarantee covers
-    the cascade; without one the budget is untouched."""
+    """With an LTR model attached, the scheduler enforces Stage-1 against
+    budget - Stage-0 prediction cost - worst-case Stage-2 cost, so the
+    late-hedge guarantee covers the cascade; without an LTR model only the
+    (unconditional) Stage-0 cost is reserved."""
     corpus, index, ql = small_collection
     x, models = stage0_models
     cfg = SchedulerConfig(budget=30.0, rho_max=1 << 14)
     pipe = CascadePipeline(index, models, cfg, corpus=corpus, ltr=ltr_model,
                            k_serve=64)
     reserve = float(pipe.cost.ltr_time(np.asarray(64)))
-    assert pipe.sched.cfg.budget == pytest.approx(30.0 - reserve)
+    assert pipe.sched.cfg.budget == pytest.approx(
+        30.0 - pipe.cost.predict_us - reserve)
     assert pipe.budget == 30.0                 # reporting uses the full budget
     plain = CascadePipeline(index, models, cfg)
-    assert plain.sched.cfg.budget == 30.0
+    assert plain.sched.cfg.budget == pytest.approx(
+        30.0 - plain.cost.predict_us)

@@ -1,0 +1,394 @@
+"""Tail-guarantee property suite: the late-hedge bound under adversarial
+inputs, the two-sided hedge band, cascade-wide enforcement (JASS deadline
+re-route + Stage-2 trim), spec round-trip of the enforcement knobs, the
+CostModel measured-rate regression, and the spec-driven dry-run.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.labels import LabelSet
+from repro.serving.latency import CostModel, over_budget, percentiles
+from repro.serving.scheduler import SchedulerConfig, StageZeroScheduler
+from repro.serving.spec import BackendSpec, CascadeSpec, RoutingSpec, \
+    Stage0Spec, Stage2Spec
+from repro.serving.system import (build_system, routing_spec,
+                                  scheduler_config)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: the hard bound
+# ---------------------------------------------------------------------------
+
+def _all_bmw_cfg(**kw):
+    """Thresholds no prediction can cross -> every query routes to BMW."""
+    return SchedulerConfig(algorithm=2, t_k=1e18, t_time=1e18, **kw)
+
+
+def test_late_hedge_reissues_with_small_cap():
+    """The re-issue must use min(rho, late_rho), not the rho_max no-op."""
+    cost = CostModel.paper_scale()
+    cfg = _all_bmw_cfg(budget=100.0, rho_min=512, rho_max=1 << 20,
+                       enable_hedging=False)
+    sched = StageZeroScheduler(cfg, cost)
+    n = 16
+    routed = sched.route(np.full(n, 10.0), np.full(n, 1e9), np.zeros(n))
+    assert len(routed.bmw_rows) == n
+
+    seen = []
+
+    def jass(rows, rho):
+        seen.append(np.asarray(rho))
+        return cost.saat_time(np.asarray(rho, np.float64))
+
+    t = sched.resolve_times(routed, np.full(n, 1e12), jass)
+    assert sched.stats["late_hedged"] == n
+    assert all((r <= cfg.resolved_late_rho()).all() for r in seen)
+    # every query was late-hedged: detect at d·B, re-issue <= 512 postings
+    reissue = (cfg.budget * cfg.hedge_deadline
+               + float(cost.saat_time(np.float64(512))) + cost.predict_us)
+    assert t.max() == pytest.approx(reissue)
+    bound = cfg.worst_case_us(cost)
+    assert bound == pytest.approx(max(cfg.budget + cost.predict_us, reissue))
+    assert t.max() <= bound + 1e-9
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("enforce", [True, False])
+def test_adversarial_tail_bound(seed, enforce):
+    """Worst-case t_bmw (up to 1e12) and worst-case JASS work (the full rho
+    budget): max resolved latency must stay under the documented bound."""
+    cost = CostModel.paper_scale()
+    cfg = SchedulerConfig(algorithm=2, budget=80.0, t_k=500.0, t_time=40.0,
+                          rho_min=256, rho_max=1 << 16, late_rho=256,
+                          hedge_deadline=0.4, enforce_budget=enforce)
+    sched = StageZeroScheduler(cfg, cost)
+    rng = np.random.RandomState(seed)
+    n = 512
+    routed = sched.route(rng.uniform(1, 1e4, n), rng.uniform(1, 1e7, n),
+                         rng.uniform(0, 1e3, n))
+    # adversarial BMW times: boundary values + unbounded stragglers
+    t_bmw = rng.choice([0.0, cfg.budget - 1e-6, cfg.budget + 1e-6,
+                        10 * cfg.budget, 1e12], size=n)
+
+    def jass(rows, rho):
+        return cost.saat_time(np.asarray(rho, np.float64))  # work == rho
+
+    t = sched.resolve_times(routed, t_bmw, jass)
+    assert t.max() <= cfg.worst_case_us(cost) + 1e-9
+    if enforce:
+        # every mirror is deadline-bounded: the budget collapses the bound
+        assert (cfg.worst_case_us(cost)
+                < float(cost.saat_time(np.float64(cfg.rho_max))))
+
+
+def test_jass_rows_are_deadline_rerouted_only_under_enforcement():
+    cost = CostModel.paper_scale()
+    n = 8
+    base = dict(algorithm=2, budget=50.0, t_k=0.0, t_time=0.0, rho_min=128,
+                late_rho=128)
+
+    def slow_jass(rows, rho):
+        # a JASS execution bounded only by its (huge) rho cap
+        return np.where(np.asarray(rho) > 128, 1e6,
+                        cost.saat_time(np.asarray(rho, np.float64)))
+
+    on = StageZeroScheduler(SchedulerConfig(**base, enforce_budget=True),
+                            cost)
+    routed = on.route(np.full(n, 10.0), np.full(n, 1e9), np.zeros(n))
+    assert len(routed.jass_rows) == n
+    t_on = on.resolve_times(routed, np.zeros(n), slow_jass)
+    assert on.stats["late_hedged_jass"] == n
+    assert t_on.max() <= on.cfg.worst_case_us(cost) + 1e-9
+
+    off = StageZeroScheduler(SchedulerConfig(**base, enforce_budget=False),
+                             cost)
+    routed = off.route(np.full(n, 10.0), np.full(n, 1e9), np.zeros(n))
+    t_off = off.resolve_times(routed, np.zeros(n), slow_jass)
+    assert off.stats["late_hedged_jass"] == 0
+    assert t_off.max() > 1e5          # the seed semantics: unbounded
+
+
+def test_hedge_band_is_two_sided():
+    """Only predictions inside [T(1-b), T(1+b)] hedge; confidently-slow
+    queries (algorithm 1 routes on k alone) must not duplicate JASS work."""
+    cfg = SchedulerConfig(algorithm=1, t_k=1e18, t_time=100.0,
+                          hedge_band=0.25)
+    sched = StageZeroScheduler(cfg)
+    pred_t = np.asarray([50.0, 80.0, 100.0, 124.0, 126.0, 1e6])
+    n = len(pred_t)
+    routed = sched.route(np.full(n, 1.0), np.full(n, 1e4), pred_t)
+    assert len(routed.bmw_rows) == n
+    assert list(routed.hedged_rows) == [1, 2, 3]
+    assert sched.stats["hedged"] == 3
+
+
+def test_max_late_rho_collapses_bound_to_budget():
+    cost = CostModel.paper_scale()
+    cfg = SchedulerConfig(budget=100.0, hedge_deadline=0.5)
+    admissible = cfg.max_late_rho(cost)
+    assert admissible > 0
+    tight = dataclasses.replace(cfg, late_rho=admissible)
+    assert tight.worst_case_us(cost) <= cfg.budget + cost.predict_us + 1e-6
+    over = dataclasses.replace(cfg, late_rho=admissible * 4)
+    assert over.worst_case_us(cost) > cfg.budget + cost.predict_us
+
+
+# ---------------------------------------------------------------------------
+# latency utilities
+# ---------------------------------------------------------------------------
+
+def test_over_budget_empty_batch():
+    assert over_budget(np.asarray([]), 100.0) == (0, 0.0)
+    assert over_budget(np.asarray([1.0, 200.0]), 100.0) == (1, 50.0)
+
+
+def test_percentiles_empty_batch_raises_clearly():
+    with pytest.raises(ValueError, match="non-empty"):
+        percentiles(np.asarray([]))
+
+
+def test_cost_model_regression_recovers_measured_rates():
+    measured = CostModel(saat_fixed_us=2.0, saat_per_posting_us=5e-3,
+                         daat_fixed_us=7.0, daat_per_posting_us=3e-3,
+                         daat_per_block_us=0.1)
+    rng = np.random.RandomState(0)
+    w_s = rng.uniform(100, 1e5, 64)
+    w_d = rng.uniform(100, 1e5, 64)
+    b_d = rng.uniform(10, 1e3, 64)
+    fit = CostModel.paper_scale().regressed(
+        work_saat=w_s, t_saat=measured.saat_time(w_s),
+        work_daat=w_d, blocks_daat=b_d,
+        t_daat=measured.daat_time(w_d, b_d))
+    assert fit.saat_fixed_us == pytest.approx(2.0, rel=1e-6)
+    assert fit.saat_per_posting_us == pytest.approx(5e-3, rel=1e-6)
+    assert fit.daat_per_posting_us == pytest.approx(3e-3, rel=1e-6)
+    assert fit.daat_per_block_us == pytest.approx(0.1, rel=1e-6)
+    # other constants keep the prior
+    assert fit.ltr_fixed_us == CostModel.paper_scale().ltr_fixed_us
+
+
+def test_cost_model_regression_rejects_bad_fits():
+    prior = CostModel.paper_scale()
+    w = np.linspace(100, 1e5, 64)
+    # pure noise: median relative residual blows the gate -> keep the prior
+    rng = np.random.RandomState(1)
+    noisy = prior.regressed(work_saat=w, t_saat=rng.uniform(0, 1e4, 64))
+    assert noisy.saat_per_posting_us == prior.saat_per_posting_us
+    # negative slope -> keep the prior
+    neg = prior.regressed(work_saat=w, t_saat=1e4 - 0.01 * w)
+    assert neg.saat_per_posting_us == prior.saat_per_posting_us
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing
+# ---------------------------------------------------------------------------
+
+def test_spec_round_trips_enforcement_fields():
+    spec = CascadeSpec(
+        routing=RoutingSpec(hedge_deadline=0.4, late_rho=777,
+                            enforce_budget=False, adapt_every=3),
+        backend=BackendSpec(calibrate_cost=False),
+        name="enforcement_fields")
+    again = CascadeSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.routing.hedge_deadline == 0.4
+    assert again.routing.late_rho == 777
+    assert again.routing.enforce_budget is False
+    assert again.backend.calibrate_cost is False
+    # RoutingSpec <-> SchedulerConfig converters carry the new fields
+    cfg = scheduler_config(spec.routing)
+    assert (cfg.hedge_deadline, cfg.late_rho, cfg.enforce_budget) \
+        == (0.4, 777, False)
+    assert routing_spec(cfg) == dataclasses.replace(spec.routing,
+                                                    adapt_every=0,
+                                                    calibrate=False)
+
+
+def test_spec_validates_enforcement_fields():
+    with pytest.raises(ValueError, match="hedge_deadline"):
+        CascadeSpec(routing=RoutingSpec(hedge_deadline=0.0)).validate()
+    with pytest.raises(ValueError, match="hedge_deadline"):
+        CascadeSpec(routing=RoutingSpec(hedge_deadline=1.5)).validate()
+    with pytest.raises(ValueError, match="late_rho"):
+        CascadeSpec(routing=RoutingSpec(late_rho=-1)).validate()
+    with pytest.raises(ValueError, match="late_rho"):
+        CascadeSpec(routing=RoutingSpec(rho_max=1024, rho_min=512,
+                                        late_rho=2048)).validate()
+    with pytest.raises(ValueError, match="adapt_every"):
+        CascadeSpec(routing=RoutingSpec(adapt_every=-1)).validate()
+
+
+# ---------------------------------------------------------------------------
+# system-level enforcement
+# ---------------------------------------------------------------------------
+
+def _spec(budget, t_k=150.0, t_time=18.0, **routing_kw):
+    return CascadeSpec(
+        routing=RoutingSpec(budget=budget, rho_max=1 << 14, t_k=t_k,
+                            t_time=t_time, **routing_kw),
+        stage0=Stage0Spec(n_trees=12, depth=3),
+        stage2=Stage2Spec(enabled=True, k_serve=64, t_final=10,
+                          ltr_trees=12, n_train_queries=8),
+        backend=BackendSpec(backend="jnp"),
+        name="tail_test")
+
+
+def _fake_labels(index, ql, cost, seed=0):
+    """A cheap synthetic LabelSet whose time labels come from ``cost`` —
+    enough to drive fit() (incl. the measured-rate regression) without the
+    exhaustive oracle."""
+    rng = np.random.RandomState(seed)
+    q = len(ql.terms)
+    eff = ((index.df[ql.terms] * (ql.mask > 0)).sum(axis=1)
+           .astype(np.float64))
+    work_bmw = np.maximum((eff * 0.4).astype(np.int64), 1)
+    blocks = np.maximum(work_bmw // index.block_size, 1)
+    work_exh = np.maximum(eff.astype(np.int64), 1)
+    return LabelSet(
+        keep=np.ones(q, bool),
+        ref_lists=rng.randint(0, index.n_docs, size=(q, 100)),
+        oracle_k=np.maximum((eff * 0.05).astype(np.int64), 1),
+        oracle_rho=np.maximum((eff * 0.5).astype(np.int64), 256),
+        med_at_max=np.zeros(q),
+        work_exhaustive=work_exh, work_bmw=work_bmw, blocks_bmw=blocks,
+        t_bmw=cost.daat_time(work_bmw, blocks),
+        t_exh=cost.saat_time(work_exh))
+
+
+@pytest.fixture(scope="module")
+def fitted_tail(small_collection):
+    corpus, index, ql = small_collection
+    system = build_system(_spec(100.0), index, corpus=corpus)
+    system.fit(ql, None, seed=5)
+    return corpus, index, ql, system
+
+
+def test_budget_reservation_and_bound_in_stats(fitted_tail):
+    corpus, index, ql, system = fitted_tail
+    res = system.serve(ql.terms, ql.mask, ql.topic)
+    b = res.stats["budget"]
+    r = b["reserve"]
+    assert r["stage0"] == system.cost.predict_us
+    assert r["stage2"] == pytest.approx(
+        float(system.cost.ltr_time(np.asarray(system.k_serve))))
+    assert r["stage0"] + r["stage1"] + r["stage2"] \
+        == pytest.approx(b["total"]) == pytest.approx(100.0)
+    assert system.sched.cfg.budget == pytest.approx(r["stage1"])
+    assert b["worst_case_bound"] == pytest.approx(system.worst_case_us())
+    # per-stage attribution rides along with the percentile tables
+    for name, entry in res.stats["stages"].items():
+        assert entry["budget"] == r[name]
+        assert entry["over_budget"] >= 0
+    assert "budget" in system.stats()
+
+
+def test_stage2_trim_keeps_reranked_queries_under_budget(small_collection,
+                                                         fitted_tail):
+    """With a budget so tight that Stage-1 regularly eats it, every query
+    that still enters Stage-2 must come out under budget (trim/skip), and
+    skipped queries fall back to the rank-safe Stage-1 order."""
+    corpus, index, ql = small_collection
+    _, _, _, donor = fitted_tail
+    # late_rho = rho_min here is deliberately too big for a 14 ms budget
+    # (saat(4096) ~ 29 ms), so late-hedged Stage-1 times still exceed the
+    # budget and the Stage-2 safety net has to fire
+    tight = build_system(_spec(14.0), index, corpus=corpus,
+                         models=donor.models, ltr=donor.ltr)
+    res = tight.serve(ql.terms, ql.mask, ql.topic)
+    b = res.stats["budget"]
+    assert b["enforce"] is True
+    assert b["stage2_trimmed"] + b["stage2_skipped"] > 0
+    entered = res.candidates_used > 0
+    assert np.all(res.latency[entered] <= 14.0 + 1e-9)
+    skipped = np.flatnonzero(res.candidates_used == 0)
+    if len(skipped):
+        np.testing.assert_array_equal(res.final[skipped],
+                                      res.topk[skipped, :tight.t_final])
+        assert np.all(res.stage_latency["stage2"][skipped] == 0.0)
+
+    # enforcement off: the same trace re-ranks full grids over budget
+    loose = build_system(_spec(14.0, enforce_budget=False),
+                         index, corpus=corpus, models=donor.models,
+                         ltr=donor.ltr)
+    res2 = loose.serve(ql.terms, ql.mask, ql.topic)
+    assert res2.stats["budget"]["stage2_trimmed"] == 0
+    assert res2.stats["budget"]["stage2_skipped"] == 0
+    assert res2.candidates_used.min() > 0
+
+
+def test_fit_regresses_cost_model_from_measured_labels(small_collection):
+    """fit() must fold the labels' measured (work, latency) pairs back into
+    the CostModel instead of trusting the static constants."""
+    corpus, index, ql = small_collection
+    measured = CostModel(saat_fixed_us=2.5, saat_per_posting_us=4e-3,
+                         daat_fixed_us=6.0, daat_per_posting_us=9e-3,
+                         daat_per_block_us=0.05)
+    labels = _fake_labels(index, ql, measured)
+    system = build_system(_spec(100.0), index, corpus=corpus)
+    prior = system.cost
+    assert prior.saat_per_posting_us != measured.saat_per_posting_us
+    system.fit(ql, labels, seed=5)
+    assert system.cost.saat_per_posting_us == pytest.approx(4e-3, rel=1e-6)
+    assert system.cost.daat_per_posting_us == pytest.approx(9e-3, rel=1e-6)
+    # the scheduler's reservation was rebuilt against the measured rates
+    assert system._budget_reserve["stage2"] == pytest.approx(
+        float(system.cost.ltr_time(np.asarray(system.k_serve))))
+
+    off = build_system(
+        dataclasses.replace(_spec(100.0),
+                            backend=BackendSpec(backend="jnp",
+                                                calibrate_cost=False)),
+        index, corpus=corpus)
+    off.fit(ql, labels, seed=5)
+    assert off.cost.saat_per_posting_us == prior.saat_per_posting_us
+
+
+def test_online_adaptation_moves_thresholds(small_collection, fitted_tail):
+    corpus, index, ql = small_collection
+    _, _, _, donor = fitted_tail
+    # route on the predictors' own medians so BOTH mirrors see traffic and
+    # feed the pool EWMAs the t_time adaptation reads
+    pk, _, pt = donor.stage0(ql.terms, ql.mask)
+    system = build_system(
+        _spec(100.0, t_k=float(np.median(pk)), t_time=float(np.median(pt)),
+              adapt_every=1),
+        index, corpus=corpus, models=donor.models, ltr=donor.ltr)
+    t0 = system.sched.cfg.t_time
+    system.serve(ql.terms, ql.mask, ql.topic)
+    system.serve(ql.terms, ql.mask, ql.topic)
+    cfg = system.sched.cfg
+    b1 = cfg.budget
+    assert cfg.t_time != t0
+    assert 0.05 * b1 - 1e-9 <= cfg.t_time <= 0.95 * b1 + 1e-9
+    assert 0.05 <= cfg.hedge_band <= 0.5
+    # the live operating point is folded back into the spec
+    assert system.cascade_spec.routing.t_time == cfg.t_time
+    assert system.cascade_spec.routing.hedge_band == cfg.hedge_band
+
+    frozen = build_system(_spec(100.0), index, corpus=corpus,
+                          models=donor.models, ltr=donor.ltr)
+    t0 = frozen.sched.cfg.t_time
+    frozen.serve(ql.terms, ql.mask, ql.topic)
+    frozen.serve(ql.terms, ql.mask, ql.topic)
+    assert frozen.sched.cfg.t_time == t0          # adapt_every=0 -> static
+
+
+# ---------------------------------------------------------------------------
+# spec-driven dry-run
+# ---------------------------------------------------------------------------
+
+def test_dryrun_costs_spec_without_index(small_collection):
+    from repro.launch.dryrun_cascade import corpus_df, dryrun
+    corpus, index, ql = small_collection
+    np.testing.assert_array_equal(corpus_df(corpus, stop_k=8), index.df)
+    spec = dataclasses.replace(_spec(30.0), name="dry")
+    res = dryrun(spec, corpus, ql=ql)
+    assert res["config"]["n_queries"] == len(ql.terms)
+    assert res["enforced"]["over_budget"] <= res["unenforced"]["over_budget"]
+    assert res["enforced"]["percentiles"]["max"] \
+        <= res["unenforced"]["percentiles"]["max"] + 1e-9
+    assert res["deploy_estimate"]["n_postings"] == corpus.n_postings
+    assert np.isfinite(res["config"]["worst_case_bound"])
