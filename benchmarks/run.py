@@ -38,9 +38,9 @@ def main() -> None:
         args.queries = 2000
 
     from benchmarks import (bench_engines, bench_heldout, bench_hybrid,
-                            bench_kernels, bench_predict_k, bench_predict_rho,
-                            bench_predict_time, bench_system, bench_tail,
-                            bench_tail_overlap)
+                            bench_kernels, bench_online, bench_predict_k,
+                            bench_predict_rho, bench_predict_time,
+                            bench_system, bench_tail, bench_tail_overlap)
     from benchmarks.common import load_experiment
 
     t0 = time.time()
@@ -77,6 +77,19 @@ def main() -> None:
         raise RuntimeError("tail benchmark lost its teeth: the seed "
                            "scheduler leaked no violations on this trace "
                            "(check the budget-percentile selection)")
+
+    _section("Online response-time guarantee (micro-batching + admission)")
+    ol = bench_online.run_online()
+    print(bench_online.render_online(ol))
+    print(f"artifact: {ol['artifact']}")
+    if not ol["guarantee_holds"]:
+        raise RuntimeError("online response-time guarantee regressed: a "
+                           "served query exceeded the response budget "
+                           "with admission control on")
+    if not ol["regression_demonstrated"]:
+        raise RuntimeError("online benchmark lost its teeth: the "
+                           "no-admission/batch=1 baseline leaked no "
+                           "violations at <= 0.8x capacity")
 
     _section(f"Loading experiment ({args.queries} queries)")
     exp = load_experiment(args.queries)

@@ -78,6 +78,24 @@ def main():
           f"pool {pool['healthy']}/{pool['replicas']} healthy, "
           f"mirror split jass={pool['jass']}/bmw={pool['bmw']}")
 
+    print("6) online serving: bursty traffic, micro-batching + admission")
+    from repro.serving.online import estimate_capacity, fresh_probe
+    from repro.serving.spec import TrafficSpec
+    # probe capacity on a throwaway clone of the fitted operating point so
+    # the warm-up batches don't perturb the measured system
+    capacity = estimate_capacity(fresh_probe(system), ql.terms, ql.mask,
+                                 ql.topic)
+    traffic = TrafficSpec(arrival="bursty", qps=0.8 * capacity, seed=1)
+    r = system.serve_online(ql.terms, ql.mask, ql.topic, traffic=traffic)
+    s = r.stats
+    print(f"   offered 0.8x capacity ({traffic.qps:.0f} qps, "
+          f"{s['batches']} micro-batches, "
+          f"mean size {s['batch']['mean_size']:.1f})")
+    print(f"   response (queueing included): p50={s['response']['p50']:.1f} "
+          f"p99.99={s['response']['p99.99']:.1f} "
+          f"(budget {s['response_budget']:.0f})")
+    print(f"   over budget: {s['over_budget']}, modes {s['modes']}")
+
 
 if __name__ == "__main__":
     main()

@@ -33,14 +33,19 @@ SMALL re-issue cap — the worst case is
 ``budget·hedge_deadline + ρ_late·c_s``, see ``repro.serving.scheduler``),
 with ``enforce_budget=True`` so the deadline re-route covers JASS routes
 and Stage-2 grids are trimmed when a query's budget is already spent.
+
+Each preset also names its **online traffic policy** (``OnlineSpec``:
+micro-batch width/deadline + admission ladder) for
+``SearchSystem.serve_online`` — ``throughput`` batches wide,
+``quality`` refuses to degrade its candidate grid (shed instead).
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-from repro.serving.spec import (CascadeSpec, DeploySpec, RoutingSpec,
-                                Stage2Spec)
+from repro.serving.spec import (CascadeSpec, DeploySpec, OnlineSpec,
+                                RoutingSpec, Stage2Spec)
 
 
 def _paper_200ms() -> CascadeSpec:
@@ -51,6 +56,8 @@ def _paper_200ms() -> CascadeSpec:
                             adapt_every=1, calibrate=True),
         stage2=Stage2Spec(enabled=True, k_serve=128, t_final=10),
         deploy=DeploySpec(n_shards=1, replicas=2),
+        online=OnlineSpec(max_batch=32, batch_deadline_us=5.0,
+                          admission=True, degrade=True),
     )
 
 
@@ -62,6 +69,9 @@ def _throughput() -> CascadeSpec:
                             late_rho=2048, calibrate=True),
         stage2=Stage2Spec(enabled=True, k_serve=64, t_final=10),
         deploy=DeploySpec(n_shards=1, replicas=2),
+        # capacity-first: wider batches, a longer forming window
+        online=OnlineSpec(max_batch=64, batch_deadline_us=10.0,
+                          admission=True, degrade=True),
     )
 
 
@@ -74,6 +84,9 @@ def _quality() -> CascadeSpec:
         stage2=Stage2Spec(enabled=True, k_serve=256, t_final=20,
                           ltr_trees=64),
         deploy=DeploySpec(n_shards=1, replicas=2),
+        # effectiveness-first: never degrade the grid — shed instead
+        online=OnlineSpec(max_batch=16, batch_deadline_us=2.0,
+                          admission=True, degrade=False),
     )
 
 

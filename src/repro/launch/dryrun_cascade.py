@@ -11,21 +11,37 @@ inverted index, tile mirrors, or trained predictors required.  An operator
 can therefore cost a ``DeploySpec`` (shards × replicas, ρ caps, budget,
 late-hedge knobs) in seconds and only then pay for the build.
 
-The work proxies are deliberately conservative upper bounds:
+The costing is **hybrid**: pre- and post-build share one code path
+(:class:`WorkProxies`), only the statistics powering the proxies differ.
+
+Pre-build (corpus df only — deliberately conservative upper bounds):
 
 * BMW/DAAT work per query = the full posting mass of its terms scaled by
   ``daat_prune`` (1.0 = exhaustive upper bound; the paper's dynamic
-  pruning typically evaluates far less);
+  pruning typically evaluates far less); blocks = mass / block_size;
 * JASS/SAAT work = ``min(ρ, mass)`` — the anytime traversal can never do
   more than its budget nor more than the postings that exist;
-* scatter-gather splits work uniformly across ``n_shards`` doc-range
-  shards (the expectation under random doc placement) and charges
-  ``CostModel.gather_time``.
+
+Post-build (``index=`` given — strictly more accurate, same schema):
+
+* df comes off the built index (stoplist already applied);
+* JASS work resolves the ρ budget against the index's **real impact-level
+  table** (``level_cum``) to the same global level cut the serving system
+  uses — the exact posting count the traversal would touch, instead of
+  the ``min(ρ, mass)`` ceiling;
+* BMW blocks come from the real block-max structure (``block_count > 0``
+  per term) instead of the perfectly-packed ``mass / block_size``
+  estimate (a lower bound — the real spread is wider).
+
+Either way, scatter-gather splits work uniformly across ``n_shards``
+doc-range shards (the expectation under random doc placement) and charges
+``CostModel.gather_time``.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun_cascade --preset paper_200ms
   PYTHONPATH=src python -m repro.launch.dryrun_cascade \
       --spec-json spec.json --n-docs 65536 --queries 31642 --out dry.json
+  PYTHONPATH=src python -m repro.launch.dryrun_cascade --build-index
 """
 
 from __future__ import annotations
@@ -38,7 +54,8 @@ import numpy as np
 
 from repro.index.corpus import Corpus, QueryLog, build_queries
 from repro.serving.latency import (CostModel, budget_attribution,
-                                   over_budget, percentiles, stage2_afford)
+                                   over_budget, percentiles,
+                                   resolve_level_cut, stage2_afford)
 from repro.serving.scheduler import StageZeroScheduler
 from repro.serving.spec import CascadeSpec
 from repro.serving.system import scheduler_config
@@ -50,7 +67,7 @@ _MIRROR_BYTES_PER_POSTING = 8 + 10
 
 def corpus_df(corpus: Corpus, stop_k: int = 0) -> np.ndarray:
     """Per-term document frequencies straight off the corpus postings —
-    the only collection statistic the dry-run needs (no index build).
+    the only collection statistic the pre-build dry-run needs.
     ``stop_k`` zeroes the stoplisted most-frequent terms, matching what
     ``build_index`` would drop."""
     df = np.bincount(corpus.postings_term, minlength=corpus.vocab)
@@ -58,21 +75,93 @@ def corpus_df(corpus: Corpus, stop_k: int = 0) -> np.ndarray:
     return df
 
 
+class WorkProxies:
+    """Per-query Stage-1 work estimates — the single code path behind the
+    hybrid pre/post-build costing (see module docstring).
+
+    Pre-build, only ``df`` is known; post-build, the real impact-level
+    table sharpens JASS work to the exact global level cut (never above
+    the ``min(ρ, mass)`` ceiling) and the real block-max structure
+    replaces the perfectly-packed ``mass / block_size`` block estimate
+    with the true per-term block spread — which can only be wider, so the
+    pre-build path *under*-costs DAAT block overhead."""
+
+    def __init__(self, df: np.ndarray, block_size: int,
+                 level_cum: np.ndarray | None = None,
+                 blocks_per_term: np.ndarray | None = None):
+        self.df = np.asarray(df, np.float64)
+        self.block_size = block_size
+        self.level_cum = level_cum
+        self.blocks_per_term = (None if blocks_per_term is None
+                                else np.asarray(blocks_per_term, np.float64))
+
+    @classmethod
+    def from_corpus(cls, corpus: Corpus, spec: CascadeSpec) -> "WorkProxies":
+        return cls(corpus_df(corpus, spec.index.stop_k),
+                   spec.index.block_size)
+
+    @classmethod
+    def from_index(cls, index, spec: CascadeSpec) -> "WorkProxies":
+        return cls(index.df, index.block_size,
+                   level_cum=np.asarray(index.level_cum),
+                   blocks_per_term=(np.asarray(index.block_count) > 0)
+                   .sum(axis=1))
+
+    @property
+    def post_build(self) -> bool:
+        return self.level_cum is not None
+
+    def mass(self, terms, mask) -> np.ndarray:
+        return (self.df[terms] * (mask > 0)).sum(axis=1)
+
+    def bmw(self, terms, mask, daat_prune: float = 1.0):
+        """(work, blocks) for a BMW/DAAT traversal."""
+        work = self.mass(terms, mask) * daat_prune
+        if self.blocks_per_term is None:
+            blocks = work / self.block_size
+        else:
+            blocks = ((self.blocks_per_term[terms] * (mask > 0))
+                      .sum(axis=1) * daat_prune)
+        return work, blocks
+
+    def jass(self, terms, mask, rows, rho) -> np.ndarray:
+        """Postings a ρ-budgeted SAAT traversal touches for ``rows``."""
+        rho = np.asarray(rho, np.float64)
+        if self.level_cum is None:
+            # row-local mass: don't re-reduce the whole query log just to
+            # index a subset (jass_fn is called per enforcement mode and
+            # per late-hedge re-issue)
+            return np.minimum(rho, self.mass(terms[rows], mask[rows]))
+        # the served system's own resolution (shared helper — see
+        # SearchSystem._jass_split): the ρ budget picks the deepest
+        # global impact-level cut that fits
+        m = (mask[rows] > 0)[:, :, None]
+        totals = (self.level_cum[terms[rows]] * m).sum(axis=1)  # (R, L)
+        lstar, any_ok = resolve_level_cut(totals, rho)
+        rr = np.arange(len(rows))
+        return np.where(any_ok, totals[rr, lstar], 0).astype(np.float64)
+
+
 def dryrun(spec: CascadeSpec, corpus: Corpus, ql: QueryLog | None = None,
            n_queries: int = 2000, seed: int = 7,
-           daat_prune: float = 1.0) -> dict:
+           daat_prune: float = 1.0, index=None) -> dict:
     """Modeled cascade latency for ``spec`` over a query log; returns the
     percentile table, violations with and without enforcement, the analytic
-    worst-case bound, and a deployment size estimate."""
+    worst-case bound, and a deployment size estimate.
+
+    ``index``: an already-built :class:`~repro.index.builder.InvertedIndex`
+    switches the work proxies to its real block-max / impact-level
+    distributions (strictly more accurate; same output schema)."""
     spec.validate()
     cost = getattr(CostModel, spec.backend.cost)()
-    df = corpus_df(corpus, spec.index.stop_k).astype(np.float64)
+    proxies = (WorkProxies.from_index(index, spec) if index is not None
+               else WorkProxies.from_corpus(corpus, spec))
     if ql is None:
         ql = build_queries(corpus, n_queries, stop_k=spec.index.stop_k,
                            seed=seed)
     q = len(ql.terms)
     ns = spec.deploy.n_shards
-    mass = (df[ql.terms] * (ql.mask > 0)).sum(axis=1)
+    mass = proxies.mass(ql.terms, ql.mask)
 
     # Stage-0 proxy predictions: the same posting-mass recipe fit() uses
     # for pseudo-labels, so routing exercises both mirrors realistically
@@ -80,8 +169,7 @@ def dryrun(spec: CascadeSpec, corpus: Corpus, ql: QueryLog | None = None,
     noise = [np.exp(rng.randn(q) * 0.3) for _ in range(3)]
     pred_k = mass * 0.05 * noise[0]
     pred_rho = mass * 0.5 * noise[1]
-    work_bmw = mass * daat_prune
-    blocks_bmw = work_bmw / spec.index.block_size
+    work_bmw, blocks_bmw = proxies.bmw(ql.terms, ql.mask, daat_prune)
     pred_t = cost.daat_time(work_bmw, blocks_bmw) * noise[2]
 
     # the same budget attribution SearchSystem.set_models applies
@@ -99,7 +187,7 @@ def dryrun(spec: CascadeSpec, corpus: Corpus, ql: QueryLog | None = None,
     t_bmw = shardwise(cost.daat_time, work_bmw, blocks_bmw)
 
     def jass_fn(rows, rho):
-        work = np.minimum(np.asarray(rho, np.float64), mass[rows])
+        work = proxies.jass(ql.terms, ql.mask, rows, rho)
         return shardwise(cost.saat_time, work)
 
     out = {}
@@ -136,9 +224,10 @@ def dryrun(spec: CascadeSpec, corpus: Corpus, ql: QueryLog | None = None,
         "spec": spec.name, "n_queries": q, "n_shards": ns,
         "replicas": spec.deploy.replicas, "budget": cfg.budget,
         "stage1_budget": budget1, "daat_prune": daat_prune,
+        "costing": "index" if proxies.post_build else "corpus",
         "worst_case_bound": (enforced_cfg.worst_case_us(cost, ns)
                              + reserve2),
-        "max_late_rho": enforced_cfg.max_late_rho(cost),
+        "max_late_rho": enforced_cfg.max_late_rho(cost, ns),
         "late_rho": enforced_cfg.resolved_late_rho(),
     }
     out["deploy_estimate"] = {
@@ -154,6 +243,7 @@ def dryrun(spec: CascadeSpec, corpus: Corpus, ql: QueryLog | None = None,
 def render(res: dict) -> str:
     c = res["config"]
     lines = [f"dryrun spec={c['spec']} shards={c['n_shards']} "
+             f"costing={c.get('costing', 'corpus')} "
              f"budget={c['budget']:.1f} (stage-1 {c['stage1_budget']:.1f}) "
              f"late_rho={c['late_rho']} (max admissible "
              f"{c['max_late_rho']}) bound={c['worst_case_bound']:.1f}",
@@ -184,6 +274,10 @@ def main():
     ap.add_argument("--daat-prune", type=float, default=1.0,
                     help="fraction of posting mass BMW evaluates "
                          "(1.0 = exhaustive upper bound)")
+    ap.add_argument("--build-index", action="store_true",
+                    help="build the index first and cost from its real "
+                         "block-max/impact distributions (post-build "
+                         "hybrid path)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -201,8 +295,13 @@ def main():
                                              n_shards=args.shards))
     corpus = build_corpus(CorpusParams(n_docs=args.n_docs, vocab=args.vocab,
                                        avg_doclen=150, zipf_a=1.05))
+    index = None
+    if args.build_index:
+        from repro.index.builder import build_index
+        index = build_index(corpus, block_size=spec.index.block_size,
+                            stop_k=spec.index.stop_k)
     res = dryrun(spec, corpus, n_queries=args.queries,
-                 daat_prune=args.daat_prune)
+                 daat_prune=args.daat_prune, index=index)
     print(render(res))
     if args.out:
         with open(args.out, "w") as f:

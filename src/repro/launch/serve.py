@@ -43,6 +43,29 @@ def main():
                     help="cost the resolved spec against the query log "
                          "WITHOUT building the index (repro.launch."
                          "dryrun_cascade) and exit")
+    ap.add_argument("--online", action="store_true",
+                    help="serve the trace under load through the online "
+                         "subsystem (event-driven arrivals, micro-batching,"
+                         " admission control) and report response-time "
+                         "percentiles, queueing included")
+    ap.add_argument("--arrival", default="poisson",
+                    help="online arrival process: poisson | bursty | "
+                         "diurnal | trace")
+    ap.add_argument("--qps", type=float, default=None,
+                    help="offered load (queries per 1000 cost units, i.e. "
+                         "QPS at paper scale); default: --load x measured "
+                         "capacity")
+    ap.add_argument("--load", type=float, default=0.8,
+                    help="offered load as a fraction of measured capacity "
+                         "(used when --qps is not given)")
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="override the preset's micro-batch width cap")
+    ap.add_argument("--no-admission", action="store_true",
+                    help="disable admission control (baseline mode)")
+    ap.add_argument("--trace-path", default="",
+                    help="recorded arrival timestamps (.npy or JSON list) "
+                         "for --arrival trace")
+    ap.add_argument("--traffic-seed", type=int, default=0)
     args = ap.parse_args()
 
     from repro.configs.cascade_presets import get_preset
@@ -51,6 +74,11 @@ def main():
     from repro.serving.system import build_system
 
     spec = get_preset(args.preset)
+    online = spec.online
+    if args.max_batch is not None:
+        online = dataclasses.replace(online, max_batch=args.max_batch)
+    if args.no_admission:
+        online = dataclasses.replace(online, admission=False)
     spec = dataclasses.replace(
         spec,
         deploy=dataclasses.replace(spec.deploy, n_shards=args.shards,
@@ -61,6 +89,7 @@ def main():
                 dataclasses.replace(spec.stage2, enabled=False)),
         backend=(spec.backend if args.backend is None else
                  dataclasses.replace(spec.backend, backend=args.backend)),
+        online=online,
     ).validate()
     if args.spec_json:
         with open(args.spec_json, "w") as f:
@@ -92,6 +121,51 @@ def main():
           + ("" if args.no_ltr or not spec.stage2.enabled
              else " + Stage-2 LTR model") + " ...")
     system.fit(ql, labels)
+
+    if args.online:
+        from repro.serving.online import estimate_capacity, fresh_probe
+        from repro.serving.spec import TrafficSpec
+        topics = ql.topic if system.ltr is not None else None
+        qps = args.qps
+        if qps is None and args.arrival != "trace":
+            print(f"[serve] measuring capacity (max_batch="
+                  f"{spec.online.max_batch}) ...")
+            # throwaway clone of the FITTED operating point (calibrated
+            # thresholds + regressed cost), so the warm-up batches don't
+            # perturb the measured system and the load fraction is
+            # relative to its real capacity
+            qps = args.load * estimate_capacity(fresh_probe(system),
+                                                ql.terms, ql.mask, topics)
+        qps = qps if qps is not None else 1.0  # unused by trace replay
+        traffic = TrafficSpec(arrival=args.arrival, qps=qps,
+                              seed=args.traffic_seed,
+                              trace_path=args.trace_path)
+        src = (f"trace {args.trace_path}" if args.arrival == "trace"
+               else f"qps={qps:.1f}")
+        print(f"[serve] online: {args.arrival} arrivals @ {src}, "
+              f"max_batch={spec.online.max_batch} "
+              f"deadline={spec.online.batch_deadline_us:.1f} "
+              f"admission={spec.online.admission}")
+        r = system.serve_online(ql.terms, ql.mask, topics, traffic=traffic)
+        s = r.stats
+        line = (f"[serve] served {s['served']}/{s['n_queries']} "
+                f"(shed {s['shed']}, {s['shed_pct']:.2f}%) in "
+                f"{s['batches']} batches")
+        if s.get("batch"):
+            line += f" (mean size {s['batch']['mean_size']:.1f})"
+        print(line)
+        print(f"[serve] modes: {s['modes']}")
+        if "response" in s:
+            p = s["response"]
+            print(f"[serve] response ms (queueing included): "
+                  f"p50={p['p50']:.1f} p99={p['p99']:.1f} "
+                  f"p99.99={p['p99.99']:.1f} max={p['max']:.1f}")
+            for name, sp in s["stages"].items():
+                print(f"[serve] {name:7s} ms: p50={sp['p50']:.2f} "
+                      f"p99={sp['p99']:.2f} max={sp['max']:.2f}")
+        print(f"[serve] over response budget ({s['response_budget']:.0f}): "
+              f"{s['over_budget']} ({s['over_budget_pct']:.4f}%)")
+        return
 
     print("[serve] serving trace through the cascade ...")
     res = system.serve(ql.terms, ql.mask,

@@ -172,6 +172,18 @@ def budget_attribution(budget: float, cost: CostModel,
             "stage2": reserve2}
 
 
+def resolve_level_cut(totals: np.ndarray, rho) -> tuple[np.ndarray,
+                                                        np.ndarray]:
+    """(lstar, any_ok): the deepest global impact-level cut whose total
+    work fits each row's ρ budget, over a (R, n_levels) cumulative-work
+    table.  The single resolution policy shared by the serving system
+    (``SearchSystem._jass_split``) and the spec dry-run
+    (``launch.dryrun_cascade.WorkProxies``) — SAAT exactness across both
+    depends on them agreeing."""
+    ok = totals <= np.asarray(rho).reshape(-1, 1)
+    return np.argmax(ok, axis=1), ok.any(axis=1)
+
+
 def stage2_afford(cost: CostModel, remaining: np.ndarray,
                   k_serve: int) -> np.ndarray:
     """Largest per-query candidate count whose ``ltr_time`` fits in the

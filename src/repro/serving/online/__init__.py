@@ -1,0 +1,30 @@
+"""Online traffic subsystem: event-driven arrivals, dynamic micro-batching,
+and admission control — the layer that turns the cascade's *service-time*
+guarantees into **response-time** guarantees under load.
+
+    from repro.serving.online import simulate, estimate_capacity
+    from repro.serving.spec import TrafficSpec
+
+    res = system.serve_online(ql.terms, ql.mask, ql.topic,
+                              traffic=TrafficSpec(arrival="poisson",
+                                                  qps=120.0))
+    res.stats["response"]["p99.99"], res.stats["over_budget"]
+
+See ``traffic`` (arrival processes), ``batcher`` (micro-batch policy),
+``admission`` (degrade/shed ladder), and ``simulator`` (the event loop).
+"""
+
+from repro.serving.online.admission import (FULL, MODE_NAMES, SHED, STAGE1,
+                                            TRIM, AdmissionController)
+from repro.serving.online.batcher import (MicroBatcher, bucket_size,
+                                          pad_batch)
+from repro.serving.online.simulator import (OnlineResult, estimate_capacity,
+                                            fresh_probe, simulate)
+from repro.serving.online.traffic import arrival_times, load_trace
+
+__all__ = [
+    "AdmissionController", "FULL", "MODE_NAMES", "MicroBatcher",
+    "OnlineResult", "SHED", "STAGE1", "TRIM", "arrival_times",
+    "bucket_size", "estimate_capacity", "fresh_probe", "load_trace",
+    "pad_batch", "simulate",
+]

@@ -1,0 +1,128 @@
+"""SLA-aware admission control and load shedding.
+
+The offline guarantee (``SchedulerConfig.worst_case_us`` + the Stage-2
+reservation) bounds *service* time; under load the response budget also has
+to pay queueing delay, and no scheduler knob can un-spend time a query
+already burned in the queue.  The only correct moves are made *before*
+dispatch — degrade or shed while there is still slack, never breach:
+
+ladder (per query, at batch dispatch, from its actual wait)
+-----------------------------------------------------------
+With ``slack = response_budget - wait - dispatch_us`` and ``S1`` the hard
+Stage-0+1 service bound (``worst_case_us`` minus the Stage-2 reserve):
+
+1. **full**    — ``slack >= S1 + ltr_time(k_serve)``: nothing to do;
+2. **trim**    — Stage-2 still fits for some smaller candidate grid:
+   cap candidates at ``stage2_afford(cost, slack - S1, k_serve)``;
+3. **stage1**  — ``slack >= S1`` only: serve the rank-safe Stage-1 list,
+   skip Stage-2 outright (cap 0);
+4. **shed**    — even the first stage cannot finish inside the budget:
+   reject.  A rejection at arrival time (predicted wait from queue depth
+   and the observed batch-occupancy EWMA) is cheaper than one at dispatch
+   — the query never occupies the queue.
+
+Every *served* query therefore satisfies
+``wait + dispatch + service <= response_budget`` by construction, which is
+exactly what ``benchmarks/bench_online.py`` certifies (0 violations,
+queueing included) where the no-admission baseline leaks.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving.latency import CostModel, stage2_afford
+from repro.serving.spec import OnlineSpec
+
+# per-query service modes, in degradation order
+FULL, TRIM, STAGE1, SHED = 0, 1, 2, 3
+MODE_NAMES = {FULL: "full", TRIM: "trim", STAGE1: "stage1", SHED: "shed"}
+
+
+class AdmissionController:
+    """Admission decisions from queue state + the analytic service bounds.
+
+    ``stage1_bound`` is the hard bound on Stage-0+1 service
+    (``SearchSystem.worst_case_us() - stage2 reserve``); ``k_serve`` the
+    full candidate width (``None`` disables the Stage-2 rungs — a
+    stage1-only deployment ladder is admit/shed).
+    """
+
+    def __init__(self, cfg: OnlineSpec, cost: CostModel,
+                 stage1_bound: float, k_serve: int | None,
+                 response_budget: float):
+        cfg.validate()
+        if response_budget <= 0:
+            raise ValueError("response_budget must be positive")
+        self.cfg = cfg
+        self.cost = cost
+        self.stage1_bound = float(stage1_bound)
+        self.k_serve = k_serve
+        self.response_budget = float(response_budget)
+        # the full-service bound (stage1 + worst-case Stage-2) is a run
+        # constant — hoisted out of the per-arrival hot path
+        self._full_bound = self.stage1_bound + (
+            float(cost.ltr_time(np.asarray(k_serve)))
+            if k_serve is not None else 0.0)
+        # observed batch-occupancy EWMA for the arrival-time wait estimate;
+        # starts at the conservative worst case so a cold start over-sheds
+        # rather than over-admits
+        self.occupancy_ewma = cfg.dispatch_us + self._full_bound
+        self.stats = {"shed_arrival": 0, "shed_queue_cap": 0,
+                      "shed_dispatch": 0, "degraded": 0, "admitted": 0}
+
+    # ------------------------------------------------------------------
+    def observe_batch(self, occupancy: float, alpha: float = 0.2) -> None:
+        """Fold an observed batch occupancy into the wait estimator."""
+        self.occupancy_ewma = ((1 - alpha) * self.occupancy_ewma
+                               + alpha * float(occupancy))
+
+    def at_arrival(self, arrival: float, server_free: float,
+                   queue_depth: int) -> bool:
+        """Admit-to-queue decision: predicted wait = residual busy time +
+        the full batches already queued ahead, each costing the occupancy
+        EWMA.  Shed when even stage1-only service cannot fit — the query
+        would only burn queue space it cannot convert into an answer."""
+        if self.cfg.queue_cap and queue_depth >= self.cfg.queue_cap:
+            self.stats["shed_queue_cap"] += 1
+            return False
+        batches_ahead = queue_depth // self.cfg.max_batch
+        wait_est = (max(server_free - arrival, 0.0)
+                    + batches_ahead * self.occupancy_ewma)
+        floor = (self.stage1_bound if self.cfg.degrade
+                 else self._full_bound)
+        if wait_est + self.cfg.dispatch_us + floor > self.response_budget:
+            self.stats["shed_arrival"] += 1
+            return False
+        self.stats["admitted"] += 1
+        return True
+
+    def at_dispatch(self, waits: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray | None]:
+        """(mode, stage2_cap) per query from its *actual* wait at batch
+        close.  ``stage2_cap`` is ``None`` for stage1-only deployments;
+        shed rows get cap 0 (they are never served)."""
+        waits = np.asarray(waits, np.float64)
+        slack = self.response_budget - waits - self.cfg.dispatch_us
+        mode = np.full(len(waits), SHED, np.int64)
+        fits_s1 = slack >= self.stage1_bound - 1e-9
+        if self.k_serve is None:
+            mode[fits_s1] = FULL
+            self.stats["shed_dispatch"] += int(np.sum(~fits_s1))
+            return mode, None
+        afford = stage2_afford(self.cost, slack - self.stage1_bound,
+                               self.k_serve)
+        if not self.cfg.degrade:
+            # admit/shed only: full service or nothing
+            full = fits_s1 & (afford >= self.k_serve)
+            mode[full] = FULL
+            self.stats["shed_dispatch"] += int(np.sum(~full))
+            return mode, np.where(full, self.k_serve, 0).astype(np.int64)
+        mode[fits_s1 & (afford == 0)] = STAGE1
+        mode[fits_s1 & (0 < afford) & (afford < self.k_serve)] = TRIM
+        mode[fits_s1 & (afford >= self.k_serve)] = FULL
+        self.stats["shed_dispatch"] += int(np.sum(~fits_s1))
+        self.stats["degraded"] += int(np.sum(fits_s1 & (afford
+                                                        < self.k_serve)))
+        cap = np.where(fits_s1, afford, 0).astype(np.int64)
+        return mode, cap

@@ -1,0 +1,255 @@
+"""Event-driven online serving simulator: queueing + dynamic micro-batching
++ admission control around ``SearchSystem``, under one virtual clock.
+
+This is the layer that upgrades every guarantee in the repo from
+*service-time of a pre-formed batch* to **response time under load**:
+
+    response = queueing delay + dispatch + service
+
+The loop is a discrete-event simulation in cost-model time units (ms at
+``CostModel.paper_scale``).  Arrivals come from a seeded
+:class:`~repro.serving.spec.TrafficSpec` process; the
+:class:`~repro.serving.online.batcher.MicroBatcher` closes batches under
+the ``batch_deadline_us`` / ``max_batch`` policy; the
+:class:`~repro.serving.online.admission.AdmissionController` degrades
+(trimmed Stage-2 → stage1-only) or sheds queries whose wait already ate the
+response budget; each closed batch is padded to a power-of-two Q bucket and
+served through ``SearchSystem.serve`` — so queueing delay threads straight
+through the existing per-query latency accounting (``CostModel``, per-stage
+arrays) and the ``ReplicaPool`` EWMA feedback, which keeps adapting online
+exactly as in offline serving.
+
+Occupancy model: the batched engines process a batch in lockstep, so the
+device is occupied for ``dispatch_us + max(service)`` while per-query
+completions land at ``start + dispatch_us + service_i`` (results stream out
+of the gather as they finish).  Everything is deterministic in
+``(TrafficSpec.seed, DeploySpec.seed)``: same spec pair → bit-identical
+event log and percentiles.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serving.latency import over_budget, percentiles
+from repro.serving.online.admission import (FULL, MODE_NAMES, SHED,
+                                            AdmissionController)
+from repro.serving.online.batcher import MicroBatcher, pad_batch
+from repro.serving.online.traffic import arrival_times
+from repro.serving.spec import OnlineSpec, TrafficSpec
+
+_NOT_SERVED = -1.0  # sentinel in per-query arrays / the event log (not NaN:
+                    # the determinism contract is tuple equality)
+
+
+@dataclass
+class OnlineResult:
+    """One simulated trace, end to end (arrays indexed by query id)."""
+    arrival: np.ndarray          # (Q,) arrival timestamps
+    wait: np.ndarray             # (Q,) queueing delay (-1 = shed at arrival)
+    service: np.ndarray          # (Q,) service time (-1 = shed)
+    completion: np.ndarray       # (Q,) completion timestamp (-1 = shed)
+    response: np.ndarray         # (Q,) completion - arrival (-1 = shed)
+    mode: np.ndarray             # (Q,) FULL | TRIM | STAGE1 | SHED
+    batch_of: np.ndarray         # (Q,) batch id (-1 = shed)
+    topk: np.ndarray             # (Q, k_serve) Stage-1 candidates (-1 = shed)
+    final: np.ndarray | None     # (Q, t_final) re-ranked (None: no LTR)
+    event_log: list = field(default_factory=list)
+    # event_log rows: (qid, batch_id, arrival, start, wait, service,
+    #                  completion, mode) — plain floats/ints, bit-comparable
+    stats: dict = field(default_factory=dict)
+
+
+def simulate(system, terms: np.ndarray, mask: np.ndarray,
+             topics: np.ndarray | None, traffic: TrafficSpec,
+             online: OnlineSpec | None = None) -> OnlineResult:
+    """Serve the whole query log through the online event loop."""
+    online = online if online is not None else system.cascade_spec.online
+    online.validate()
+    q = len(terms)
+    arr = arrival_times(traffic, q)
+    batcher = MicroBatcher(online)
+    k_serve = system.k_serve if system.ltr is not None else None
+    reserve2 = system._budget_reserve["stage2"]
+    stage1_bound = system.worst_case_us() - reserve2
+    budget_r = online.response_budget_us or 2.0 * system.budget
+    adm = (AdmissionController(online, system.cost, stage1_bound, k_serve,
+                               budget_r)
+           if online.admission else None)
+
+    mode = np.full(q, SHED, np.int64)
+    wait = np.full(q, _NOT_SERVED)
+    service = np.full(q, _NOT_SERVED)
+    completion = np.full(q, _NOT_SERVED)
+    batch_of = np.full(q, -1, np.int64)
+    topk = np.full((q, system.k_serve), -1, np.int64)
+    final = (np.full((q, system.t_final), -1, np.int64)
+             if system.ltr is not None else None)
+    stage_acc: dict = {}
+    events: list = []
+    batch_meta: list = []
+
+    pending: list[int] = []
+    t_free = 0.0
+    i = 0
+
+    def admit(qid: int) -> None:
+        ok = (adm.at_arrival(float(arr[qid]), t_free, len(pending))
+              if adm is not None else True)
+        if ok:
+            pending.append(qid)
+        else:
+            events.append((qid, -1, float(arr[qid]), _NOT_SERVED,
+                           _NOT_SERVED, _NOT_SERVED, _NOT_SERVED, SHED))
+
+    def dispatch(rows: np.ndarray, t_start: float) -> None:
+        nonlocal t_free
+        waits = t_start - arr[rows]
+        if adm is not None:
+            m, cap = adm.at_dispatch(waits)
+        else:
+            m = np.full(len(rows), FULL, np.int64)
+            cap = None
+        mode[rows] = m
+        wait[rows] = waits
+        keep = m != SHED
+        for r, w in zip(rows[~keep], waits[~keep]):
+            events.append((int(r), -1, float(arr[r]), float(t_start),
+                           float(w), _NOT_SERVED, _NOT_SERVED, SHED))
+        if not keep.any():
+            return
+        served = rows[keep]
+        padded, n_real = pad_batch(served, online.max_batch, online.bucket_q)
+        cap_p = None
+        if cap is not None and k_serve is not None:
+            cap_k = cap[keep]
+            cap_p = np.concatenate(
+                [cap_k, np.full(len(padded) - n_real, cap_k[0], np.int64)])
+        res = system.serve(terms[padded], mask[padded],
+                           topics[padded] if system.ltr is not None
+                           else None, stage2_cap=cap_p)
+        bid = len(batch_meta)
+        svc = np.asarray(res.latency[:n_real], np.float64)
+        occupancy = online.dispatch_us + float(np.max(res.latency))
+        service[served] = svc
+        completion[served] = t_start + online.dispatch_us + svc
+        batch_of[served] = bid
+        topk[served] = res.topk[:n_real]
+        if final is not None and res.final is not None:
+            final[served] = res.final[:n_real]
+        for name, t in res.stage_latency.items():
+            stage_acc.setdefault(name, []).append(
+                np.asarray(t[:n_real], np.float64))
+        for j, r in enumerate(served):
+            events.append((int(r), bid, float(arr[r]), float(t_start),
+                           float(t_start - arr[r]), float(svc[j]),
+                           float(completion[r]), int(m[keep][j])))
+        batch_meta.append({"size": int(n_real), "width": int(len(padded)),
+                           "start": float(t_start),
+                           "occupancy": float(occupancy)})
+        t_free = t_start + occupancy
+        if adm is not None:
+            adm.observe_batch(occupancy)
+
+    while i < q or pending:
+        if not pending:
+            admit(i)
+            i += 1
+            continue
+        # pull in every arrival that lands before the batch would close —
+        # the queue is NOT capped at max_batch, so a long occupancy builds
+        # real backlog (that depth is what arrival-time admission and
+        # queue_cap act on); each admission can re-shape the close (a
+        # filling batch closes earlier, a shed leaves it open)
+        while True:
+            take, t_close = batcher.close(arr[pending], t_free)
+            if i < q and arr[i] <= t_close:
+                admit(i)
+                i += 1
+                continue
+            break
+        rows = np.asarray(pending[:take], np.int64)
+        del pending[:take]
+        dispatch(rows, t_close)
+
+    served_rows = np.flatnonzero(mode != SHED)
+    resp = np.full(q, _NOT_SERVED)
+    resp[served_rows] = (completion[served_rows] - arr[served_rows])
+    n_over, pct = over_budget(resp[served_rows], budget_r)
+    stats = {
+        "n_queries": q,
+        "served": int(len(served_rows)),
+        "shed": int(q - len(served_rows)),
+        "shed_pct": 100.0 * (q - len(served_rows)) / q,
+        "response_budget": float(budget_r),
+        "over_budget": n_over,
+        "over_budget_pct": pct,
+        "modes": {MODE_NAMES[k]: int(np.sum(mode == k)) for k in MODE_NAMES},
+        "batches": len(batch_meta),
+        "traffic": traffic.to_dict(),
+        "admission": dict(adm.stats) if adm is not None else None,
+        "worst_case_bound": float(system.worst_case_us()),
+    }
+    makespan = float(arr[-1] - arr[0]) if q > 1 else 0.0
+    if makespan > 0:
+        stats["offered_qps"] = 1000.0 * q / makespan
+    if len(served_rows):
+        stats["response"] = percentiles(resp[served_rows])
+        stages = {"queue": percentiles(wait[served_rows])}
+        for name, chunks in stage_acc.items():
+            t = np.concatenate(chunks)
+            if np.any(t > 0):
+                stages[name] = percentiles(t)
+        stats["stages"] = stages
+        span = float(completion[served_rows].max())
+        if span > 0:
+            stats["achieved_qps"] = 1000.0 * len(served_rows) / span
+    if batch_meta:
+        sizes = np.asarray([b["size"] for b in batch_meta], np.float64)
+        occ = np.asarray([b["occupancy"] for b in batch_meta], np.float64)
+        stats["batch"] = {"count": len(batch_meta),
+                          "mean_size": float(sizes.mean()),
+                          "max_size": int(sizes.max()),
+                          "mean_occupancy": float(occ.mean())}
+    return OnlineResult(arrival=arr, wait=wait, service=service,
+                        completion=completion, response=resp, mode=mode,
+                        batch_of=batch_of, topk=topk, final=final,
+                        event_log=events, stats=stats)
+
+
+def fresh_probe(system):
+    """A throwaway clone of a fitted system — same index, models, LTR
+    model, **calibrated** spec, and (possibly label-regressed) cost model
+    — for measurements like :func:`estimate_capacity` that must not
+    perturb the production system's pool EWMAs or adaptive thresholds.
+    Cloning the live ``cascade_spec``/``cost`` (not the pre-fit template)
+    is what makes the probe route and cost identically to the system it
+    stands in for."""
+    from repro.serving.system import build_system
+    return build_system(system.cascade_spec, system.index,
+                        corpus=system.corpus, models=system.models,
+                        ltr=system.ltr, cost=system.cost)
+
+
+def estimate_capacity(system, terms: np.ndarray, mask: np.ndarray,
+                      topics: np.ndarray | None,
+                      online: OnlineSpec | None = None,
+                      n_batches: int = 4) -> float:
+    """Saturated-throughput estimate (queries per 1000 time units): serve
+    ``n_batches`` full ``max_batch``-wide batches back to back and return
+    ``max_batch / mean(occupancy)``.
+
+    This *serves real batches* (it warms the jit cache and perturbs the
+    replica pool's EWMAs) — probe a throwaway clone (:func:`fresh_probe`)
+    when the measurement must not touch production state."""
+    online = online if online is not None else system.cascade_spec.online
+    b = online.max_batch
+    occ = []
+    for k in range(n_batches):
+        rows = (np.arange(b) + k * b) % len(terms)
+        res = system.serve(terms[rows], mask[rows],
+                           topics[rows] if system.ltr is not None else None)
+        occ.append(online.dispatch_us + float(res.latency.max()))
+    return 1000.0 * b / float(np.mean(occ))

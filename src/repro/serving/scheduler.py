@@ -29,7 +29,10 @@ detected at ``d·B`` and re-issued with at most ``ρ_late`` postings of
 anytime JASS work (``f_s + ρ_late·c_s``); Stage-0 prediction cost is paid
 unconditionally.  Choosing ``ρ_late`` so that
 ``f_s + ρ_late·c_s ≤ (1-d)·B`` collapses the bound to ``B`` exactly — that
-is what :meth:`SchedulerConfig.max_late_rho` computes and what
+is what :meth:`SchedulerConfig.max_late_rho` computes (per-shard under
+scatter-gather: the re-issue waits for its slowest shard and pays the
+fan-out/merge overhead, so the admissible ρ_late shrinks with shards) and
+what
 ``benchmarks/bench_tail.py`` certifies (0 violations on a full trace).
 With ``enforce_budget`` the same deadline re-route also covers JASS-routed
 queries whose ρ cap alone does not bound them under ``B`` (large
@@ -68,10 +71,21 @@ class SchedulerConfig:
         """The effective late-hedge ρ cap (``late_rho`` or ``rho_min``)."""
         return int(self.late_rho) if self.late_rho > 0 else int(self.rho_min)
 
-    def max_late_rho(self, cost: CostModel) -> int:
+    def max_late_rho(self, cost: CostModel, n_shards: int = 1) -> int:
         """Largest ρ_late for which the worst-case bound collapses to the
-        budget itself: f_s + ρ·c_s ≤ (1 - hedge_deadline) · budget."""
-        slack = (1.0 - self.hedge_deadline) * self.budget - cost.saat_fixed_us
+        budget itself: f_s + ρ·c_s + gather ≤ (1 - hedge_deadline)·budget.
+
+        Under scatter-gather the late re-issue is itself sharded — its
+        global level cut can land entirely on one slow shard, and the query
+        still pays the per-extra-shard fan-out/merge overhead
+        (``CostModel.gather_per_shard_us``) on top of that shard's
+        traversal.  Budgeting the re-issue globally (``n_shards=1``) would
+        let that overhead silently eat the hedge headroom, so the gather
+        term is subtracted from the slack here, exactly mirroring
+        :meth:`worst_case_us`."""
+        slack = ((1.0 - self.hedge_deadline) * self.budget
+                 - cost.saat_fixed_us
+                 - cost.gather_per_shard_us * (n_shards - 1))
         if cost.saat_per_posting_us <= 0:
             return self.rho_max if slack >= 0 else 0
         return max(int(slack / cost.saat_per_posting_us), 0)

@@ -122,6 +122,123 @@ class BackendSpec:
 
 
 @dataclass(frozen=True)
+class OnlineSpec:
+    """Online traffic policy: dynamic micro-batching + admission control.
+
+    The offline ``serve()`` path certifies the *service-time* tail of one
+    pre-formed batch; this node configures the layer that converts that
+    into a **response-time** guarantee under load (queueing included):
+    ``repro.serving.online`` wraps the system in a simulated clock, forms
+    Stage-1 micro-batches under a ``batch_deadline_us`` / ``max_batch``
+    policy, and sheds or degrades queries whose queueing delay has already
+    eaten the response budget (see ``repro.serving.online.admission``).
+
+    Time units follow the spec's ``CostModel`` (ms at ``paper_scale``).
+    """
+    max_batch: int = 32          # micro-batch width cap (Q axis)
+    batch_deadline_us: float = 5.0   # close a batch when its oldest query
+                                     # has waited this long
+    bucket_q: bool = True        # pad batches to power-of-two Q buckets so
+                                 # batched engine calls stay jit-cache-
+                                 # friendly (pads replicate a real query
+                                 # and are dropped from results)
+    dispatch_us: float = 1.0     # per-batch dispatch/queue-handoff overhead
+    admission: bool = True       # SLA-aware admission control + shedding
+    degrade: bool = True         # allow trimmed-Stage-2 / stage1-only
+                                 # service before rejecting outright
+    queue_cap: int = 0           # hard queue-depth cap (0 = unbounded;
+                                 # admission bounds it softly regardless)
+    response_budget_us: float = 0.0  # end-to-end response-time budget,
+                                     # queueing included (0 = auto: 2x the
+                                     # routing budget)
+
+    def validate(self) -> None:
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.batch_deadline_us < 0:
+            raise ValueError("batch_deadline_us must be >= 0")
+        if self.dispatch_us < 0:
+            raise ValueError("dispatch_us must be >= 0")
+        if self.queue_cap < 0:
+            raise ValueError("queue_cap must be >= 0 (0 = unbounded)")
+        if self.response_budget_us < 0:
+            raise ValueError("response_budget_us must be >= 0 (0 = auto)")
+
+
+ARRIVALS = ("poisson", "bursty", "diurnal", "trace")
+
+
+@dataclass(frozen=True)
+class TrafficSpec:
+    """A seeded arrival process: the workload half of an online experiment.
+
+    Kept separate from :class:`CascadeSpec` — traffic describes the world,
+    the cascade spec describes the deployment — but serialized the same way
+    (JSON-plain frozen dataclass) so a load test is fully named by the
+    (CascadeSpec, TrafficSpec) pair.
+
+    ``qps`` is queries per 1000 cost-model time units, i.e. literally
+    queries/second when the cost model is in milliseconds
+    (``CostModel.paper_scale``).
+    """
+    arrival: str = "poisson"     # poisson | bursty | diurnal | trace
+    qps: float = 100.0
+    seed: int = 0
+    # bursty (2-state MMPP): high-state rate = qps * burst_factor, dwell
+    # times exponential with the given means; the low-state rate is solved
+    # so the long-run mean rate stays qps
+    burst_factor: float = 4.0
+    burst_fraction: float = 0.1  # long-run fraction of time in the burst
+    burst_dwell_us: float = 50.0  # mean burst dwell (time units)
+    # diurnal: rate(t) = qps * (1 + amplitude * sin(2*pi*t/period))
+    diurnal_amplitude: float = 0.5
+    diurnal_period_us: float = 1000.0
+    trace_path: str = ""         # "trace": replay timestamps from a JSON
+                                 # list or .npy array (time units)
+
+    def validate(self) -> None:
+        if self.arrival not in ARRIVALS:
+            raise ValueError(f"arrival must be one of {ARRIVALS}, "
+                             f"got {self.arrival!r}")
+        if self.arrival != "trace" and self.qps <= 0:
+            raise ValueError("qps must be positive")
+        if self.arrival == "trace" and not self.trace_path:
+            raise ValueError("arrival='trace' needs trace_path")
+        if self.arrival == "bursty":
+            if self.burst_factor < 1.0:
+                raise ValueError("burst_factor must be >= 1")
+            if not 0.0 < self.burst_fraction < 1.0:
+                raise ValueError("burst_fraction must be in (0, 1)")
+            if self.burst_factor * self.burst_fraction >= 1.0:
+                raise ValueError(
+                    "burst_factor * burst_fraction must be < 1 so the "
+                    "off-burst rate stays positive")
+            if self.burst_dwell_us <= 0:
+                raise ValueError("burst_dwell_us must be positive")
+        if self.arrival == "diurnal":
+            if not 0.0 <= self.diurnal_amplitude < 1.0:
+                raise ValueError("diurnal_amplitude must be in [0, 1)")
+            if self.diurnal_period_us <= 0:
+                raise ValueError("diurnal_period_us must be positive")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TrafficSpec":
+        spec = cls(**d)
+        spec.validate()
+        return spec
+
+    @classmethod
+    def from_json(cls, s: str) -> "TrafficSpec":
+        return cls.from_dict(json.loads(s))
+
+
+@dataclass(frozen=True)
 class DeploySpec:
     """Deployment shape: document shards x replicas per shard.
 
@@ -146,7 +263,8 @@ class DeploySpec:
 
 
 _NODES = {"index": IndexSpec, "stage0": Stage0Spec, "routing": RoutingSpec,
-          "stage2": Stage2Spec, "backend": BackendSpec, "deploy": DeploySpec}
+          "stage2": Stage2Spec, "backend": BackendSpec, "deploy": DeploySpec,
+          "online": OnlineSpec}
 
 
 @dataclass(frozen=True)
@@ -158,6 +276,7 @@ class CascadeSpec:
     stage2: Stage2Spec = field(default_factory=Stage2Spec)
     backend: BackendSpec = field(default_factory=BackendSpec)
     deploy: DeploySpec = field(default_factory=DeploySpec)
+    online: OnlineSpec = field(default_factory=OnlineSpec)
     name: str = "custom"
 
     def validate(self) -> "CascadeSpec":

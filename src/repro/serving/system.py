@@ -57,7 +57,8 @@ from repro.ltr.cascade import CascadeResult, rerank_batched
 from repro.ltr.ranker import (LTRModel, csr_search_iters, ltr_training_set,
                               qd_features, stage2_arrays, train_ltr)
 from repro.serving.latency import (CostModel, budget_attribution,
-                                   over_budget, percentiles, stage2_afford)
+                                   over_budget, percentiles,
+                                   resolve_level_cut, stage2_afford)
 from repro.serving.replicas import BMW, JASS, PoolConfig, ReplicaPool
 from repro.serving.scheduler import SchedulerConfig, StageZeroScheduler
 from repro.serving.spec import CascadeSpec, RoutingSpec
@@ -182,6 +183,10 @@ class SearchSystem:
         self._budget_reserve = budget_attribution(self.budget, self.cost,
                                                   None)
         self._adapt_last = {"late_hedged": 0, "bmw": 0}
+        # rolling pinball loss of the t-predictor against observed BMW
+        # engine times — drives the hedge_deadline adaptation (None until
+        # a batch with BMW traffic has been served)
+        self._pinball_ewma: float | None = None
 
         self.models: dict | None = None
         self.ltr: LTRModel | None = None
@@ -351,9 +356,7 @@ class SearchSystem:
         totals = [(lc[terms[rows]] * m).sum(axis=1)       # (R, n_levels)
                   for lc in self._level_cum_host]
         total_g = totals[0] if len(totals) == 1 else np.sum(totals, axis=0)
-        ok = total_g <= np.asarray(rho).reshape(-1, 1)
-        lstar = np.argmax(ok, axis=1)
-        any_ok = ok.any(axis=1)
+        lstar, any_ok = resolve_level_cut(total_g, rho)
         rr = np.arange(len(rows))
         work_s = [np.where(any_ok, t[rr, lstar], 0) for t in totals]
         if key is not None:
@@ -511,7 +514,15 @@ class SearchSystem:
     # ------------------------------------------------------------------
 
     def serve(self, terms: np.ndarray, mask: np.ndarray,
-              topics: np.ndarray | None = None) -> PipelineResult:
+              topics: np.ndarray | None = None, *,
+              stage2_cap: np.ndarray | None = None) -> PipelineResult:
+        """Serve one batch through the full cascade.
+
+        ``stage2_cap`` is an optional per-query hard cap on the Stage-2
+        candidate grid (admission control's degrade ladder: ``k_serve`` =
+        full service, ``0 < cap < k_serve`` = trimmed re-rank, ``0`` =
+        stage1-only — the rank-safe Stage-1 order is served directly).
+        """
         q = terms.shape[0]
         pk, pr, pt = self.stage0(terms, mask)
         routed = self.sched.route(pk, pr, pt)
@@ -527,6 +538,17 @@ class SearchSystem:
         t0 = np.full(q, self.cost.predict_us)
         stage_latency = {"stage0": t0, "stage1": lat01 - t0}
 
+        if len(routed.bmw_rows):
+            # online quantile-error signal for the t predictor: pinball
+            # loss of pred_t against the observed BMW engine time, at the
+            # predictor's own training tau — feeds _adapt_routing's
+            # hedge_deadline loop
+            tau = self.cascade_spec.stage0.tau_t
+            e = t_bmw[routed.bmw_rows] - pt[routed.bmw_rows]
+            pin = float(np.mean(np.maximum(tau * e, (tau - 1.0) * e)))
+            self._pinball_ewma = (pin if self._pinball_ewma is None
+                                  else 0.8 * self._pinball_ewma + 0.2 * pin)
+
         final = None
         used = None
         enforce = self.sched.cfg.enforce_budget
@@ -535,6 +557,11 @@ class SearchSystem:
             if topics is None:
                 raise ValueError("Stage-2 re-ranking needs per-query topics")
             k2 = np.minimum(routed.k, self.k_serve)
+            if stage2_cap is not None:
+                # admission-control degrade ladder: the cap is decided from
+                # response-time slack (queueing included), before the
+                # service-budget enforcement below
+                k2 = np.minimum(k2, np.asarray(stage2_cap, np.int64))
             if enforce:
                 # cascade hedge: a query whose Stage-1 time already ate the
                 # budget gets its candidate grid trimmed (masked re-rank) —
@@ -548,10 +575,11 @@ class SearchSystem:
                 k2 = np.minimum(k2, afford)
             res2 = self.stage2(terms, mask, topics, topk.astype(np.int32), k2)
             final, used = res2.final, res2.candidates_used
-            if skipped:
-                # skipped queries serve their Stage-1 order directly (the
-                # rank-safe list) at zero Stage-2 cost
-                skip_rows = np.flatnonzero(k2 == 0)
+            skip_rows = np.flatnonzero(k2 == 0)
+            if len(skip_rows):
+                # zero-grid queries (enforcement skip or admission's
+                # stage1-only rung) serve their Stage-1 order directly
+                # (the rank-safe list) at zero Stage-2 cost
                 final[skip_rows] = topk[skip_rows, :self.t_final]
             stage_latency["stage2"] = np.where(
                 used > 0, self.cost.ltr_time(used), 0.0)
@@ -596,13 +624,30 @@ class SearchSystem:
                               latency=lat, stage_latency=stage_latency,
                               stats=stats)
 
+    def serve_online(self, terms: np.ndarray, mask: np.ndarray,
+                     topics: np.ndarray | None = None, *,
+                     traffic, online=None):
+        """Serve the query log under load: event-driven arrivals
+        (:class:`~repro.serving.spec.TrafficSpec`), dynamic micro-batching,
+        and admission control, reporting end-to-end **response-time**
+        percentiles (queueing included) up to p99.99.
+
+        ``online`` overrides the spec's :class:`~repro.serving.spec.
+        OnlineSpec`.  Returns an :class:`~repro.serving.online.simulator.
+        OnlineResult`."""
+        from repro.serving.online import simulate
+        return simulate(self, terms, mask, topics, traffic, online)
+
     def worst_case_us(self) -> float:
         """The hard analytic bound on any served query's cascade latency:
         the scheduler's Stage-1 bound (which already pays ``predict_us``)
         plus the reserved worst-case Stage-2 cost.  With ``enforce_budget``
-        and ``late_rho <= SchedulerConfig.max_late_rho(cost)`` this is at
-        most the cascade budget — the paper's 99.99 % as a hard guarantee
-        (certified on a trace by ``benchmarks/bench_tail.py``)."""
+        and ``late_rho <= SchedulerConfig.max_late_rho(cost, n_shards)``
+        this is at most the cascade budget — the paper's 99.99 % as a hard
+        guarantee (certified on a trace by ``benchmarks/bench_tail.py``).
+        The bound is scatter-gather aware: the late re-issue pays the
+        per-extra-shard gather overhead, so ``max_late_rho`` shrinks as
+        shards are added."""
         return (self.sched.cfg.worst_case_us(self.cost, self.n_shards)
                 + self._budget_reserve["stage2"])
 
@@ -616,6 +661,14 @@ class SearchSystem:
         * ``hedge_band`` widens after a window that needed late hedges
           (hedge earlier next time) and decays slowly through clean
           windows, so duplicated JASS work shrinks when the tail is quiet.
+        * ``hedge_deadline`` follows the t-predictor's online quantile
+          error (rolling pinball-loss EWMA): unreliable predictions →
+          detect stragglers earlier; trustworthy ones → later detection,
+          less duplicated JASS work.  The deadline never exceeds the
+          feasibility ceiling ``(B₁ - ρ_late·c_s - gather) / B₁``, so the
+          worst-case bound keeps collapsing to the budget — adaptation can
+          only spend hedge work, never the guarantee.  With
+          ``adapt_every=0`` the spec's fixed value is used unchanged.
 
         The adapted values are folded back into ``cascade_spec`` so
         ``to_json()`` names the *live* operating point.
@@ -638,6 +691,21 @@ class SearchSystem:
         if d_bmw > 0:
             band = cfg.hedge_band * (1.25 if d_late > 0 else 0.98)
             changed["hedge_band"] = float(np.clip(band, 0.05, 0.5))
+        if self._pinball_ewma is not None:
+            late = float(self.cost.saat_time(
+                np.float64(cfg.resolved_late_rho())))
+            gather = self.cost.gather_per_shard_us * (self.n_shards - 1)
+            d_max = (cfg.budget - late - gather) / cfg.budget
+            if d_max > 0.05:
+                # relative quantile error of the t predictor; 2x scaling
+                # so a pinball loss of half the budget already pins the
+                # deadline at its floor
+                err = self._pinball_ewma / cfg.budget
+                d_target = float(np.clip(
+                    d_max * (1.0 - min(2.0 * err, 0.8)), 0.05, d_max))
+                changed["hedge_deadline"] = float(np.clip(
+                    0.8 * cfg.hedge_deadline + 0.2 * d_target,
+                    0.05, min(d_max, 1.0)))
         if changed:
             self.sched.cfg = replace(cfg, **changed)
             self._base_cfg = replace(self._base_cfg, **changed)

@@ -1,0 +1,413 @@
+"""Online traffic subsystem suite: arrival processes, the micro-batch
+policy, admission ladder, simulator determinism, micro-batch/unbatched
+parity, the response-time guarantee under overload, the shard-aware
+late-hedge budget, hedge-deadline adaptation, and the hybrid dry-run.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving.latency import CostModel
+from repro.serving.online import (FULL, SHED, STAGE1, TRIM,
+                                  AdmissionController, MicroBatcher,
+                                  arrival_times, bucket_size, pad_batch)
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.spec import (BackendSpec, CascadeSpec, OnlineSpec,
+                                RoutingSpec, Stage2Spec, TrafficSpec)
+from repro.serving.system import build_system
+
+# ---------------------------------------------------------------------------
+# traffic
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arrival", ["poisson", "bursty", "diurnal"])
+def test_arrivals_deterministic_and_rate_correct(arrival):
+    spec = TrafficSpec(arrival=arrival, qps=200.0, seed=9)
+    ts = arrival_times(spec, 4000)
+    assert len(ts) == 4000 and np.all(np.diff(ts) >= 0) and ts[0] >= 0
+    # long-run mean rate within 15% of the nominal qps
+    rate = 1000.0 * len(ts) / (ts[-1] - ts[0])
+    assert rate == pytest.approx(200.0, rel=0.15)
+    np.testing.assert_array_equal(ts, arrival_times(spec, 4000))
+    assert not np.array_equal(
+        ts, arrival_times(dataclasses.replace(spec, seed=10), 4000))
+
+
+def test_bursty_is_burstier_than_poisson():
+    """The MMPP trace must concentrate arrivals: its peak windowed rate
+    exceeds the Poisson trace's (that is what stresses the queue)."""
+    n = 4000
+    po = arrival_times(TrafficSpec(arrival="poisson", qps=100.0, seed=3), n)
+    bu = arrival_times(TrafficSpec(arrival="bursty", qps=100.0, seed=3,
+                                   burst_factor=6.0, burst_fraction=0.1), n)
+
+    def peak_rate(ts, win=100.0):
+        edges = np.arange(0, ts[-1] + win, win)
+        return np.histogram(ts, bins=edges)[0].max() / win * 1000.0
+
+    assert peak_rate(bu) > 1.5 * peak_rate(po)
+
+
+def test_trace_replay(tmp_path):
+    ts = [5.0, 1.0, 9.0, 3.0]
+    p = tmp_path / "trace.json"
+    p.write_text(json.dumps(ts))
+    out = arrival_times(TrafficSpec(arrival="trace", trace_path=str(p)), 3)
+    # first n timestamps, sorted, shifted to start at 0
+    np.testing.assert_allclose(out, [0.0, 4.0, 8.0])
+    with pytest.raises(ValueError, match="timestamps"):
+        arrival_times(TrafficSpec(arrival="trace", trace_path=str(p)), 10)
+
+
+def test_traffic_spec_validation_and_round_trip():
+    spec = TrafficSpec(arrival="bursty", qps=42.0, burst_factor=3.0,
+                       burst_fraction=0.2, seed=4)
+    assert TrafficSpec.from_json(spec.to_json()) == spec
+    with pytest.raises(ValueError, match="arrival"):
+        TrafficSpec(arrival="storm").validate()
+    with pytest.raises(ValueError, match="qps"):
+        TrafficSpec(qps=0.0).validate()
+    with pytest.raises(ValueError, match="burst_factor"):
+        TrafficSpec(arrival="bursty", burst_factor=8.0,
+                    burst_fraction=0.5).validate()
+    with pytest.raises(ValueError, match="trace_path"):
+        TrafficSpec(arrival="trace").validate()
+
+
+def test_online_spec_in_cascade_round_trip():
+    spec = CascadeSpec(online=OnlineSpec(max_batch=8, batch_deadline_us=2.5,
+                                         admission=False, queue_cap=64))
+    again = CascadeSpec.from_json(spec.to_json())
+    assert again.online == spec.online
+    # pre-online wire format (no "online" node) still loads, with defaults
+    d = json.loads(spec.to_json())
+    d.pop("online")
+    assert CascadeSpec.from_dict(d).online == OnlineSpec()
+    with pytest.raises(ValueError, match="max_batch"):
+        CascadeSpec(online=OnlineSpec(max_batch=0)).validate()
+    with pytest.raises(ValueError, match="response_budget"):
+        CascadeSpec(online=OnlineSpec(response_budget_us=-1.0)).validate()
+
+
+# ---------------------------------------------------------------------------
+# batcher
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_padding_power_of_two():
+    assert [bucket_size(n, 32) for n in (1, 2, 3, 5, 9, 17, 32)] \
+        == [1, 2, 4, 8, 16, 32, 32]
+    assert bucket_size(3, 32, bucket_q=False) == 3
+    rows, n_real = pad_batch(np.array([7, 8, 9]), 32)
+    assert n_real == 3 and len(rows) == 4 and rows[3] == 7  # pad = rows[0]
+    with pytest.raises(ValueError, match="max_batch"):
+        bucket_size(9, 8)
+
+
+def test_batcher_close_policy():
+    b = MicroBatcher(OnlineSpec(max_batch=4, batch_deadline_us=10.0))
+    # under-full queue closes at oldest-arrival + deadline (server idle)
+    take, t = b.close(np.array([3.0, 5.0]), server_free=0.0)
+    assert (take, t) == (2, 13.0)
+    # a busy server extends the window to its free time
+    take, t = b.close(np.array([3.0, 5.0]), server_free=20.0)
+    assert (take, t) == (2, 20.0)
+    # a full batch closes when its last member arrived
+    take, t = b.close(np.array([1.0, 2.0, 3.0, 4.0, 6.0]), server_free=0.0)
+    assert (take, t) == (4, 4.0)
+
+
+# ---------------------------------------------------------------------------
+# admission ladder (pure unit: crafted waits hit every rung)
+# ---------------------------------------------------------------------------
+
+
+def test_admission_dispatch_ladder():
+    cost = CostModel.paper_scale()
+    cfg = OnlineSpec(max_batch=8, dispatch_us=1.0)
+    s1 = 100.0
+    adm = AdmissionController(cfg, cost, stage1_bound=s1, k_serve=64,
+                              response_budget=200.0)
+    full_cost = float(cost.ltr_time(np.asarray(64)))
+    waits = np.array([
+        0.0,                            # full: plenty of slack
+        199.0 - s1 - full_cost + 0.5,   # trim: stage2 fits only partially
+        199.0 - s1 - 0.2,               # stage1: not even ltr_fixed fits
+        150.0,                          # shed: stage1 alone cannot fit
+    ])
+    mode, cap = adm.at_dispatch(waits)
+    assert list(mode) == [FULL, TRIM, STAGE1, SHED]
+    assert cap[0] >= 64 and 0 < cap[1] < 64 and cap[2] == 0 and cap[3] == 0
+    assert adm.stats["shed_dispatch"] == 1 and adm.stats["degraded"] == 2
+    # degrade=False collapses the ladder to admit/shed
+    strict = AdmissionController(dataclasses.replace(cfg, degrade=False),
+                                 cost, s1, 64, 200.0)
+    mode, cap = strict.at_dispatch(waits)
+    assert list(mode) == [FULL, SHED, SHED, SHED]
+    # stage1-only deployments have no stage-2 rungs at all
+    s1only = AdmissionController(cfg, cost, s1, None, 200.0)
+    mode, cap = s1only.at_dispatch(waits)
+    assert cap is None and list(mode) == [FULL, FULL, FULL, SHED]
+
+
+def test_admission_at_arrival_sheds_hopeless_queries():
+    cost = CostModel.paper_scale()
+    cfg = OnlineSpec(max_batch=4, dispatch_us=1.0, queue_cap=6)
+    adm = AdmissionController(cfg, cost, stage1_bound=100.0, k_serve=None,
+                              response_budget=150.0)
+    assert adm.at_arrival(arrival=0.0, server_free=10.0, queue_depth=0)
+    # server busy far past the point where even stage1 could fit
+    assert not adm.at_arrival(arrival=0.0, server_free=60.0, queue_depth=0)
+    assert adm.stats["shed_arrival"] == 1
+    # hard queue cap
+    assert not adm.at_arrival(arrival=0.0, server_free=0.0, queue_depth=6)
+    assert adm.stats["shed_queue_cap"] == 1
+
+
+# ---------------------------------------------------------------------------
+# simulator: determinism, parity, and the guarantee under load
+# ---------------------------------------------------------------------------
+
+
+def _spec(**online_kw):
+    online = {"max_batch": 8, "batch_deadline_us": 4.0}
+    online.update(online_kw)
+    return CascadeSpec(
+        routing=RoutingSpec(budget=100.0, rho_max=1 << 14, t_k=150.0,
+                            t_time=18.0, adapt_every=0),
+        stage2=Stage2Spec(enabled=True, k_serve=32, t_final=5),
+        backend=BackendSpec(backend="jnp"),
+        online=OnlineSpec(**online),
+        name="online_test",
+    )
+
+
+@pytest.fixture(scope="module")
+def fitted(small_collection):
+    corpus, index, ql = small_collection
+    spec = dataclasses.replace(
+        _spec(), routing=dataclasses.replace(_spec().routing,
+                                             calibrate=True))
+    system = build_system(spec, index, corpus=corpus)
+    system.fit(ql, None, seed=5)
+    thresholds = (system._base_cfg.t_k, system._base_cfg.t_time)
+    return corpus, index, ql, system, thresholds
+
+
+def _system(fitted, **online_kw):
+    corpus, index, ql, system, (tk, tt) = fitted
+    spec = _spec(**online_kw)
+    spec = dataclasses.replace(
+        spec, routing=dataclasses.replace(spec.routing, t_k=tk, t_time=tt))
+    return build_system(spec, index, corpus=corpus, models=system.models,
+                        ltr=system.ltr)
+
+
+def test_simulator_deterministic(fitted):
+    """Same seed + same TrafficSpec -> bit-identical event log, responses,
+    and percentiles (the reproducibility contract of the subsystem)."""
+    corpus, index, ql, _, _ = fitted
+    traffic = TrafficSpec(arrival="bursty", qps=150.0, seed=3)
+    a = _system(fitted).serve_online(ql.terms, ql.mask, ql.topic,
+                                     traffic=traffic)
+    b = _system(fitted).serve_online(ql.terms, ql.mask, ql.topic,
+                                     traffic=traffic)
+    assert a.event_log == b.event_log
+    np.testing.assert_array_equal(a.response, b.response)
+    np.testing.assert_array_equal(a.topk, b.topk)
+    assert a.stats["response"] == b.stats["response"]
+    assert a.stats["modes"] == b.stats["modes"]
+
+
+def test_microbatched_topk_bit_identical_to_unbatched(fitted):
+    """Per-query top-k is the same whether the query is served alone or
+    inside any padded micro-batch (row independence on the jnp backend)."""
+    corpus, index, ql, _, _ = fitted
+    on = _system(fitted).serve_online(
+        ql.terms, ql.mask, ql.topic,
+        traffic=TrafficSpec(arrival="poisson", qps=300.0, seed=2))
+    ref = _system(fitted)
+    served = np.flatnonzero(on.mode != SHED)
+    assert len(served) > 0
+    for qid in served[:24]:
+        r1 = ref.serve(ql.terms[qid:qid + 1], ql.mask[qid:qid + 1],
+                       ql.topic[qid:qid + 1])
+        np.testing.assert_array_equal(r1.topk[0], on.topk[qid])
+        if int(on.mode[qid]) == FULL:
+            np.testing.assert_array_equal(r1.final[0], on.final[qid])
+
+
+def test_response_accounting_consistent(fitted):
+    """response = wait + dispatch + service for every served query, and
+    batches respect max_batch / power-of-two padding."""
+    corpus, index, ql, _, _ = fitted
+    on = _system(fitted).serve_online(
+        ql.terms, ql.mask, ql.topic,
+        traffic=TrafficSpec(arrival="poisson", qps=200.0, seed=1))
+    served = np.flatnonzero(on.mode != SHED)
+    np.testing.assert_allclose(
+        on.response[served],
+        on.wait[served] + 1.0 + on.service[served])  # dispatch_us=1.0
+    assert on.stats["batch"]["max_size"] <= 8
+    # queueing threads into the per-stage accounting
+    assert "queue" in on.stats["stages"]
+    assert on.stats["stages"]["queue"]["max"] >= 0
+
+
+def test_overload_sheds_but_never_violates(fitted):
+    """At far-over-capacity offered load the admission ladder sheds and
+    degrades, and NO served query exceeds the response budget — while the
+    no-admission/batch=1 baseline violates on the same trace."""
+    corpus, index, ql, _, _ = fitted
+    traffic = TrafficSpec(arrival="bursty", qps=3000.0, seed=6)
+    # a tight response budget: little queueing slack over the service bound
+    on = _system(fitted, response_budget_us=130.0).serve_online(
+        ql.terms, ql.mask, ql.topic, traffic=traffic)
+    assert on.stats["over_budget"] == 0
+    assert on.stats["shed"] > 0
+    # backlog builds past max_batch, so shedding happens at ARRIVAL (cheap,
+    # before any queue time is burned), not only at dispatch
+    assert on.stats["admission"]["shed_arrival"] > 0
+    # a hard queue cap bounds depth regardless of the budget math
+    capped = _system(fitted, response_budget_us=130.0,
+                     queue_cap=4).serve_online(
+        ql.terms, ql.mask, ql.topic, traffic=traffic)
+    assert capped.stats["admission"]["shed_queue_cap"] > 0
+    assert capped.stats["over_budget"] == 0
+    base = _system(fitted, admission=False, max_batch=1,
+                   batch_deadline_us=0.0, bucket_q=False,
+                   response_budget_us=130.0)
+    off = base.serve_online(ql.terms, ql.mask, ql.topic, traffic=traffic)
+    assert off.stats["over_budget"] >= 1
+    assert off.stats["shed"] == 0          # baseline answers everything late
+    # served responses stay under the budget by construction
+    served = np.flatnonzero(on.mode != SHED)
+    assert np.all(on.response[served]
+                  <= on.stats["response_budget"] + 1e-9)
+
+
+def test_stage2_cap_degrade_ladder_in_serve(fitted):
+    """serve(stage2_cap=...) is the degrade mechanism: cap 0 serves the
+    rank-safe Stage-1 prefix, a partial cap trims candidates_used."""
+    corpus, index, ql, _, _ = fitted
+    system = _system(fitted)
+    q = len(ql.terms)
+    cap = np.full(q, 32, np.int64)
+    cap[:4] = 0
+    cap[4:8] = 3
+    res = system.serve(ql.terms, ql.mask, ql.topic, stage2_cap=cap)
+    ref = _system(fitted).serve(ql.terms, ql.mask, ql.topic)
+    np.testing.assert_array_equal(res.topk, ref.topk)       # stage 1 intact
+    for r in range(4):
+        np.testing.assert_array_equal(res.final[r], res.topk[r, :5])
+        assert res.candidates_used[r] == 0
+    assert np.all(res.candidates_used[4:8] <= 3)
+    np.testing.assert_array_equal(res.final[8:], ref.final[8:])
+
+
+# ---------------------------------------------------------------------------
+# satellite: shard-aware late-hedge budget
+# ---------------------------------------------------------------------------
+
+
+def test_max_late_rho_accounts_gather_overhead():
+    cost = dataclasses.replace(CostModel.paper_scale(),
+                               gather_per_shard_us=5.0)
+    cfg = SchedulerConfig(budget=100.0, hedge_deadline=0.5)
+    single = cfg.max_late_rho(cost, 1)
+    sharded = cfg.max_late_rho(cost, 4)
+    assert sharded < single
+    # the exact headroom: 3 extra shards x 5 time units of gather
+    # (integer flooring loses at most one posting per call)
+    assert single - sharded \
+        == pytest.approx(15.0 / cost.saat_per_posting_us, abs=2)
+    # a late_rho admissible at n_shards collapses the sharded bound to the
+    # budget; the single-shard-admissible one need not
+    tight = dataclasses.replace(cfg, late_rho=max(sharded, 1))
+    assert tight.worst_case_us(cost, 4) \
+        <= cfg.budget + cost.predict_us + 1e-6
+    loose = dataclasses.replace(cfg, late_rho=single)
+    assert loose.worst_case_us(cost, 4) > cfg.budget + cost.predict_us
+
+
+# ---------------------------------------------------------------------------
+# satellite: hedge_deadline driven by the t-predictor's quantile error
+# ---------------------------------------------------------------------------
+
+
+def test_hedge_deadline_adapts_from_pinball_ewma(fitted):
+    corpus, index, ql, system, (tk, tt) = fitted
+    spec = _spec()
+    spec = dataclasses.replace(
+        spec, routing=dataclasses.replace(spec.routing, t_k=tk, t_time=tt,
+                                          adapt_every=1))
+    sys_a = build_system(spec, index, corpus=corpus, models=system.models,
+                         ltr=system.ltr)
+    d0 = sys_a.sched.cfg.hedge_deadline
+    sys_a.serve(ql.terms, ql.mask, ql.topic)
+    assert sys_a._pinball_ewma is not None and sys_a._pinball_ewma >= 0
+    d1 = sys_a.sched.cfg.hedge_deadline
+    # the deadline moved (tracked the observed quantile error) and stayed
+    # inside the feasibility ceiling, so the bound still collapses
+    cfg = sys_a.sched.cfg
+    late = float(sys_a.cost.saat_time(np.float64(cfg.resolved_late_rho())))
+    assert 0.05 <= d1 <= (cfg.budget - late) / cfg.budget + 1e-9
+    assert d1 != d0
+    # the adapted value is folded back into the spec (live operating point)
+    assert sys_a.cascade_spec.routing.hedge_deadline == d1
+    # a known-large error pins the deadline toward its floor
+    sys_a._pinball_ewma = cfg.budget  # catastrophic predictor
+    sys_a._adapt_routing()
+    assert sys_a.sched.cfg.hedge_deadline < d1
+    # fallback: adapt_every=0 never touches the fixed spec value
+    spec0 = dataclasses.replace(
+        spec, routing=dataclasses.replace(spec.routing, adapt_every=0))
+    sys_b = build_system(spec0, index, corpus=corpus, models=system.models,
+                         ltr=system.ltr)
+    sys_b.serve(ql.terms, ql.mask, ql.topic)
+    assert sys_b.sched.cfg.hedge_deadline \
+        == spec0.routing.hedge_deadline
+
+
+# ---------------------------------------------------------------------------
+# satellite: hybrid dry-run costing
+# ---------------------------------------------------------------------------
+
+
+def test_dryrun_hybrid_uses_index_distributions(small_collection):
+    from repro.launch.dryrun_cascade import WorkProxies, dryrun
+    corpus, index, ql = small_collection
+    spec = dataclasses.replace(_spec(),
+                               index=dataclasses.replace(_spec().index,
+                                                         stop_k=8))
+    pre = WorkProxies.from_corpus(corpus, spec)
+    post = WorkProxies.from_index(index, spec)
+    assert not pre.post_build and post.post_build
+    rows = np.arange(len(ql.terms))
+    # a binding ρ budget: the level-cut resolution has to leave postings
+    # on the table, while the pre-build proxy charges the full min(ρ, mass)
+    rho = np.full(len(rows), 256.0)
+    w_pre = pre.jass(ql.terms, ql.mask, rows, rho)
+    w_post = post.jass(ql.terms, ql.mask, rows, rho)
+    # the real level cut never exceeds the min(rho, mass) ceiling
+    assert np.all(w_post <= w_pre + 1e-9)
+    assert np.any(w_post < w_pre)          # and is strictly sharper somewhere
+    _, b_pre = pre.bmw(ql.terms, ql.mask)
+    _, b_post = post.bmw(ql.terms, ql.mask)
+    # mass/block_size assumes perfect packing — the real block-max spread
+    # can only be wider (the pre-build path under-costs block overhead)
+    assert np.all(b_post >= b_pre - 1e-9)
+
+    res_pre = dryrun(spec, corpus, ql=ql)
+    res_post = dryrun(spec, corpus, ql=ql, index=index)
+    assert res_pre["config"]["costing"] == "corpus"
+    assert res_post["config"]["costing"] == "index"
+    # both paths emit the same schema and a certified-enforceable bound
+    for res in (res_pre, res_post):
+        assert {"enforced", "unenforced", "config",
+                "deploy_estimate"} <= set(res)
+        assert res["enforced"]["over_budget"] == 0

@@ -60,6 +60,37 @@ def test_straggler_deprioritized():
     assert counts[id(straggler)] < max(others)
 
 
+def test_heterogeneous_replica_speeds_learned_and_avoided():
+    """Replicas with genuinely different service rates: the EWMA estimates
+    converge to the true speeds and power-of-two-choices shifts traffic
+    toward the fast replicas without starving the slow ones."""
+    pool = _pool(n_partitions=1, replicas_per_partition=4,
+                 jass_fraction=1.0)
+    reps = pool.candidates(0, JASS)
+    assert len(reps) == 4
+    true_speed = {id(r): s for r, s in zip(reps, [1.0, 1.0, 4.0, 16.0])}
+    rng = np.random.RandomState(0)
+    counts = {id(r): 0 for r in reps}
+    for _ in range(600):
+        picks = pool.route_query(JASS)
+        for r in picks:
+            counts[id(r)] += 1
+            # observed latency = the replica's true speed (+ small noise)
+            pool.complete(r, latency=true_speed[id(r)]
+                          * (1 + 0.05 * rng.rand()))
+    # EWMAs order the replicas by their true speed; the slowest is
+    # deprioritized so quickly its estimate need not fully converge,
+    # but it must already sit far above the fast pair
+    ewmas = [r.ewma_latency for r in reps]
+    assert ewmas[0] < ewmas[2] < ewmas[3]
+    assert ewmas[3] > 3 * ewmas[0]
+    # traffic follows speed: each fast replica serves more than the slowest
+    slowest = [r for r in reps if true_speed[id(r)] == 16.0][0]
+    fast = [counts[id(r)] for r in reps if true_speed[id(r)] == 1.0]
+    assert all(f > counts[id(slowest)] for f in fast)
+    assert counts[id(slowest)] > 0           # not starved (random pairing)
+
+
 def test_rebalance_follows_mix():
     pool = _pool(n_partitions=2, replicas_per_partition=4,
                  jass_fraction=0.5)
