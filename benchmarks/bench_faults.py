@@ -1,0 +1,272 @@
+"""Fault-injection certification: the 99.99 % response-time guarantee
+under replica crashes, stragglers, transient timeouts, and partition loss.
+
+``bench_online`` certifies the response-time budget on a *healthy*
+cluster; the paper's ISN architecture presumes replicas that fail.  This
+benchmark serves the same trace through the fault-hardened operating
+point (``fault_tolerant``: 4 partitions x 3 replicas, scatter-gather
+failover with a bounded retry budget charged into the worst-case bound)
+under every canonical fault scenario (``repro.serving.faults``):
+
+* **crash_one** — a replica dies and never returns: failover must keep
+  full coverage with zero violations;
+* **rolling_restart** — staggered per-partition restarts: the health
+  probe/recovery path;
+* **stragglers** — ~10 % of replicas run 8x slow: hedging + enforcement;
+* **timeout_storm** — 5 % transient per-request timeouts: bounded retry;
+* **partition_outage** — one partition loses *every* replica: graceful
+  degradation to partial coverage, never an exception, never a breach.
+
+Certified per (load, scenario) row:
+
+1. **0 served queries over the response budget** — the guarantee is a
+   certificate, not a percentile;
+2. **coverage >= surviving partitions / total** on every served query
+   (checked against the ``FaultInjector`` ground truth at each batch's
+   dispatch time) — degradation is never worse than the cluster state;
+3. the **empty schedule is inert**: the "none" scenario replays
+   bit-identically (event log, top-k, final lists), and an offline serve
+   through the fault-capable build equals the failover-disabled build
+   bit for bit.
+
+The cost of surviving is *quantified*, not hidden: each row reports mean
+coverage, degraded-query counts, retry/lost-partition counters, and the
+fraction of FULL-mode queries whose re-ranked lists match the no-fault
+run.  Emits ``results/BENCH_faults.json``; the CLI exits non-zero if any
+certificate fails.  CI runs it as a smoke.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import write_bench_artifact
+
+
+def _build(q_batch, n_docs, seed, max_batch, gather_us):
+    from repro.configs.cascade_presets import get_preset
+    from repro.index.corpus import CorpusParams, build_corpus, build_queries
+    from repro.serving.spec import BackendSpec
+
+    corpus = build_corpus(CorpusParams(n_docs=n_docs,
+                                       vocab=max(n_docs // 2, 1024),
+                                       avg_doclen=96, zipf_a=1.05,
+                                       seed=seed))
+    base = dataclasses.replace(get_preset("fault_tolerant"),
+                               backend=BackendSpec(backend="jnp"))
+    base = dataclasses.replace(
+        base, online=dataclasses.replace(base.online, max_batch=max_batch))
+    ql = build_queries(corpus, q_batch, stop_k=base.index.stop_k,
+                       seed=seed + 4)
+
+    from repro.serving.system import build_system
+    fit_sys = build_system(base, corpus)
+    fit_sys.fit(ql, None, seed=seed)
+    # freeze the calibrated thresholds so every configuration routes
+    # identically, and give the merge a real per-shard cost so the
+    # partial-coverage admission rung is live
+    base = dataclasses.replace(
+        base, routing=dataclasses.replace(
+            base.routing, t_k=fit_sys._base_cfg.t_k,
+            t_time=fit_sys._base_cfg.t_time, calibrate=False,
+            adapt_every=0))
+    cost = dataclasses.replace(fit_sys.cost, gather_per_shard_us=gather_us)
+    return corpus, base, ql, fit_sys, cost
+
+
+def _coverage_floor_ok(res, injector, replicas, ns):
+    """Every served query's coverage >= (partitions the schedule left
+    reachable at its batch's dispatch time) / total — the ground-truth
+    floor behind "graceful" degradation."""
+    worst = 0.0
+    for (qid, bid, t_arr, start, t_wait, svc, comp, m) in res.event_log:
+        if bid < 0:          # shed — no coverage claim to certify
+            continue
+        floor = injector.surviving(replicas, start) / ns
+        cov = 1.0 if res.coverage is None else float(res.coverage[qid])
+        worst = max(worst, floor - cov)
+        if cov < floor - 1e-9:
+            return False, worst
+    return True, worst
+
+
+def run_faults(q_batch: int = 256, n_docs: int = 4096, seed: int = 7,
+               loads: tuple = (0.5, 0.8), max_batch: int = 16,
+               gather_us: float = 4.0) -> dict:
+    from repro.serving.faults import SCENARIOS, FaultInjector, fault_scenario
+    from repro.serving.online import FULL, estimate_capacity
+    from repro.serving.spec import FaultSpec, TrafficSpec
+    from repro.serving.system import build_system
+
+    corpus, base, ql, fit_sys, cost = _build(q_batch, n_docs, seed,
+                                             max_batch, gather_us)
+    index, models, ltr = fit_sys.index, fit_sys.models, fit_sys.ltr
+    ns = base.deploy.n_shards
+    replicas = base.deploy.replicas
+
+    def system(fault=None, failover=True):
+        spec = base
+        if not failover:
+            spec = dataclasses.replace(spec, routing=dataclasses.replace(
+                spec.routing, failover_timeout=0.0, max_retries=0))
+        if fault is not None:
+            spec = dataclasses.replace(spec, fault=fault)
+        return build_system(spec.validate(), index, corpus=corpus,
+                            models=models, ltr=ltr, cost=cost)
+
+    capacity = estimate_capacity(system(), ql.terms, ql.mask, ql.topic)
+    budget_r = None
+
+    rows = []
+    none_runs = {}           # load -> no-fault OnlineResult (the control)
+    floors_hold = True
+    for load in loads:
+        qps = load * capacity
+        horizon = 1000.0 * q_batch / qps      # trace span in time units
+        traffic = TrafficSpec(arrival="poisson", qps=qps, seed=seed + 1)
+        for scenario in SCENARIOS:
+            fspec = fault_scenario(scenario, n_partitions=ns,
+                                   replicas=replicas, horizon=horizon,
+                                   seed=seed)
+            res = system(fault=fspec).serve_online(ql.terms, ql.mask,
+                                                   ql.topic, traffic=traffic)
+            s = res.stats
+            budget_r = s["response_budget"]
+            if scenario == "none":
+                none_runs[load] = res
+            ok_floor, slack = _coverage_floor_ok(
+                res, FaultInjector(fspec, ns), replicas, ns)
+            floors_hold &= ok_floor
+
+            # effectiveness cost of surviving: FULL-mode queries whose
+            # re-ranked list still matches the no-fault control
+            ctrl = none_runs[load]
+            both = np.flatnonzero((res.mode == FULL) & (ctrl.mode == FULL))
+            same = (float(np.mean(np.all(
+                res.final[both] == ctrl.final[both], axis=1)))
+                if len(both) and res.final is not None else None)
+
+            cov = s.get("coverage", {})
+            rows.append({
+                "load": load, "qps": float(qps), "scenario": scenario,
+                "over_budget": s["over_budget"],
+                "served": s["served"], "shed": s["shed"],
+                "modes": s["modes"],
+                "p99.99": (s["response"]["p99.99"]
+                           if "response" in s else None),
+                "max": s["response"]["max"] if "response" in s else None,
+                "coverage": {"min": cov.get("min", 1.0),
+                             "mean": cov.get("mean", 1.0),
+                             "degraded": cov.get("degraded", 0)},
+                "coverage_floor_ok": ok_floor,
+                "faults": s.get("faults"),
+                "full_final_match_vs_none": same,
+            })
+
+    # ---- inertness: the empty schedule must not perturb serving --------
+    load0 = loads[-1]
+    traffic = TrafficSpec(arrival="poisson", qps=load0 * capacity,
+                          seed=seed + 1)
+    a = none_runs[load0]
+    b = system(fault=FaultSpec()).serve_online(ql.terms, ql.mask, ql.topic,
+                                               traffic=traffic)
+    replay_identical = (
+        a.event_log == b.event_log
+        and bool(np.array_equal(a.topk, b.topk))
+        and (a.final is None or bool(np.array_equal(a.final, b.final))))
+    # offline: fault-capable build == failover-disabled build, bit for bit
+    r_on = system().serve(ql.terms, ql.mask, ql.topic)
+    r_off = system(failover=False).serve(ql.terms, ql.mask, ql.topic)
+    offline_identical = (
+        bool(np.array_equal(r_on.topk, r_off.topk))
+        and bool(np.array_equal(r_on.latency, r_off.latency))
+        and (r_on.final is None
+             or bool(np.array_equal(r_on.final, r_off.final))))
+
+    payload = {
+        "config": {"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
+                   "max_batch": max_batch, "loads": list(loads),
+                   "gather_per_shard_us": gather_us,
+                   "n_shards": ns, "replicas": replicas,
+                   "failover_timeout": base.routing.failover_timeout,
+                   "max_retries": base.routing.max_retries},
+        "capacity_qps": float(capacity),
+        "response_budget": float(budget_r),
+        "worst_case_bound": float(system().worst_case_us()),
+        "rows": rows,
+        "guarantee_holds": all(r["over_budget"] == 0 for r in rows),
+        "coverage_certified": floors_hold,
+        "inert_replay_identical": replay_identical,
+        "inert_offline_identical": offline_identical,
+        # the injector must actually bite somewhere, or the certificate
+        # is vacuous (e.g. the schedule windows missed the trace)
+        "faults_demonstrated": any(
+            r["faults"] and (r["faults"]["retries"] > 0
+                             or r["faults"]["lost_partitions"] > 0
+                             or r["faults"]["transient"] > 0)
+            for r in rows if r["scenario"] != "none"),
+    }
+    payload["artifact"] = write_bench_artifact("faults", payload)
+    return payload
+
+
+def render_faults(res: dict) -> str:
+    c = res["config"]
+    lines = [f"capacity={res['capacity_qps']:.0f} qps, response budget="
+             f"{res['response_budget']:.0f} (service bound "
+             f"{res['worst_case_bound']:.0f}), "
+             f"{c['n_shards']}x{c['replicas']} replicas, "
+             f"failover={c['failover_timeout']:.0f}"
+             f"x{c['max_retries']} retries",
+             "load,scenario,over,shed,cov_min,cov_mean,degraded,"
+             "retries,lost,final_match"]
+    for r in res["rows"]:
+        f = r["faults"] or {}
+        m = r["full_final_match_vs_none"]
+        lines.append(
+            f"{r['load']:.2f},{r['scenario']},{r['over_budget']},"
+            f"{r['shed']},{r['coverage']['min']:.2f},"
+            f"{r['coverage']['mean']:.3f},{r['coverage']['degraded']},"
+            f"{f.get('retries', 0)},{f.get('lost_partitions', 0)},"
+            f"{'n/a' if m is None else f'{m:.2f}'}")
+    lines.append(
+        f"guarantee_holds={res['guarantee_holds']} "
+        f"coverage_certified={res['coverage_certified']} "
+        f"inert_replay={res['inert_replay_identical']} "
+        f"inert_offline={res['inert_offline_identical']} "
+        f"faults_demonstrated={res['faults_demonstrated']}")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--q-batch", type=int, default=256)
+    ap.add_argument("--n-docs", type=int, default=4096)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--loads", type=float, nargs="+", default=[0.5, 0.8])
+    ap.add_argument("--gather-us", type=float, default=4.0,
+                    help="per-extra-shard merge cost (makes the "
+                         "partial-coverage admission rung live)")
+    args = ap.parse_args()
+    res = run_faults(q_batch=args.q_batch, n_docs=args.n_docs,
+                     seed=args.seed, loads=tuple(args.loads),
+                     max_batch=args.max_batch, gather_us=args.gather_us)
+    print(render_faults(res))
+    print(f"artifact: {res['artifact']}")
+    checks = {k: res[k] for k in ("guarantee_holds", "coverage_certified",
+                                  "inert_replay_identical",
+                                  "inert_offline_identical",
+                                  "faults_demonstrated")}
+    failed = [k for k, v in checks.items() if not v]
+    if failed:
+        print(f"FAULT GUARANTEE CHECK FAILED: {', '.join(failed)}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

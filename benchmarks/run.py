@@ -37,10 +37,11 @@ def main() -> None:
     if args.quick:
         args.queries = 2000
 
-    from benchmarks import (bench_engines, bench_heldout, bench_hybrid,
-                            bench_kernels, bench_online, bench_predict_k,
-                            bench_predict_rho, bench_predict_time,
-                            bench_system, bench_tail, bench_tail_overlap)
+    from benchmarks import (bench_engines, bench_faults, bench_heldout,
+                            bench_hybrid, bench_kernels, bench_online,
+                            bench_predict_k, bench_predict_rho,
+                            bench_predict_time, bench_system, bench_tail,
+                            bench_tail_overlap)
     from benchmarks.common import load_experiment
 
     t0 = time.time()
@@ -90,6 +91,22 @@ def main() -> None:
         raise RuntimeError("online benchmark lost its teeth: the "
                            "no-admission/batch=1 baseline leaked no "
                            "violations at <= 0.8x capacity")
+
+    _section("Fault tolerance (crashes, stragglers, partition loss)")
+    fl = bench_faults.run_faults()
+    print(bench_faults.render_faults(fl))
+    print(f"artifact: {fl['artifact']}")
+    if not fl["guarantee_holds"]:
+        raise RuntimeError("fault-tolerance guarantee regressed: a served "
+                           "query exceeded the response budget under an "
+                           "injected fault scenario")
+    if not fl["coverage_certified"]:
+        raise RuntimeError("degradation floor regressed: a served query "
+                           "reported less coverage than the partitions the "
+                           "fault schedule left reachable")
+    if not (fl["inert_replay_identical"] and fl["inert_offline_identical"]):
+        raise RuntimeError("fault machinery is not inert: an empty "
+                           "FaultSpec perturbed fault-free serving")
 
     _section(f"Loading experiment ({args.queries} queries)")
     exp = load_experiment(args.queries)

@@ -135,7 +135,7 @@ def topk_from_tiles(acc_tiles: jnp.ndarray, k: int,
     return sc, ids.astype(jnp.int32)
 
 
-def merge_shard_topk(scores: list, ids: list, k: int):
+def merge_shard_topk(scores: list, ids: list, k: int, drop=None):
     """Scatter-gather merge of per-shard top-k candidate lists.
 
     ``scores[s]`` / ``ids[s]`` are the (Q, k_s) ranked candidates of shard
@@ -145,9 +145,27 @@ def merge_shard_topk(scores: list, ids: list, k: int):
     doc id asc), so the merged tie-break is *lower global doc id first* —
     exactly the tie-break of a single-shard top-k over the dense
     accumulator.  Returns (ids, scores) of shape (Q, k).
+
+    ``drop`` (optional, (n_shards, Q) bool) masks out shards whose response
+    was lost for a query (fault injection / partial coverage): a dropped
+    shard's candidates score dtype-min and surface with id ``-1``, so a
+    degraded query's list is exactly the merge over its surviving shards,
+    padded with ``-1`` when fewer than ``k`` candidates survive.  With
+    ``drop=None`` the computation (and result) is bit-identical to the
+    three-line merge this started as.
     """
     sc = jnp.concatenate(scores, axis=1)
     di = jnp.concatenate(ids, axis=1)
+    if drop is not None:
+        dead = jnp.concatenate(
+            [jnp.broadcast_to(jnp.asarray(drop[s])[:, None],
+                              scores[s].shape) for s in range(len(scores))],
+            axis=1)
+        fill = (jnp.finfo(sc.dtype).min
+                if jnp.issubdtype(sc.dtype, jnp.floating)
+                else jnp.iinfo(sc.dtype).min)
+        sc = jnp.where(dead, fill, sc)
+        di = jnp.where(dead, -1, di)
     top_sc, pos = jax.lax.top_k(sc, min(k, sc.shape[1]))
     top_id = jnp.take_along_axis(di, pos, axis=1)
     return top_id, top_sc

@@ -66,6 +66,24 @@ def main():
                     help="recorded arrival timestamps (.npy or JSON list) "
                          "for --arrival trace")
     ap.add_argument("--traffic-seed", type=int, default=0)
+    ap.add_argument("--fault-scenario", default=None,
+                    help="inject a named deterministic fault schedule: "
+                         "none | crash_one | rolling_restart | stragglers |"
+                         " timeout_storm | partition_outage "
+                         "(repro.serving.faults)")
+    ap.add_argument("--fault-json", default=None,
+                    help="inject a FaultSpec from a JSON file (overrides "
+                         "--fault-scenario)")
+    ap.add_argument("--failover-timeout", type=float, default=None,
+                    help="scatter-gather shard timeout (cost units); "
+                         "required (directly or via the preset) when the "
+                         "fault schedule can kill requests")
+    ap.add_argument("--max-retries", type=int, default=None,
+                    help="bounded failover re-issues per (query, shard); "
+                         "charged into the worst-case bound")
+    ap.add_argument("--fault-horizon", type=float, default=10_000.0,
+                    help="trace horizon (cost units) named scenarios are "
+                         "sized against")
     args = ap.parse_args()
 
     from repro.configs.cascade_presets import get_preset
@@ -79,12 +97,34 @@ def main():
         online = dataclasses.replace(online, max_batch=args.max_batch)
     if args.no_admission:
         online = dataclasses.replace(online, admission=False)
+    routing = spec.routing
+    if args.budget is not None:
+        routing = dataclasses.replace(routing, budget=args.budget)
+    if args.failover_timeout is not None:
+        routing = dataclasses.replace(routing,
+                                      failover_timeout=args.failover_timeout)
+    if args.max_retries is not None:
+        routing = dataclasses.replace(routing, max_retries=args.max_retries)
+    fault = spec.fault
+    if args.fault_json:
+        import json
+
+        from repro.serving.spec import FaultSpec
+        with open(args.fault_json) as f:
+            fault = FaultSpec(**json.load(f))
+    elif args.fault_scenario:
+        from repro.serving.faults import fault_scenario
+        fault = fault_scenario(args.fault_scenario,
+                               n_partitions=args.shards,
+                               replicas=args.replicas,
+                               horizon=args.fault_horizon,
+                               seed=args.traffic_seed)
     spec = dataclasses.replace(
         spec,
         deploy=dataclasses.replace(spec.deploy, n_shards=args.shards,
                                    replicas=args.replicas),
-        routing=(spec.routing if args.budget is None else
-                 dataclasses.replace(spec.routing, budget=args.budget)),
+        routing=routing,
+        fault=fault,
         stage2=(spec.stage2 if not args.no_ltr else
                 dataclasses.replace(spec.stage2, enabled=False)),
         backend=(spec.backend if args.backend is None else
@@ -163,6 +203,16 @@ def main():
             for name, sp in s["stages"].items():
                 print(f"[serve] {name:7s} ms: p50={sp['p50']:.2f} "
                       f"p99={sp['p99']:.2f} max={sp['max']:.2f}")
+        if "coverage" in s:
+            c = s["coverage"]
+            print(f"[serve] coverage: min={c['min']:.2f} "
+                  f"mean={c['mean']:.3f} degraded={c['degraded']}")
+        if "faults" in s:
+            f = s["faults"]
+            print(f"[serve] faults: retries={f['retries']} "
+                  f"lost={f['lost_partitions']} no_route={f['no_route']} "
+                  f"transient={f['transient']} probes={f['probes']} "
+                  f"recovered={f['recovered']}")
         print(f"[serve] over response budget ({s['response_budget']:.0f}): "
               f"{s['over_budget']} ({s['over_budget_pct']:.4f}%)")
         return
@@ -188,6 +238,13 @@ def main():
           f"p99.99={s['p99.99']:.1f} max={s['max']:.1f}")
     print(f"[serve] over budget ({system.budget:.0f}): {s['over_budget']} "
           f"({s['over_budget_pct']:.4f}%)")
+    if "coverage" in s:
+        c = s["coverage"]
+        f = s["faults"]
+        print(f"[serve] faults: coverage min={c['min']:.2f} "
+              f"mean={c['mean']:.3f} degraded={c['degraded']}; "
+              f"retries={f['retries']} lost={f['lost_partitions']} "
+              f"probes={f['probes']} recovered={f['recovered']}")
     if res.final is not None:
         print(f"[serve] stage-2: mean candidates="
               f"{res.candidates_used.mean():.1f} "

@@ -14,8 +14,9 @@ See ``traffic`` (arrival processes), ``batcher`` (micro-batch policy),
 ``admission`` (degrade/shed ladder), and ``simulator`` (the event loop).
 """
 
-from repro.serving.online.admission import (FULL, MODE_NAMES, SHED, STAGE1,
-                                            TRIM, AdmissionController)
+from repro.serving.online.admission import (FULL, MODE_NAMES, PARTIAL, SHED,
+                                            STAGE1, TRIM,
+                                            AdmissionController)
 from repro.serving.online.batcher import (MicroBatcher, bucket_size,
                                           pad_batch)
 from repro.serving.online.simulator import (OnlineResult, estimate_capacity,
@@ -24,7 +25,7 @@ from repro.serving.online.traffic import arrival_times, load_trace
 
 __all__ = [
     "AdmissionController", "FULL", "MODE_NAMES", "MicroBatcher",
-    "OnlineResult", "SHED", "STAGE1", "TRIM", "arrival_times",
+    "OnlineResult", "PARTIAL", "SHED", "STAGE1", "TRIM", "arrival_times",
     "bucket_size", "estimate_capacity", "fresh_probe", "load_trace",
     "pad_batch", "simulate",
 ]

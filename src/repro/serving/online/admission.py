@@ -16,7 +16,15 @@ Stage-0+1 service bound (``worst_case_us`` minus the Stage-2 reserve):
    cap candidates at ``stage2_afford(cost, slack - S1, k_serve)``;
 3. **stage1**  — ``slack >= S1`` only: serve the rank-safe Stage-1 list,
    skip Stage-2 outright (cap 0);
-4. **shed**    — even the first stage cannot finish inside the budget:
+4. **partial** — the full scatter-gather does not fit, but a *narrower*
+   one does: query only the first ``m`` partitions (``m`` the largest
+   shard count whose Stage-1 bound fits the slack — each extra shard
+   costs ``CostModel.gather_per_shard_us`` of merge fan-out), serving the
+   rank-safe order over partial coverage.  Only reachable on multi-shard
+   deployments with a nonzero gather overhead (otherwise shard count does
+   not buy back any bound) — see the fault-tolerance section of the
+   README;
+5. **shed**    — even one partition cannot finish inside the budget:
    reject.  A rejection at arrival time (predicted wait from queue depth
    and the observed batch-occupancy EWMA) is cheaper than one at dispatch
    — the query never occupies the queue.
@@ -35,8 +43,9 @@ from repro.serving.latency import CostModel, stage2_afford
 from repro.serving.spec import OnlineSpec
 
 # per-query service modes, in degradation order
-FULL, TRIM, STAGE1, SHED = 0, 1, 2, 3
-MODE_NAMES = {FULL: "full", TRIM: "trim", STAGE1: "stage1", SHED: "shed"}
+FULL, TRIM, STAGE1, PARTIAL, SHED = 0, 1, 2, 3, 4
+MODE_NAMES = {FULL: "full", TRIM: "trim", STAGE1: "stage1",
+              PARTIAL: "partial", SHED: "shed"}
 
 
 class AdmissionController:
@@ -45,12 +54,20 @@ class AdmissionController:
     ``stage1_bound`` is the hard bound on Stage-0+1 service
     (``SearchSystem.worst_case_us() - stage2 reserve``); ``k_serve`` the
     full candidate width (``None`` disables the Stage-2 rungs — a
-    stage1-only deployment ladder is admit/shed).
+    stage1-only deployment ladder is admit/partial/shed).
+
+    ``partial_bounds`` (optional, ascending, length ``n_shards``) are the
+    hard Stage-0+1 bounds when only ``m`` partitions are queried
+    (``partial_bounds[m-1] = SchedulerConfig.worst_case_us(cost, m)``);
+    they enable the partial-coverage rung.  ``None`` — or bounds that do
+    not actually shrink with shard count (``gather_per_shard_us == 0``) —
+    leave the rung unreachable and the ladder exactly as before.
     """
 
     def __init__(self, cfg: OnlineSpec, cost: CostModel,
                  stage1_bound: float, k_serve: int | None,
-                 response_budget: float):
+                 response_budget: float,
+                 partial_bounds=None):
         cfg.validate()
         if response_budget <= 0:
             raise ValueError("response_budget must be positive")
@@ -59,17 +76,34 @@ class AdmissionController:
         self.stage1_bound = float(stage1_bound)
         self.k_serve = k_serve
         self.response_budget = float(response_budget)
+        self._partial_bounds = None
+        if partial_bounds is not None and len(partial_bounds) > 1:
+            pb = np.asarray(partial_bounds, np.float64)
+            if np.any(np.diff(pb) < 0):
+                raise ValueError("partial_bounds must be ascending in "
+                                 "shard count")
+            if pb[-1] > self.stage1_bound + 1e-6:
+                raise ValueError("partial_bounds[-1] (the full fan-out "
+                                 "bound) must not exceed stage1_bound")
+            if pb[0] < pb[-1]:         # narrowing actually buys back time
+                self._partial_bounds = pb
         # the full-service bound (stage1 + worst-case Stage-2) is a run
         # constant — hoisted out of the per-arrival hot path
         self._full_bound = self.stage1_bound + (
             float(cost.ltr_time(np.asarray(k_serve)))
             if k_serve is not None else 0.0)
+        # the most degraded service still offered: one-partition coverage
+        # when the partial rung is live, stage1-only otherwise
+        self._degrade_floor = (float(self._partial_bounds[0])
+                               if self._partial_bounds is not None
+                               else self.stage1_bound)
         # observed batch-occupancy EWMA for the arrival-time wait estimate;
         # starts at the conservative worst case so a cold start over-sheds
         # rather than over-admits
         self.occupancy_ewma = cfg.dispatch_us + self._full_bound
         self.stats = {"shed_arrival": 0, "shed_queue_cap": 0,
-                      "shed_dispatch": 0, "degraded": 0, "admitted": 0}
+                      "shed_dispatch": 0, "degraded": 0, "partial": 0,
+                      "admitted": 0}
 
     # ------------------------------------------------------------------
     def observe_batch(self, occupancy: float, alpha: float = 0.2) -> None:
@@ -89,7 +123,7 @@ class AdmissionController:
         batches_ahead = queue_depth // self.cfg.max_batch
         wait_est = (max(server_free - arrival, 0.0)
                     + batches_ahead * self.occupancy_ewma)
-        floor = (self.stage1_bound if self.cfg.degrade
+        floor = (self._degrade_floor if self.cfg.degrade
                  else self._full_bound)
         if wait_est + self.cfg.dispatch_us + floor > self.response_budget:
             self.stats["shed_arrival"] += 1
@@ -97,19 +131,42 @@ class AdmissionController:
         self.stats["admitted"] += 1
         return True
 
+    def _partial_rung(self, mode: np.ndarray, slack: np.ndarray,
+                      fits_s1: np.ndarray) -> np.ndarray | None:
+        """Apply the partial-coverage rung to rows the full fan-out cannot
+        serve; returns the per-query shard cap (or ``None`` when the rung
+        is unreachable)."""
+        if self._partial_bounds is None or not self.cfg.degrade:
+            return None
+        ns = len(self._partial_bounds)
+        # largest shard count whose Stage-1 bound fits the slack
+        m = np.searchsorted(self._partial_bounds, slack + 1e-9,
+                            side="right")
+        part = ~fits_s1 & (m >= 1)
+        mode[part] = PARTIAL
+        shard_cap = np.full(len(slack), ns, np.int64)
+        shard_cap[part] = np.minimum(m[part], ns - 1)
+        self.stats["partial"] += int(part.sum())
+        return shard_cap
+
     def at_dispatch(self, waits: np.ndarray
-                    ) -> tuple[np.ndarray, np.ndarray | None]:
-        """(mode, stage2_cap) per query from its *actual* wait at batch
-        close.  ``stage2_cap`` is ``None`` for stage1-only deployments;
-        shed rows get cap 0 (they are never served)."""
+                    ) -> tuple[np.ndarray, np.ndarray | None,
+                               np.ndarray | None]:
+        """(mode, stage2_cap, shard_cap) per query from its *actual* wait
+        at batch close.  ``stage2_cap`` is ``None`` for stage1-only
+        deployments; shed rows get cap 0 (they are never served).
+        ``shard_cap`` is ``None`` unless the partial-coverage rung is live
+        (``partial_bounds``); partial rows serve the rank-safe Stage-1
+        order over their first ``shard_cap`` partitions (stage2_cap 0)."""
         waits = np.asarray(waits, np.float64)
         slack = self.response_budget - waits - self.cfg.dispatch_us
         mode = np.full(len(waits), SHED, np.int64)
         fits_s1 = slack >= self.stage1_bound - 1e-9
         if self.k_serve is None:
             mode[fits_s1] = FULL
-            self.stats["shed_dispatch"] += int(np.sum(~fits_s1))
-            return mode, None
+            shard_cap = self._partial_rung(mode, slack, fits_s1)
+            self.stats["shed_dispatch"] += int(np.sum(mode == SHED))
+            return mode, None, shard_cap
         afford = stage2_afford(self.cost, slack - self.stage1_bound,
                                self.k_serve)
         if not self.cfg.degrade:
@@ -117,12 +174,14 @@ class AdmissionController:
             full = fits_s1 & (afford >= self.k_serve)
             mode[full] = FULL
             self.stats["shed_dispatch"] += int(np.sum(~full))
-            return mode, np.where(full, self.k_serve, 0).astype(np.int64)
+            return (mode, np.where(full, self.k_serve, 0).astype(np.int64),
+                    None)
         mode[fits_s1 & (afford == 0)] = STAGE1
         mode[fits_s1 & (0 < afford) & (afford < self.k_serve)] = TRIM
         mode[fits_s1 & (afford >= self.k_serve)] = FULL
-        self.stats["shed_dispatch"] += int(np.sum(~fits_s1))
+        shard_cap = self._partial_rung(mode, slack, fits_s1)
+        self.stats["shed_dispatch"] += int(np.sum(mode == SHED))
         self.stats["degraded"] += int(np.sum(fits_s1 & (afford
                                                         < self.k_serve)))
         cap = np.where(fits_s1, afford, 0).astype(np.int64)
-        return mode, cap
+        return mode, cap, shard_cap

@@ -52,7 +52,7 @@ class OnlineResult:
     service: np.ndarray          # (Q,) service time (-1 = shed)
     completion: np.ndarray       # (Q,) completion timestamp (-1 = shed)
     response: np.ndarray         # (Q,) completion - arrival (-1 = shed)
-    mode: np.ndarray             # (Q,) FULL | TRIM | STAGE1 | SHED
+    mode: np.ndarray             # (Q,) FULL|TRIM|STAGE1|PARTIAL|SHED
     batch_of: np.ndarray         # (Q,) batch id (-1 = shed)
     topk: np.ndarray             # (Q, k_serve) Stage-1 candidates (-1 = shed)
     final: np.ndarray | None     # (Q, t_final) re-ranked (None: no LTR)
@@ -60,6 +60,9 @@ class OnlineResult:
     # event_log rows: (qid, batch_id, arrival, start, wait, service,
     #                  completion, mode) — plain floats/ints, bit-comparable
     stats: dict = field(default_factory=dict)
+    coverage: np.ndarray | None = None   # (Q,) fraction of partitions that
+                                         # answered (-1 = shed; None: the
+                                         # fault/partial path never engaged)
 
 
 def simulate(system, terms: np.ndarray, mask: np.ndarray,
@@ -75,8 +78,16 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
     reserve2 = system._budget_reserve["stage2"]
     stage1_bound = system.worst_case_us() - reserve2
     budget_r = online.response_budget_us or 2.0 * system.budget
+    ns = system.n_shards
+    # partial-coverage rung: per-shard-count Stage-1 bounds.  Only offered
+    # when narrowing the fan-out actually buys back bound time (multi-shard
+    # + nonzero merge overhead); otherwise the ladder is exactly as before.
+    partial_bounds = None
+    if ns > 1 and system.cost.gather_per_shard_us > 0:
+        partial_bounds = [system.sched.cfg.worst_case_us(system.cost, m)
+                          for m in range(1, ns + 1)]
     adm = (AdmissionController(online, system.cost, stage1_bound, k_serve,
-                               budget_r)
+                               budget_r, partial_bounds=partial_bounds)
            if online.admission else None)
 
     mode = np.full(q, SHED, np.int64)
@@ -87,6 +98,8 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
     topk = np.full((q, system.k_serve), -1, np.int64)
     final = (np.full((q, system.t_final), -1, np.int64)
              if system.ltr is not None else None)
+    faulted = system.faults.active or partial_bounds is not None
+    coverage = np.full(q, _NOT_SERVED) if faulted else None
     stage_acc: dict = {}
     events: list = []
     batch_meta: list = []
@@ -108,10 +121,11 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
         nonlocal t_free
         waits = t_start - arr[rows]
         if adm is not None:
-            m, cap = adm.at_dispatch(waits)
+            m, cap, scap = adm.at_dispatch(waits)
         else:
             m = np.full(len(rows), FULL, np.int64)
             cap = None
+            scap = None
         mode[rows] = m
         wait[rows] = waits
         keep = m != SHED
@@ -127,9 +141,15 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
             cap_k = cap[keep]
             cap_p = np.concatenate(
                 [cap_k, np.full(len(padded) - n_real, cap_k[0], np.int64)])
+        shard_p = None
+        if scap is not None and bool((scap[keep] < ns).any()):
+            sc_k = scap[keep]
+            shard_p = np.concatenate(
+                [sc_k, np.full(len(padded) - n_real, sc_k[0], np.int64)])
         res = system.serve(terms[padded], mask[padded],
                            topics[padded] if system.ltr is not None
-                           else None, stage2_cap=cap_p)
+                           else None, stage2_cap=cap_p, shard_cap=shard_p,
+                           now=float(t_start))
         bid = len(batch_meta)
         svc = np.asarray(res.latency[:n_real], np.float64)
         occupancy = online.dispatch_us + float(np.max(res.latency))
@@ -137,6 +157,9 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
         completion[served] = t_start + online.dispatch_us + svc
         batch_of[served] = bid
         topk[served] = res.topk[:n_real]
+        if coverage is not None:
+            coverage[served] = (res.coverage[:n_real]
+                                if res.coverage is not None else 1.0)
         if final is not None and res.final is not None:
             final[served] = res.final[:n_real]
         for name, t in res.stage_latency.items():
@@ -192,6 +215,15 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
         "admission": dict(adm.stats) if adm is not None else None,
         "worst_case_bound": float(system.worst_case_us()),
     }
+    if faulted:
+        if system.faults.active:
+            stats["faults"] = dict(system._fault_counters)
+        cov = coverage[served_rows]
+        stats["coverage"] = {
+            "min": float(cov.min()) if len(cov) else 1.0,
+            "mean": float(cov.mean()) if len(cov) else 1.0,
+            "degraded": int(np.sum((cov >= 0) & (cov < 1.0))),
+        }
     makespan = float(arr[-1] - arr[0]) if q > 1 else 0.0
     if makespan > 0:
         stats["offered_qps"] = 1000.0 * q / makespan
@@ -216,7 +248,7 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
     return OnlineResult(arrival=arr, wait=wait, service=service,
                         completion=completion, response=resp, mode=mode,
                         batch_of=batch_of, topk=topk, final=final,
-                        event_log=events, stats=stats)
+                        event_log=events, stats=stats, coverage=coverage)
 
 
 def fresh_probe(system):

@@ -66,6 +66,19 @@ class ReplicaPool:
                 if r.partition == partition and r.mirror == mirror
                 and r.healthy]
 
+    def _pick_from(self, cands: list[Replica]) -> Replica | None:
+        """Power-of-two-choices on (inflight, ewma latency) over an
+        explicit candidate list (RNG draw only when there is a choice)."""
+        if not cands:
+            return None
+        if len(cands) == 1:
+            return cands[0]
+        a, b = self.rng.choice(len(cands), size=2, replace=False)
+        ra, rb = cands[a], cands[b]
+        # expected time-to-drain; the random pair ordering breaks ties fairly
+        key = (lambda r: (r.inflight + 1) * r.ewma_latency)
+        return ra if key(ra) <= key(rb) else rb
+
     def pick(self, partition: int, mirror: str) -> Replica | None:
         """Power-of-two-choices on (inflight, ewma latency)."""
         cands = self.candidates(partition, mirror)
@@ -75,15 +88,7 @@ class ReplicaPool:
             # budget guarantee), BMW for JASS (budget risk, logged)
             other = JASS if mirror == BMW else BMW
             cands = self.candidates(partition, other)
-            if not cands:
-                return None
-        if len(cands) == 1:
-            return cands[0]
-        a, b = self.rng.choice(len(cands), size=2, replace=False)
-        ra, rb = cands[a], cands[b]
-        # expected time-to-drain; the random pair ordering breaks ties fairly
-        key = (lambda r: (r.inflight + 1) * r.ewma_latency)
-        return ra if key(ra) <= key(rb) else rb
+        return self._pick_from(cands)
 
     def route_query(self, mirror: str) -> list[Replica] | None:
         """A query fans out to one replica of EVERY partition; all-or-
@@ -99,6 +104,50 @@ class ReplicaPool:
             r.inflight += 1
             picks.append(r)
         return picks
+
+    def route_query_partial(self, mirror: str) -> list[Replica | None]:
+        """Like :meth:`route_query` but a partition with no healthy replica
+        yields ``None`` in its slot instead of aborting the whole fan-out —
+        the degraded-serving entry point.  When every partition is healthy
+        the pick sequence (and RNG stream) is identical to
+        :meth:`route_query`."""
+        picks: list[Replica | None] = []
+        for p in range(self.cfg.n_partitions):
+            r = self.pick(p, mirror)
+            if r is not None:
+                r.inflight += 1
+            picks.append(r)
+        return picks
+
+    def pick_retry(self, partition: int, mirror: str,
+                   tried_ids: set[int]) -> Replica | None:
+        """Failover pick for a timed-out shard request: prefer a healthy
+        replica of the same partition not yet tried for this (query, shard)
+        — routed mirror first, then the other mirror — and only then allow
+        a re-try of an already-tried healthy replica (transient timeouts
+        clear).  Returns ``None`` when the partition has no healthy replica
+        at all."""
+        other = JASS if mirror == BMW else BMW
+        for pool in (self.candidates(partition, mirror),
+                     self.candidates(partition, other)):
+            fresh = [r for r in pool if id(r) not in tried_ids]
+            if fresh:
+                return self._pick_from(fresh)
+        return self.pick(partition, mirror)
+
+    def probe_unhealthy(self, is_up_fn=None) -> tuple[int, int]:
+        """Probe every unhealthy replica; ``is_up_fn(replica) -> bool``
+        decides the probe outcome (default: always up, i.e. the fault has
+        cleared).  Returns (probes sent, replicas recovered)."""
+        probes = recovered = 0
+        for r in self.replicas:
+            if r.healthy:
+                continue
+            probes += 1
+            ok = True if is_up_fn is None else bool(is_up_fn(r))
+            self.probe(r, ok=ok)
+            recovered += int(ok)
+        return probes, recovered
 
     def complete(self, replica: Replica, latency: float, ok: bool = True):
         replica.inflight = max(replica.inflight - 1, 0)

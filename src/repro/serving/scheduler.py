@@ -66,10 +66,21 @@ class SchedulerConfig:
     late_rho: int = 0                   # late-hedge re-issue ρ cap
                                         # (0 = auto: rho_min)
     enforce_budget: bool = True         # deadline re-route JASS rows too
+    failover_timeout: float = 0.0       # scatter-gather shard timeout
+                                        # (0 = no failover)
+    max_retries: int = 0                # bounded re-issues per (query, shard)
 
     def resolved_late_rho(self) -> int:
         """The effective late-hedge ρ cap (``late_rho`` or ``rho_min``)."""
         return int(self.late_rho) if self.late_rho > 0 else int(self.rho_min)
+
+    def retry_us(self) -> float:
+        """Worst-case failover wait charged into the bound: each of the
+        ``max_retries`` re-issues is detected after ``failover_timeout``
+        (the original request's timeout is the first detection and is also
+        how a lost partition is declared, so ``max_retries`` timeouts cover
+        the retry cascade on top of whichever attempt finally serves)."""
+        return self.max_retries * self.failover_timeout
 
     def max_late_rho(self, cost: CostModel, n_shards: int = 1) -> int:
         """Largest ρ_late for which the worst-case bound collapses to the
@@ -82,10 +93,14 @@ class SchedulerConfig:
         traversal.  Budgeting the re-issue globally (``n_shards=1``) would
         let that overhead silently eat the hedge headroom, so the gather
         term is subtracted from the slack here, exactly mirroring
-        :meth:`worst_case_us`."""
+        :meth:`worst_case_us`.  With failover enabled the re-issue can
+        additionally wait out ``max_retries`` shard timeouts before its
+        serving attempt runs (:meth:`retry_us`), so that term shrinks the
+        admissible ρ_late the same way."""
         slack = ((1.0 - self.hedge_deadline) * self.budget
                  - cost.saat_fixed_us
-                 - cost.gather_per_shard_us * (n_shards - 1))
+                 - cost.gather_per_shard_us * (n_shards - 1)
+                 - self.retry_us())
         if cost.saat_per_posting_us <= 0:
             return self.rho_max if slack >= 0 else 0
         return max(int(slack / cost.saat_per_posting_us), 0)
@@ -95,13 +110,16 @@ class SchedulerConfig:
         (see module docstring *Guarantee accounting*)."""
         gather = cost.gather_per_shard_us * (n_shards - 1)
         late = float(cost.saat_time(np.float64(self.resolved_late_rho())))
-        reissue = self.budget * self.hedge_deadline + late + gather
+        # with failover, any attempt (including the late re-issue) can wait
+        # out max_retries shard timeouts before the serving attempt runs
+        reissue = (self.budget * self.hedge_deadline + late + gather
+                   + self.retry_us())
         bound = max(self.budget, reissue)
         if not self.enforce_budget:
             # JASS rows are bounded only by their ρ_max-capped traversal
             bound = max(bound,
                         float(cost.saat_time(np.float64(self.rho_max)))
-                        + gather)
+                        + gather + self.retry_us())
         return bound + cost.predict_us
 
 
@@ -162,7 +180,7 @@ class StageZeroScheduler:
         return np.minimum(t, cfg.budget * cfg.hedge_deadline + tj)
 
     def resolve_times(self, routed: RoutedBatch, t_bmw: np.ndarray,
-                      work_jass_fn) -> np.ndarray:
+                      work_jass_fn, late_jass_fn=None) -> np.ndarray:
         """Final per-query latency under hedging semantics.
 
         t_bmw: modeled/measured BMW time for every query (used for rows
@@ -171,10 +189,18 @@ class StageZeroScheduler:
         blows the detection deadline is late-hedged — re-issued with the
         dedicated small ``late_rho`` cap, so the worst case is bounded by
         ``budget·hedge_deadline + ρ_late·c_s`` (*Guarantee accounting* in
-        the module docstring)."""
+        the module docstring).
+
+        ``late_jass_fn`` (defaults to ``work_jass_fn``) prices the late-
+        hedge re-issue separately: under fault injection the primary
+        executions run on (possibly faulted) routed replicas while the
+        deadline re-issue goes to a *fresh healthy* replica, so it pays
+        nominal JASS cost, not the faulted one."""
         n = len(routed.k)
         t = np.zeros(n)
         cfg = self.cfg
+        if late_jass_fn is None:
+            late_jass_fn = work_jass_fn
         if len(routed.jass_rows):
             rows = routed.jass_rows
             tj = work_jass_fn(rows, routed.rho[rows])
@@ -183,7 +209,7 @@ class StageZeroScheduler:
                 if late.any():
                     tj = tj.copy()
                     tj[late] = self._late_hedge(routed, rows[late], tj[late],
-                                                work_jass_fn)
+                                                late_jass_fn)
                     self.stats["late_hedged_jass"] += int(late.sum())
             t[rows] = tj
         if len(routed.bmw_rows):
@@ -201,7 +227,7 @@ class StageZeroScheduler:
             if late.any():
                 rows = routed.bmw_rows[late]
                 tb[late] = self._late_hedge(routed, rows, tb[late],
-                                            work_jass_fn)
+                                            late_jass_fn)
                 self.stats["late_hedged"] += int(late.sum())
             t[routed.bmw_rows] = tb
         return t + self.cost.predict_us

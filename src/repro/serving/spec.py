@@ -72,6 +72,15 @@ class RoutingSpec:
                                  # adaptations from pool EWMAs (0 = off)
     calibrate: bool = False     # fit(): set t_k/t_time from the trained
                                 # predictors' distribution
+    failover_timeout: float = 0.0  # scatter-gather timeout (time units):
+                                   # a shard request with no response by
+                                   # this is declared dead and re-issued to
+                                   # another healthy replica (0 = no
+                                   # failover; required when faults are on)
+    max_retries: int = 0         # bounded re-issues per (query, shard);
+                                 # the retry budget max_retries *
+                                 # failover_timeout is charged into the
+                                 # worst_case_us bound
 
     def validate(self) -> None:
         if self.algorithm not in (1, 2):
@@ -88,6 +97,21 @@ class RoutingSpec:
             raise ValueError("late_rho must not exceed rho_max")
         if self.adapt_every < 0:
             raise ValueError("adapt_every must be >= 0 (0 = off)")
+        if self.failover_timeout < 0:
+            raise ValueError("failover_timeout must be >= 0 (0 = off)")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.max_retries > 0 and self.failover_timeout <= 0:
+            raise ValueError("max_retries > 0 needs failover_timeout > 0 "
+                             "(retries are issued at the timeout)")
+        if (self.failover_timeout > 0
+                and (1 + self.max_retries) * self.failover_timeout
+                > self.budget):
+            raise ValueError(
+                "(1 + max_retries) * failover_timeout must fit the budget: "
+                "a fully-dead partition is declared lost only after the "
+                "whole retry chain times out, and that wait must stay "
+                "inside the response bound")
 
 
 @dataclass(frozen=True)
@@ -163,6 +187,95 @@ class OnlineSpec:
             raise ValueError("queue_cap must be >= 0 (0 = unbounded)")
         if self.response_budget_us < 0:
             raise ValueError("response_budget_us must be >= 0 (0 = auto)")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """A deterministic, seeded fault-injection schedule.
+
+    The 99.99 % regime is exactly where machine failures, not query
+    difficulty, dominate the tail — this node makes failures part of the
+    *named* operating point so a guarantee can be certified under them
+    (``benchmarks/bench_faults.py``).  All times are on the serving clock
+    in cost-model units: the offline ``serve()`` path advances a virtual
+    clock by each batch's occupancy, the online simulator drives it from
+    the event loop, so one schedule means the same thing on both paths.
+
+    ``partition=-1`` / ``replica=-1`` are wildcards (every partition /
+    every replica of the partition).  Windows are half-open ``[t0, t1)``;
+    use ``float("inf")`` (JSON ``Infinity``) for an open end.
+
+    An empty schedule (the default) is **inert**: the fault layer is
+    skipped entirely — no RNG draws, no pool interactions — so serving is
+    bit-identical to a fault-free build.
+    """
+    # replica crash/recover windows: (partition, replica, t_start, t_end) —
+    # requests to the replica inside the window never respond (detected at
+    # the failover timeout); outside it, health probes re-admit it
+    crashes: tuple = ()
+    # straggler windows: (partition, replica, t_start, t_end, slowdown) —
+    # the replica responds, slowdown x slower than nominal
+    stragglers: tuple = ()
+    # whole-partition outages: (partition, t_start, t_end) — every replica
+    # of the partition is down; queries degrade to partial coverage
+    outages: tuple = ()
+    # transient per-request timeout probability inside [t_start, t_end)
+    timeout_p: float = 0.0
+    timeout_start: float = 0.0
+    timeout_end: float = float("inf")
+    seed: int = 0                # transient-draw RNG seed
+
+    def __post_init__(self):
+        # JSON round-trips tuples as lists; coerce back so a round-tripped
+        # spec compares (and hashes) equal to the original
+        for name in ("crashes", "stragglers", "outages"):
+            object.__setattr__(
+                self, name,
+                tuple(tuple(w) for w in getattr(self, name)))
+
+    @property
+    def active(self) -> bool:
+        """Whether the schedule injects anything at all."""
+        return bool(self.crashes or self.stragglers or self.outages
+                    or self.timeout_p > 0)
+
+    @property
+    def needs_failover(self) -> bool:
+        """Whether the schedule can kill requests (and therefore needs a
+        ``RoutingSpec.failover_timeout`` to detect them)."""
+        return bool(self.crashes or self.outages or self.timeout_p > 0)
+
+    def validate(self) -> None:
+        def _window(p, t0, t1, r=None):
+            if p < -1:
+                raise ValueError(f"partition must be >= -1, got {p}")
+            if r is not None and r < -1:
+                raise ValueError(f"replica must be >= -1, got {r}")
+            if t1 < t0:
+                raise ValueError(f"fault window [{t0}, {t1}) is inverted")
+        for w in self.crashes:
+            if len(w) != 4:
+                raise ValueError(f"crash window needs (partition, replica, "
+                                 f"t_start, t_end), got {w}")
+            _window(w[0], w[2], w[3], r=w[1])
+        for w in self.stragglers:
+            if len(w) != 5:
+                raise ValueError(f"straggler window needs (partition, "
+                                 f"replica, t_start, t_end, slowdown), "
+                                 f"got {w}")
+            _window(w[0], w[2], w[3], r=w[1])
+            if w[4] < 1.0:
+                raise ValueError(f"straggler slowdown must be >= 1, "
+                                 f"got {w[4]}")
+        for w in self.outages:
+            if len(w) != 3:
+                raise ValueError(f"outage window needs (partition, t_start, "
+                                 f"t_end), got {w}")
+            _window(w[0], w[1], w[2])
+        if not 0.0 <= self.timeout_p < 1.0:
+            raise ValueError("timeout_p must be in [0, 1)")
+        if self.timeout_end < self.timeout_start:
+            raise ValueError("timeout window is inverted")
 
 
 ARRIVALS = ("poisson", "bursty", "diurnal", "trace")
@@ -264,7 +377,7 @@ class DeploySpec:
 
 _NODES = {"index": IndexSpec, "stage0": Stage0Spec, "routing": RoutingSpec,
           "stage2": Stage2Spec, "backend": BackendSpec, "deploy": DeploySpec,
-          "online": OnlineSpec}
+          "online": OnlineSpec, "fault": FaultSpec}
 
 
 @dataclass(frozen=True)
@@ -277,11 +390,18 @@ class CascadeSpec:
     backend: BackendSpec = field(default_factory=BackendSpec)
     deploy: DeploySpec = field(default_factory=DeploySpec)
     online: OnlineSpec = field(default_factory=OnlineSpec)
+    fault: FaultSpec = field(default_factory=FaultSpec)
     name: str = "custom"
 
     def validate(self) -> "CascadeSpec":
         for node in _NODES:
             getattr(self, node).validate()
+        if self.fault.needs_failover and self.routing.failover_timeout <= 0:
+            raise ValueError(
+                "the fault schedule can kill requests (crashes / outages / "
+                "transient timeouts) but routing.failover_timeout is 0 — "
+                "dead shard requests would hang forever; set a timeout "
+                "(and max_retries) so failover is possible")
         return self
 
     # -- serialization ------------------------------------------------------

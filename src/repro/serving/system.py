@@ -56,6 +56,7 @@ from repro.isn.saat import saat_serve
 from repro.ltr.cascade import CascadeResult, rerank_batched
 from repro.ltr.ranker import (LTRModel, csr_search_iters, ltr_training_set,
                               qd_features, stage2_arrays, train_ltr)
+from repro.serving.faults import FaultInjector
 from repro.serving.latency import (CostModel, budget_attribution,
                                    over_budget, percentiles,
                                    resolve_level_cut, stage2_afford)
@@ -73,6 +74,9 @@ class PipelineResult:
     latency: np.ndarray              # (Q,) full-cascade latency
     stage_latency: dict              # {"stage0"|"stage1"|"stage2": (Q,)}
     stats: dict
+    coverage: np.ndarray | None = None   # (Q,) fraction of partitions that
+                                         # answered (None: full coverage,
+                                         # no fault/partial path engaged)
 
 
 def scheduler_config(routing: RoutingSpec) -> SchedulerConfig:
@@ -83,7 +87,9 @@ def scheduler_config(routing: RoutingSpec) -> SchedulerConfig:
         budget=routing.budget, hedge_band=routing.hedge_band,
         enable_hedging=routing.enable_hedging,
         hedge_deadline=routing.hedge_deadline, late_rho=routing.late_rho,
-        enforce_budget=routing.enforce_budget)
+        enforce_budget=routing.enforce_budget,
+        failover_timeout=routing.failover_timeout,
+        max_retries=routing.max_retries)
 
 
 def routing_spec(cfg: SchedulerConfig) -> RoutingSpec:
@@ -93,7 +99,8 @@ def routing_spec(cfg: SchedulerConfig) -> RoutingSpec:
         rho_max=cfg.rho_max, rho_min=cfg.rho_min, budget=cfg.budget,
         hedge_band=cfg.hedge_band, enable_hedging=cfg.enable_hedging,
         hedge_deadline=cfg.hedge_deadline, late_rho=cfg.late_rho,
-        enforce_budget=cfg.enforce_budget)
+        enforce_budget=cfg.enforce_budget,
+        failover_timeout=cfg.failover_timeout, max_retries=cfg.max_retries)
 
 
 def build_system(spec: CascadeSpec, corpus_or_index, *, corpus=None,
@@ -178,6 +185,24 @@ class SearchSystem:
                        replicas_per_partition=spec.deploy.replicas,
                        jass_fraction=spec.deploy.jass_fraction),
             seed=spec.deploy.seed)
+        # deterministic fault injection (spec.fault; inert by default) +
+        # the serving clock fault windows are evaluated against.  serve()
+        # advances the clock by each batch's occupancy; the online
+        # simulator drives it explicitly (now=dispatch time).
+        self.faults = FaultInjector(spec.fault, spec.deploy.n_shards)
+        self._clock = 0.0
+        self._fault_counters = {
+            "retries": 0,        # failover re-issues after a shard timeout
+            "transient": 0,      # attempts killed by the timeout storm
+            "down_requests": 0,  # attempts sent to a crashed/outaged replica
+            "lost_partitions": 0,   # (query, shard) slots lost after retries
+            "no_route": 0,       # partitions with no healthy replica at all
+            "degraded_queries": 0,  # queries served with partial coverage
+            "probes": 0,         # health probes sent to unhealthy replicas
+            "recovered": 0,      # probes that re-admitted a replica
+        }
+        self._debug_shard_lists = None   # tests: set to [] to capture the
+                                         # per-shard candidate lists
         self._batches = 0
         self._last_stats: dict = {}
         self._budget_reserve = budget_attribution(self.budget, self.cost,
@@ -380,13 +405,20 @@ class SearchSystem:
         return self._stage1_full(terms, mask, routed)
 
     def _stage1_full(self, terms: np.ndarray, mask: np.ndarray, routed,
-                     cache: dict | None = None):
+                     cache: dict | None = None, drop=None):
         """Fan the routed sub-batches out across every shard's batched
         engine and merge the per-shard top-k.
 
         Returns (topk, t_bmw, t_shards): merged global candidates, the
         scatter-gather BMW time per query, and the (n_shards, Q) per-shard
         engine-time matrix that feeds the replica pool's EWMA estimates.
+
+        ``drop`` ((n_shards, Q) bool, optional) marks (shard, query) slots
+        whose response was lost (fault injection) or never requested
+        (partial-coverage admission): their candidates are excluded from
+        the merge (padded with ``-1`` ids when fewer than ``k_serve``
+        survive), so a degraded query's list is exactly the merge over its
+        surviving partitions.
         """
         q = terms.shape[0]
         ns = self.n_shards
@@ -420,10 +452,18 @@ class SearchSystem:
                 id_list.append(res.topk_docs + self.doc_lo[s])
                 t_shards[s, rows] = self.cost.saat_time(
                     np.asarray(res.work).astype(np.float64))
+            if self._debug_shard_lists is not None:
+                self._debug_shard_lists.append(
+                    (rows, [np.asarray(a) for a in sc_list],
+                     [np.asarray(a) for a in id_list]))
             if ns == 1:
                 topk[rows] = np.asarray(id_list[0])
+                if drop is not None and drop[0, rows].any():
+                    topk[rows[drop[0, rows]]] = -1
             else:
-                ids, _ = merge_shard_topk(sc_list, id_list, self.k_serve)
+                ids, _ = merge_shard_topk(
+                    sc_list, id_list, self.k_serve,
+                    drop=None if drop is None else drop[:, rows])
                 topk[rows] = np.asarray(ids)
 
         if len(routed.bmw_rows):
@@ -446,10 +486,18 @@ class SearchSystem:
                 id_list.append(res.topk_docs + self.doc_lo[s])
                 t_shards[s, rows] = self.cost.daat_time(
                     np.asarray(res.work), np.asarray(res.blocks))
+            if self._debug_shard_lists is not None:
+                self._debug_shard_lists.append(
+                    (rows, [np.asarray(a) for a in sc_list],
+                     [np.asarray(a) for a in id_list]))
             if ns == 1:
                 topk[rows] = np.asarray(id_list[0])
+                if drop is not None and drop[0, rows].any():
+                    topk[rows[drop[0, rows]]] = -1
             else:
-                ids, _ = merge_shard_topk(sc_list, id_list, self.k_serve)
+                ids, _ = merge_shard_topk(
+                    sc_list, id_list, self.k_serve,
+                    drop=None if drop is None else drop[:, rows])
                 topk[rows] = np.asarray(ids)
             t_bmw[rows] = self.cost.gather_time(t_shards[:, rows])
         return topk, t_bmw, t_shards
@@ -472,14 +520,81 @@ class SearchSystem:
 
     def _pool_route(self, routed, n_queries: int):
         """Pick one replica of every partition for each query (its routed
-        mirror; hedged queries also occupy the JASS mirror)."""
+        mirror; hedged queries also occupy the JASS mirror).  A partition
+        with no healthy replica yields ``None`` in its slot (degraded
+        serving), never an exception — with a fully-healthy pool the pick
+        sequence is identical to the historical all-or-nothing route."""
         is_jass = np.zeros(n_queries, bool)
         is_jass[routed.jass_rows] = True
-        picks = [self.pool.route_query(JASS if is_jass[i] else BMW)
+        picks = [self.pool.route_query_partial(JASS if is_jass[i] else BMW)
                  for i in range(n_queries)]
         hedge_picks = {int(i): self.pool.route_query(JASS)
                        for i in routed.hedged_rows}
         return picks, hedge_picks
+
+    def _fault_plan(self, picks, routed, now: float):
+        """Run the scatter-gather failure protocol for one batch against
+        the fault schedule at clock ``now``.
+
+        For every (query, shard) request: an attempt to a crashed/outaged
+        replica — or one killed by a transient-timeout draw — is detected
+        after ``failover_timeout``, reported ``ok=False`` to the pool (so
+        ``fail_after`` can trip), and re-issued to a different healthy
+        replica of the same partition, at most ``max_retries`` times.  When
+        the chain is exhausted the slot is declared lost and the query
+        degrades to partial coverage.
+
+        Mutates ``picks`` in place (final serving replica, or ``None`` for
+        a lost slot) and returns ``(delay, mult, lost)``: per-(shard,
+        query) accumulated timeout wait, straggler slowdown of the serving
+        replica, and the lost mask.
+        """
+        cfg = self.sched.cfg
+        timeout, max_retries = cfg.failover_timeout, cfg.max_retries
+        ns, q = self.n_shards, len(picks)
+        delay = np.zeros((ns, q))
+        mult = np.ones((ns, q))
+        lost = np.zeros((ns, q), bool)
+        ctr = self._fault_counters
+        is_jass = np.zeros(q, bool)
+        is_jass[routed.jass_rows] = True
+        for i, reps in enumerate(picks):
+            mirror = JASS if is_jass[i] else BMW
+            for s in range(ns):
+                r = reps[s]
+                if r is None:            # no healthy replica to even try
+                    lost[s, i] = True
+                    ctr["no_route"] += 1
+                    continue
+                tried = {id(r)}
+                failures = 0
+                while True:
+                    if not self.faults.is_up(s, r.replica_id, now):
+                        ctr["down_requests"] += 1
+                    elif self.faults.transient(now):
+                        ctr["transient"] += 1
+                    else:                # attempt serves
+                        mult[s, i] = self.faults.slowdown(s, r.replica_id,
+                                                          now)
+                        reps[s] = r
+                        break
+                    # attempt dead: detected at the timeout, charged to the
+                    # query's wait and to the replica's health record
+                    self.pool.complete(r, latency=timeout, ok=False)
+                    delay[s, i] += timeout
+                    failures += 1
+                    nxt = (self.pool.pick_retry(s, mirror, tried)
+                           if failures <= max_retries else None)
+                    if nxt is None:      # retry budget / pool exhausted
+                        lost[s, i] = True
+                        reps[s] = None
+                        ctr["lost_partitions"] += 1
+                        break
+                    ctr["retries"] += 1
+                    nxt.inflight += 1
+                    tried.add(id(nxt))
+                    r = nxt
+        return delay, mult, lost
 
     def _pool_complete(self, terms, mask, routed, picks, hedge_picks,
                        t_shards, cache: dict | None = None):
@@ -488,6 +603,8 @@ class SearchSystem:
             if reps is None:
                 continue
             for s, r in enumerate(reps):
+                if r is None:            # lost/dropped slot: already
+                    continue             # released by the failure protocol
                 self.pool.complete(r, latency=float(t_shards[s, i]))
         if hedge_picks:
             rows = np.fromiter(hedge_picks, dtype=np.int64)
@@ -515,26 +632,112 @@ class SearchSystem:
 
     def serve(self, terms: np.ndarray, mask: np.ndarray,
               topics: np.ndarray | None = None, *,
-              stage2_cap: np.ndarray | None = None) -> PipelineResult:
+              stage2_cap: np.ndarray | None = None,
+              shard_cap: np.ndarray | None = None,
+              now: float | None = None) -> PipelineResult:
         """Serve one batch through the full cascade.
 
         ``stage2_cap`` is an optional per-query hard cap on the Stage-2
         candidate grid (admission control's degrade ladder: ``k_serve`` =
         full service, ``0 < cap < k_serve`` = trimmed re-rank, ``0`` =
         stage1-only — the rank-safe Stage-1 order is served directly).
+
+        ``shard_cap`` is an optional per-query cap on the number of
+        partitions queried (admission's partial-coverage rung: queries
+        only the first ``shard_cap[i]`` partitions, trading coverage for
+        gather overhead).  ``now`` pins the serving clock the fault
+        schedule is evaluated against (default: the system's own clock,
+        advanced by each batch's occupancy; the online simulator passes
+        its dispatch time).  With an inert fault spec and no ``shard_cap``
+        this path is bit-identical to fault-free serving.
         """
         q = terms.shape[0]
+        ns = self.n_shards
+        now = float(self._clock if now is None else now)
+        faulted = self.faults.active or shard_cap is not None
+        if self.faults.active:
+            # drive recovery from the serve loop: probe unhealthy replicas
+            # against the schedule (a cleared window re-admits the replica)
+            probes, rec = self.pool.probe_unhealthy(
+                lambda r: self.faults.is_up(r.partition, r.replica_id, now))
+            self._fault_counters["probes"] += probes
+            self._fault_counters["recovered"] += rec
         pk, pr, pt = self.stage0(terms, mask)
         routed = self.sched.route(pk, pr, pt)
         # route replicas before the engines run so the pool sees the whole
         # batch in flight (power-of-two-choices balances against inflight)
         picks, hedge_picks = self._pool_route(routed, q)
+
+        drop = None
+        coverage = None
+        if faulted:
+            # admission-chosen partial coverage: the trailing partitions
+            # are never requested — release their routed picks
+            dropped = np.zeros((ns, q), bool)
+            if shard_cap is not None:
+                cap = np.clip(np.asarray(shard_cap, np.int64), 1, ns)
+                for i in range(q):
+                    for s in range(int(cap[i]), ns):
+                        r = picks[i][s]
+                        if r is not None:
+                            r.inflight = max(r.inflight - 1, 0)
+                            picks[i][s] = None
+                        dropped[s, i] = True
+            # injected faults: timeout detection, bounded failover, loss
+            delay, mult, lost = self._fault_plan(picks, routed, now)
+            lost &= ~dropped
+            drop = lost | dropped
+            coverage = 1.0 - drop.sum(axis=0) / ns
+            n_deg = int((coverage < 1.0).sum())
+            self._fault_counters["degraded_queries"] += n_deg
+
         split_cache: dict = {}
         topk, t_bmw, t_shards = self._stage1_full(terms, mask, routed,
-                                                  split_cache)
+                                                  split_cache, drop=drop)
 
-        lat01 = self.sched.resolve_times(
-            routed, t_bmw, self._jass_time(terms, mask, split_cache))
+        if faulted:
+            # per-shard completion time under the plan: a served slot pays
+            # its retry wait plus the (possibly straggler-slowed) engine
+            # time; a lost slot pays the full detection chain; a dropped
+            # slot was never requested.  The query still waits for its
+            # slowest slot (scatter-gather), and pays merge fan-out only
+            # over the partitions that answered.
+            t_fault = np.where(dropped, 0.0,
+                               delay + np.where(lost, 0.0, t_shards * mult))
+            n_live = ns - drop.sum(axis=0)
+            gather_ov = (self.cost.gather_per_shard_us
+                         * np.maximum(n_live - 1, 0))
+
+            def _gather_fault(tmat, rows):
+                return tmat.max(axis=0) + gather_ov[rows]
+
+            t_bmw = np.zeros(q)
+            if len(routed.bmw_rows):
+                rows = routed.bmw_rows
+                t_bmw[rows] = _gather_fault(t_fault[:, rows], rows)
+
+            def jass_fault_fn(rows, rho):
+                work_s, _ = self._jass_split(terms, mask, rows, rho,
+                                             split_cache)
+                t = np.stack([self.cost.saat_time(w.astype(np.float64))
+                              for w in work_s])
+                tf = np.where(dropped[:, rows], 0.0,
+                              delay[:, rows]
+                              + np.where(lost[:, rows], 0.0,
+                                         t * mult[:, rows]))
+                return _gather_fault(tf, rows)
+
+            # the deadline re-issue goes to a fresh healthy replica, so it
+            # pays nominal JASS cost — the retry wait it could still incur
+            # is charged analytically via SchedulerConfig.retry_us()
+            lat01 = self.sched.resolve_times(
+                routed, t_bmw, jass_fault_fn,
+                late_jass_fn=self._jass_time(terms, mask, split_cache))
+            t_pool = t_fault
+        else:
+            lat01 = self.sched.resolve_times(
+                routed, t_bmw, self._jass_time(terms, mask, split_cache))
+            t_pool = t_shards
         t0 = np.full(q, self.cost.predict_us)
         stage_latency = {"stage0": t0, "stage1": lat01 - t0}
 
@@ -562,6 +765,11 @@ class SearchSystem:
                 # response-time slack (queueing included), before the
                 # service-budget enforcement below
                 k2 = np.minimum(k2, np.asarray(stage2_cap, np.int64))
+            if drop is not None:
+                # degraded queries may hold fewer than k_serve real
+                # candidates (-1 padding from the masked merge): never ask
+                # Stage-2 to rank the padding
+                k2 = np.minimum(k2, (topk >= 0).sum(axis=1))
             if enforce:
                 # cascade hedge: a query whose Stage-1 time already ate the
                 # budget gets its candidate grid trimmed (masked re-rank) —
@@ -573,7 +781,8 @@ class SearchSystem:
                 trimmed = int(np.sum((0 < afford) & (afford < k2)))
                 skipped = int(np.sum((afford == 0) & (k2 > 0)))
                 k2 = np.minimum(k2, afford)
-            res2 = self.stage2(terms, mask, topics, topk.astype(np.int32), k2)
+            cand = topk if drop is None else np.where(topk >= 0, topk, 0)
+            res2 = self.stage2(terms, mask, topics, cand.astype(np.int32), k2)
             final, used = res2.final, res2.candidates_used
             skip_rows = np.flatnonzero(k2 == 0)
             if len(skip_rows):
@@ -587,12 +796,16 @@ class SearchSystem:
             stage_latency["stage2"] = np.zeros(q)
 
         self._pool_complete(terms, mask, routed, picks, hedge_picks,
-                            t_shards, split_cache)
+                            t_pool, split_cache)
         every = self.cascade_spec.routing.adapt_every
         if every and self._batches % every == 0:
             self._adapt_routing()
 
         lat = lat01 + stage_latency["stage2"]
+        # the serving clock advances by the batch's occupancy so fault
+        # windows expressed in cost-model time mean the same thing whether
+        # serve() is driven offline or by the online event loop
+        self._clock = now + (float(lat.max()) if q else 0.0)
         stats = dict(self.sched.stats)
         stats.update(percentiles(lat))
         n_over, pct = over_budget(lat, self.budget)
@@ -619,10 +832,18 @@ class SearchSystem:
         }
         stats["n_shards"] = self.n_shards
         stats["pool"] = self.pool.stats()
+        if faulted:
+            stats["faults"] = dict(self._fault_counters)
+            stats["faults"]["clock"] = now
+            stats["coverage"] = {
+                "min": float(coverage.min()) if q else 1.0,
+                "mean": float(coverage.mean()) if q else 1.0,
+                "degraded": int((coverage < 1.0).sum()),
+            }
         self._last_stats = stats
         return PipelineResult(topk=topk, final=final, candidates_used=used,
                               latency=lat, stage_latency=stage_latency,
-                              stats=stats)
+                              stats=stats, coverage=coverage)
 
     def serve_online(self, terms: np.ndarray, mask: np.ndarray,
                      topics: np.ndarray | None = None, *,
@@ -729,6 +950,9 @@ class SearchSystem:
                        "worst_case_bound": self.worst_case_us()},
             "pool": self.pool.stats(),
         }
+        if self.faults.active or any(self._fault_counters.values()):
+            s["faults"] = dict(self._fault_counters)
+            s["faults"]["clock"] = self._clock
         if self._last_stats:
             s["last_batch"] = {k: self._last_stats[k]
                                for k in ("p50", "p99", "p99.99", "max",

@@ -1,0 +1,339 @@
+"""Fault injection + failover: schedule determinism, retry accounting,
+graceful degradation, and the inertness contract of an empty FaultSpec."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving.faults import SCENARIOS, FaultInjector, fault_scenario
+from repro.serving.latency import CostModel
+from repro.serving.online import PARTIAL, SHED, AdmissionController
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.spec import (BackendSpec, CascadeSpec, DeploySpec,
+                                FaultSpec, OnlineSpec, RoutingSpec,
+                                Stage2Spec, TrafficSpec)
+from repro.serving.system import build_system
+
+INF = float("inf")
+
+
+# ---------------------------------------------------------------------------
+# spec node: round-trip + validation
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_json_round_trip():
+    spec = CascadeSpec(
+        routing=RoutingSpec(budget=100.0, rho_max=1 << 14,
+                            failover_timeout=10.0, max_retries=2),
+        deploy=DeploySpec(n_shards=2, replicas=2),
+        fault=FaultSpec(crashes=((0, 1, 5.0, INF),),
+                        stragglers=((1, -1, 0.0, 50.0, 4.0),),
+                        outages=((1, 10.0, 20.0),),
+                        timeout_p=0.05, timeout_start=1.0, timeout_end=9.0,
+                        seed=3),
+        name="faulty",
+    )
+    again = CascadeSpec.from_json(spec.to_json())
+    assert again == spec                      # tuples + inf survive the wire
+    assert again.fault.crashes[0][3] == INF
+    assert again.fault.active and again.fault.needs_failover
+    assert not FaultSpec().active             # the default is inert
+    assert not FaultSpec(stragglers=((0, 0, 0.0, 1.0, 2.0),)).needs_failover
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="inverted"):
+        FaultSpec(crashes=((0, 0, 5.0, 1.0),)).validate()
+    with pytest.raises(ValueError, match="slowdown"):
+        FaultSpec(stragglers=((0, 0, 0.0, 1.0, 0.5),)).validate()
+    with pytest.raises(ValueError, match="crash window needs"):
+        FaultSpec(crashes=((0, 0.0, 1.0),)).validate()
+    # a schedule that can kill requests needs a failover timeout to see it
+    bad = CascadeSpec(routing=RoutingSpec(budget=100.0),
+                      fault=FaultSpec(outages=((0, 0.0, 1.0),)))
+    with pytest.raises(ValueError, match="failover"):
+        bad.validate()
+    # the whole retry cascade must fit inside the budget
+    with pytest.raises(ValueError):
+        RoutingSpec(budget=100.0, failover_timeout=40.0,
+                    max_retries=2).validate()
+    with pytest.raises(ValueError):
+        RoutingSpec(budget=100.0, max_retries=1).validate()  # no timeout
+
+
+def test_injector_windows_and_wildcards():
+    spec = FaultSpec(crashes=((0, 1, 10.0, 20.0), (1, -1, 0.0, 5.0)),
+                     stragglers=((0, -1, 0.0, 100.0, 2.0),
+                                 (0, 0, 50.0, 100.0, 8.0)),
+                     outages=((-1, 200.0, 210.0),))
+    inj = FaultInjector(spec, n_partitions=2)
+    # half-open [t0, t1): up at the end, down at the start
+    assert inj.is_up(0, 1, 9.9) and not inj.is_up(0, 1, 10.0)
+    assert not inj.is_up(0, 1, 19.9) and inj.is_up(0, 1, 20.0)
+    assert inj.is_up(0, 0, 15.0)              # other replica untouched
+    assert not inj.is_up(1, 0, 2.0) and not inj.is_up(1, 1, 2.0)  # wildcard
+    assert not inj.partition_up(1, 2, 2.0) and inj.partition_up(0, 2, 15.0)
+    assert inj.surviving(2, 2.0) == 1 and inj.surviving(2, 30.0) == 2
+    assert not inj.is_up(0, 0, 205.0)         # wildcard-partition outage
+    assert inj.surviving(2, 205.0) == 0
+    # overlapping straggler windows take the worst multiplier
+    assert inj.slowdown(0, 0, 60.0) == 8.0
+    assert inj.slowdown(0, 1, 60.0) == 2.0
+    assert inj.slowdown(0, 0, 150.0) == 1.0
+
+
+def test_transient_draws_deterministic_and_windowed():
+    spec = FaultSpec(timeout_p=0.5, timeout_start=10.0, timeout_end=20.0,
+                     seed=7)
+    a, b = FaultInjector(spec, 1), FaultInjector(spec, 1)
+    # outside the storm window: no draw consumed, never a timeout
+    assert not a.transient(5.0) and a.draws == 0
+    seq_a = [a.transient(15.0) for _ in range(64)]
+    seq_b = [b.transient(15.0) for _ in range(64)]
+    assert seq_a == seq_b and a.draws == 64   # same seed, same stream
+    assert any(seq_a) and not all(seq_a)
+
+
+def test_scenario_builders_cover_registry():
+    for name in SCENARIOS:
+        fs = fault_scenario(name, n_partitions=4, replicas=3,
+                            horizon=1000.0, seed=1)
+        fs.validate()
+        assert fs.active == (name != "none")
+    fs = fault_scenario("partition_outage", n_partitions=4, replicas=3,
+                        horizon=1000.0)
+    inj = FaultInjector(fs, 4)
+    assert inj.surviving(3, 500.0) == 3 and inj.surviving(3, 100.0) == 4
+    with pytest.raises(ValueError, match="unknown fault scenario"):
+        fault_scenario("meteor_strike", n_partitions=1, replicas=1,
+                       horizon=1.0)
+
+
+# ---------------------------------------------------------------------------
+# retry accounting in the analytic bound
+# ---------------------------------------------------------------------------
+
+def test_retry_budget_charged_into_worst_case():
+    cost = CostModel.paper_scale()
+    # ρ_late chosen so the deadline re-issue dominates the max() in the
+    # bound — that is the branch the retry wait rides on
+    base = SchedulerConfig(budget=100.0, rho_max=1 << 14, late_rho=8192,
+                           hedge_deadline=0.6)
+    hard = dataclasses.replace(base, failover_timeout=10.0, max_retries=2)
+    assert hard.retry_us() == 20.0
+    # the bound grows by exactly the retry budget, and the late-hedge ρ
+    # headroom shrinks to make room for it
+    assert (hard.worst_case_us(cost, 1)
+            == pytest.approx(base.worst_case_us(cost, 1) + 20.0))
+    assert 0 < hard.max_late_rho(cost, 1) < base.max_late_rho(cost, 1)
+    # enforcement still collapses to the budget when ρ_late fits the
+    # (retry-shrunk) slack
+    safe = dataclasses.replace(hard, late_rho=hard.max_late_rho(cost, 1))
+    assert safe.worst_case_us(cost, 1) <= 100.0 + cost.predict_us + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: a fitted 4-partition x 3-replica system under each fault class
+# ---------------------------------------------------------------------------
+
+def _spec(fault=None, failover=15.0, retries=2, tk=150.0, tt=18.0,
+          gather=0.0):
+    cost = dataclasses.replace(CostModel.paper_scale(),
+                               gather_per_shard_us=gather)
+    return CascadeSpec(
+        routing=RoutingSpec(budget=100.0, rho_max=1 << 14, t_k=tk,
+                            t_time=tt, failover_timeout=failover,
+                            max_retries=retries),
+        stage2=Stage2Spec(enabled=True, k_serve=64, t_final=10),
+        backend=BackendSpec(backend="jnp"),
+        deploy=DeploySpec(n_shards=4, replicas=3),
+        online=OnlineSpec(max_batch=16, batch_deadline_us=5.0,
+                          admission=True, degrade=True),
+        fault=fault if fault is not None else FaultSpec(),
+        name="fault_test",
+    ).validate(), cost
+
+
+@pytest.fixture(scope="module")
+def fitted4(small_collection):
+    """A fitted 4-shard fault-capable system + its calibrated thresholds
+    (reused by every comparison build so routing is bit-identical)."""
+    corpus, index, ql = small_collection
+    spec, cost = _spec()
+    spec = dataclasses.replace(
+        spec, routing=dataclasses.replace(spec.routing, t_k=None,
+                                          t_time=None, calibrate=True))
+    system = build_system(spec, index, corpus=corpus, cost=cost)
+    system.fit(ql, None, seed=5)
+    return corpus, index, ql, system, (system._base_cfg.t_k,
+                                       system._base_cfg.t_time)
+
+
+def _build4(fitted4, fault=None, **kw):
+    corpus, index, ql, system, (tk, tt) = fitted4
+    spec, cost = _spec(fault=fault, tk=tk, tt=tt, **kw)
+    return build_system(spec, index, corpus=corpus, models=system.models,
+                        ltr=system.ltr, cost=cost)
+
+
+def test_empty_fault_spec_is_bit_identical(fitted4):
+    """Failover machinery armed but schedule empty == failover disabled,
+    bit for bit, with zero RNG draws consumed."""
+    corpus, index, ql, _, _ = fitted4
+    armed = _build4(fitted4)
+    plain = _build4(fitted4, failover=0.0, retries=0)
+    a = armed.serve(ql.terms, ql.mask, ql.topic)
+    b = plain.serve(ql.terms, ql.mask, ql.topic)
+    np.testing.assert_array_equal(a.topk, b.topk)
+    np.testing.assert_array_equal(a.final, b.final)
+    np.testing.assert_allclose(a.latency, b.latency)
+    assert a.coverage is None and armed.faults.draws == 0
+    assert all(v == 0 for v in armed._fault_counters.values())
+    assert "faults" not in a.stats
+
+
+def test_crash_failover_keeps_full_coverage(fitted4):
+    """One replica of partition 0 dead: every query still gets full
+    coverage through retries, with candidate lists identical to the
+    healthy run, and zero budget violations."""
+    corpus, index, ql, _, _ = fitted4
+    fault = FaultSpec(crashes=((0, 2, 0.0, INF),))
+    sys_f = _build4(fitted4, fault=fault)
+    res = sys_f.serve(ql.terms, ql.mask, ql.topic, now=1.0)
+    ref = _build4(fitted4).serve(ql.terms, ql.mask, ql.topic)
+    assert res.coverage is not None and np.all(res.coverage == 1.0)
+    np.testing.assert_array_equal(res.topk, ref.topk)
+    c = res.stats["faults"]
+    assert c["retries"] > 0 and c["lost_partitions"] == 0
+    assert res.stats["over_budget"] == 0
+    assert float(res.latency.max()) <= sys_f.worst_case_us() + 1e-6
+
+
+def test_probe_recovery_after_crash_window(fitted4):
+    """A crash window that ends: requests inside it fail over, the health
+    probe re-admits the replica once the schedule clears it."""
+    corpus, index, ql, _, _ = fitted4
+    fault = FaultSpec(crashes=((0, -1, 0.0, 50.0),))   # whole partition 0
+    sys_f = _build4(fitted4, fault=fault)
+    mid = sys_f.serve(ql.terms, ql.mask, ql.topic, now=10.0)
+    assert mid.coverage.min() < 1.0                    # partition 0 lost
+    assert mid.stats["faults"]["lost_partitions"] > 0
+    down = 12 - sys_f.pool.stats()["healthy"]
+    assert down > 0
+    after = sys_f.serve(ql.terms, ql.mask, ql.topic, now=60.0)
+    assert sys_f.pool.stats()["healthy"] == 12
+    assert after.stats["faults"]["recovered"] >= down
+    assert np.all(after.coverage == 1.0)
+
+
+def test_outage_partial_coverage_matches_surviving_oracle(fitted4):
+    """Partition 3 fully out: every query serves at coverage 3/4 and its
+    candidate list equals the production merge run over ONLY the surviving
+    shards' lists (the drop-masked merge is exact, not approximate)."""
+    from repro.isn.backend import merge_shard_topk
+    corpus, index, ql, _, _ = fitted4
+    fault = FaultSpec(outages=((3, 0.0, INF),))
+    sys_f = _build4(fitted4, fault=fault)
+    sys_f._debug_shard_lists = []
+    res = sys_f.serve(ql.terms, ql.mask, ql.topic, now=1.0)
+    assert np.all(res.coverage == 0.75)
+    assert res.stats["coverage"]["degraded"] == len(ql.terms)
+    assert res.stats["over_budget"] == 0
+    checked = 0
+    for rows, sc_list, id_list in sys_f._debug_shard_lists:
+        oracle, _ = merge_shard_topk(sc_list[:3], id_list[:3],
+                                     sys_f.k_serve)
+        np.testing.assert_array_equal(res.topk[rows], np.asarray(oracle))
+        checked += len(rows)
+    assert checked == len(ql.terms)
+    # degraded queries still produce final lists from real candidates only
+    assert res.final is not None and np.all(res.final >= 0)
+
+
+def test_transient_storm_bounded_and_deterministic(fitted4):
+    """5 % per-request timeouts: every retry chain stays inside the
+    analytic bound, and a fresh build replays the identical schedule."""
+    corpus, index, ql, _, _ = fitted4
+    fault = FaultSpec(timeout_p=0.2, timeout_start=0.0, seed=11)
+    a = _build4(fitted4, fault=fault)
+    ra = a.serve(ql.terms, ql.mask, ql.topic, now=1.0)
+    assert ra.stats["faults"]["transient"] > 0
+    assert float(ra.latency.max()) <= a.worst_case_us() + 1e-6
+    assert ra.stats["over_budget"] == 0
+    b = _build4(fitted4, fault=fault)
+    rb = b.serve(ql.terms, ql.mask, ql.topic, now=1.0)
+    np.testing.assert_array_equal(ra.topk, rb.topk)
+    np.testing.assert_allclose(ra.latency, rb.latency)
+    assert a.faults.draws == b.faults.draws > 0
+
+
+def test_straggler_slowdown_flows_into_latency(fitted4):
+    """A straggling replica inflates only the queries routed to it, and
+    enforcement keeps all of them under the bound."""
+    corpus, index, ql, _, _ = fitted4
+    fault = FaultSpec(stragglers=((-1, -1, 0.0, INF, 6.0),))  # everyone 6x
+    sys_f = _build4(fitted4, fault=fault)
+    res = sys_f.serve(ql.terms, ql.mask, ql.topic, now=1.0)
+    ref = _build4(fitted4).serve(ql.terms, ql.mask, ql.topic)
+    assert float(res.stage_latency["stage1"].mean()) > float(
+        ref.stage_latency["stage1"].mean())
+    assert np.all(res.coverage == 1.0)
+    assert float(res.latency.max()) <= sys_f.worst_case_us() + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# admission: the partial-coverage rung
+# ---------------------------------------------------------------------------
+
+def test_partial_rung_trades_coverage_for_slack():
+    cost = dataclasses.replace(CostModel.paper_scale(),
+                               gather_per_shard_us=5.0)
+    # the re-issue branch must dominate the bound, or narrowing the
+    # fan-out buys nothing and the rung correctly disables itself
+    cfg = SchedulerConfig(budget=100.0, rho_max=1 << 14, late_rho=8192,
+                          hedge_deadline=0.6)
+    pb = [cfg.worst_case_us(cost, m) for m in range(1, 5)]
+    assert pb[0] < pb[-1]
+    online = OnlineSpec(max_batch=8, admission=True, degrade=True)
+    adm = AdmissionController(online, cost, pb[-1], None, 200.0,
+                              partial_bounds=pb)
+    # waits chosen so slack lands: full fan-out fits / only 2 shards fit /
+    # not even one shard fits
+    waits = np.array([200.0 - online.dispatch_us - pb[3] - 1.0,
+                      200.0 - online.dispatch_us - pb[1] - 1e-6,
+                      200.0 - online.dispatch_us - pb[0] + 1.0])
+    mode, cap, shard_cap = adm.at_dispatch(waits)
+    assert mode.tolist() == [0, PARTIAL, SHED]
+    assert shard_cap is not None
+    assert shard_cap[0] == 4 and shard_cap[1] == 2
+    assert adm.stats["partial"] == 1
+    # rung unreachable when narrowing buys nothing (no gather overhead)
+    flat = [pb[-1]] * 4
+    adm2 = AdmissionController(online, cost, pb[-1], None, 200.0,
+                               partial_bounds=flat)
+    m2, _, sc2 = adm2.at_dispatch(waits[1:])
+    assert sc2 is None and m2.tolist() == [SHED, SHED]
+
+
+def test_online_outage_zero_violations(fitted4):
+    """The online event loop under a mid-trace partition outage: no served
+    query over the response budget, coverage never below the surviving
+    fraction, and the degraded queries are really the mid-trace ones."""
+    corpus, index, ql, _, _ = fitted4
+    traffic = TrafficSpec(arrival="poisson", qps=250.0, seed=3)
+    fault = FaultSpec(outages=((3, 40.0, 250.0),))
+    sys_f = _build4(fitted4, fault=fault, gather=4.0)
+    res = sys_f.serve_online(ql.terms, ql.mask, ql.topic, traffic=traffic)
+    s = res.stats
+    assert s["over_budget"] == 0
+    assert s["coverage"]["degraded"] > 0
+    served = res.mode != SHED
+    assert np.all(res.coverage[served] >= 0.75 - 1e-9)
+    # and the inert control on the same trace is deterministic
+    a = _build4(fitted4, gather=4.0).serve_online(ql.terms, ql.mask,
+                                                  ql.topic, traffic=traffic)
+    b = _build4(fitted4, gather=4.0).serve_online(ql.terms, ql.mask,
+                                                  ql.topic, traffic=traffic)
+    assert a.event_log == b.event_log
+    np.testing.assert_array_equal(a.topk, b.topk)

@@ -139,18 +139,19 @@ def test_admission_dispatch_ladder():
         199.0 - s1 - 0.2,               # stage1: not even ltr_fixed fits
         150.0,                          # shed: stage1 alone cannot fit
     ])
-    mode, cap = adm.at_dispatch(waits)
+    mode, cap, scap = adm.at_dispatch(waits)
     assert list(mode) == [FULL, TRIM, STAGE1, SHED]
     assert cap[0] >= 64 and 0 < cap[1] < 64 and cap[2] == 0 and cap[3] == 0
+    assert scap is None                  # no partial_bounds: rung is off
     assert adm.stats["shed_dispatch"] == 1 and adm.stats["degraded"] == 2
     # degrade=False collapses the ladder to admit/shed
     strict = AdmissionController(dataclasses.replace(cfg, degrade=False),
                                  cost, s1, 64, 200.0)
-    mode, cap = strict.at_dispatch(waits)
+    mode, cap, scap = strict.at_dispatch(waits)
     assert list(mode) == [FULL, SHED, SHED, SHED]
     # stage1-only deployments have no stage-2 rungs at all
     s1only = AdmissionController(cfg, cost, s1, None, 200.0)
-    mode, cap = s1only.at_dispatch(waits)
+    mode, cap, scap = s1only.at_dispatch(waits)
     assert cap is None and list(mode) == [FULL, FULL, FULL, SHED]
 
 

@@ -91,6 +91,86 @@ def test_heterogeneous_replica_speeds_learned_and_avoided():
     assert counts[id(slowest)] > 0           # not starved (random pairing)
 
 
+def test_pool_invariants_under_fault_churn():
+    """Property-style: arbitrary seeded interleavings of partial routing,
+    failed completions, and probes must never route to an unhealthy
+    replica, never leak or go negative on inflight counts, and keep
+    ``stats()['healthy']`` equal to the ground truth."""
+    for seed in range(5):
+        rng = np.random.RandomState(seed)
+        pool = ReplicaPool(PoolConfig(n_partitions=3,
+                                      replicas_per_partition=3,
+                                      fail_after=2), seed=seed)
+        outstanding: list[Replica] = []
+        for _ in range(400):
+            op = rng.rand()
+            if op < 0.5:
+                mirror = JASS if rng.rand() < 0.5 else BMW
+                picks = pool.route_query_partial(mirror)
+                assert len(picks) == 3
+                for p, r in enumerate(picks):
+                    if r is None:
+                        # only legal when the partition is truly exhausted
+                        assert not any(x.healthy for x in pool.replicas
+                                       if x.partition == p)
+                    else:
+                        assert r.healthy and r.partition == p
+                        outstanding.append(r)
+            elif op < 0.7 and outstanding:
+                r = outstanding.pop(rng.randint(len(outstanding)))
+                pool.complete(r, latency=0.0, ok=False)
+            elif op < 0.9 and outstanding:
+                r = outstanding.pop(rng.randint(len(outstanding)))
+                pool.complete(r, latency=float(rng.rand()))
+            else:
+                pool.probe_unhealthy()   # default probe: fault cleared
+                # probe() zeroes inflight on recovery; completions for
+                # requests issued before the failure must not underflow
+                outstanding = [r for r in outstanding if r.inflight > 0]
+            assert all(r.inflight >= 0 for r in pool.replicas)
+            assert pool.stats()["healthy"] == sum(r.healthy
+                                                  for r in pool.replicas)
+        for r in outstanding:
+            pool.complete(r, latency=0.1)
+        assert all(r.inflight == 0 or not r.healthy
+                   for r in pool.replicas)
+
+
+def test_pick_retry_prefers_untried_then_other_mirror():
+    pool = _pool(n_partitions=1, replicas_per_partition=3,
+                 jass_fraction=0.67)          # 2 JASS + 1 BMW
+    jass = pool.candidates(0, JASS)
+    assert len(jass) == 2
+    tried = {id(jass[0])}
+    r = pool.pick_retry(0, JASS, tried)
+    assert r is jass[1]                        # fresh same-mirror first
+    tried.add(id(jass[1]))
+    r = pool.pick_retry(0, JASS, tried)
+    assert r is not None and r.mirror == BMW   # then the other mirror
+    tried.add(id(r))
+    # everything tried: a healthy already-tried replica may be re-tried
+    assert pool.pick_retry(0, JASS, tried) is not None
+    for x in pool.replicas:
+        x.healthy = False
+    assert pool.pick_retry(0, JASS, set()) is None
+
+
+def test_route_query_partial_marks_dead_partition():
+    pool = _pool(n_partitions=2, replicas_per_partition=2)
+    for r in pool.replicas:
+        if r.partition == 1:
+            r.healthy = False
+    picks = pool.route_query_partial(JASS)
+    assert picks[0] is not None and picks[1] is None
+    assert pool.route_query(JASS) is None      # all-or-nothing still aborts
+    assert all(r.inflight == (1 if r is picks[0] else 0)
+               for r in pool.replicas)         # no leaked inflight
+    probes, recovered = pool.probe_unhealthy(lambda r: r.replica_id == 0)
+    assert probes == 2 and recovered == 1
+    picks = pool.route_query_partial(JASS)
+    assert picks[1] is not None and picks[1].replica_id == 0
+
+
 def test_rebalance_follows_mix():
     pool = _pool(n_partitions=2, replicas_per_partition=4,
                  jass_fraction=0.5)
