@@ -1,0 +1,278 @@
+"""Result-cache certification: the two-level serving cache must buy
+capacity without costing a single bit of correctness.
+
+Four studies over one fitted cascade (frozen thresholds, jnp backend):
+
+* **hit parity** — a warm L1 hit must return results **bit-identical** to
+  the cache-off recompute (top-k and final top-t), and a *cold* cache-on
+  serve must already match cache-off exactly (misses pay the probe in
+  modeled time, never in output).  Certified under a no-trim run so the
+  comparison is exact (``stage2_trimmed == stage2_skipped == 0``).
+* **inert mode** — a disabled/zero-capacity :class:`CacheSpec` must be
+  provably absent: offline serving bit-identical (top-k, final, modeled
+  latency) and the online event log tuple-identical to the default spec.
+* **skew sweep** — p50/p99.99 response + achieved QPS, cache-on vs
+  cache-off, under Zipfian repetition s ∈ {0, 0.8, 1.2} at 0.8x the
+  cache-off saturated capacity.
+* **overload certification** — sweep offered load past cache-off
+  saturation at s=1.2.  A load is *certified sustainable* when every
+  query is served FULL with 0 response-budget violations and 0 sheds.
+  Gate: the cache-on certified QPS is >= 1.2x the cache-off certified
+  QPS (L1 hits are answered at the front door, so only misses consume
+  engine-batch slots), with 0 violations everywhere.
+
+Emits ``results/BENCH_cache.json``; the CLI exits non-zero if any gate
+fails.  CI runs it as a smoke.  Run standalone with
+``PYTHONPATH=src:. python benchmarks/bench_cache.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.bench_online import _build
+from benchmarks.common import write_bench_artifact
+
+
+def _cell(res) -> dict:
+    """Summarize one online run for the JSON artifact."""
+    s = res.stats
+    out = {
+        "served": s["served"], "shed": s["shed"],
+        "over_budget": s["over_budget"],
+        "modes": s["modes"],
+        "p50": s["response"]["p50"] if "response" in s else None,
+        "p99.99": s["response"]["p99.99"] if "response" in s else None,
+        "achieved_qps": s.get("achieved_qps"),
+    }
+    if "cache" in s:
+        c = s["cache"]
+        out["hit_ratio"] = c["hit_ratio"]
+        out["l1_hits"] = c["l1"]["hits"] if c.get("l1") else 0
+        out["front_door_hits"] = c["front_door_hits"]
+        out["hit_ewma"] = c.get("hit_ewma")
+    return out
+
+
+def _certified(cells: list) -> float:
+    """Highest offered QPS at which every query was served FULL with zero
+    budget violations and zero sheds (0.0 when no load qualifies)."""
+    ok = [c["qps"] for c in cells
+          if c["over_budget"] == 0 and c["shed"] == 0
+          and c["modes"]["full"] == c["served"]]
+    return float(max(ok)) if ok else 0.0
+
+
+def run_cache(q_batch: int = 384, n_docs: int = 4096, seed: int = 7,
+              skews: tuple = (0.0, 0.8, 1.2),
+              sweep_load: float = 0.8,
+              loads_off: tuple = (0.8, 1.0, 1.2, 1.5, 2.0),
+              loads_on: tuple = (1.2, 1.5, 2.0, 2.5, 3.0),
+              max_batch: int = 16, backend: str = "jnp") -> dict:
+    from repro.serving.online import estimate_capacity
+    from repro.serving.spec import CacheSpec, TrafficSpec
+    from repro.serving.system import build_system
+
+    corpus, base, ql, fit_sys = _build(q_batch, n_docs, seed, backend,
+                                       max_batch)
+    index, models, ltr = fit_sys.index, fit_sys.models, fit_sys.ltr
+    cost = fit_sys.cost
+    cache_spec = CacheSpec(enabled=True)
+
+    def system(cache: CacheSpec | None = None):
+        spec = base if cache is None else dataclasses.replace(base,
+                                                              cache=cache)
+        return build_system(spec, index, corpus=corpus, models=models,
+                            ltr=ltr, cost=cost)
+
+    # ---- hit parity: warm L1 hit == cache-off recompute, bit for bit ----
+    off_sys = system()
+    res_off = off_sys.serve(ql.terms, ql.mask, ql.topic)
+    b_off = res_off.stats["budget"]
+    no_trims = (b_off["stage2_trimmed"] == 0 and b_off["stage2_skipped"] == 0)
+    on_sys = system(cache_spec)
+    cold = on_sys.serve(ql.terms, ql.mask, ql.topic)
+    warm = on_sys.serve(ql.terms, ql.mask, ql.topic)
+    c = on_sys.cache.counters
+    parity = {
+        "no_trims_in_reference": bool(no_trims),
+        "cold_topk_identical": bool(np.array_equal(cold.topk, res_off.topk)),
+        "cold_final_identical": bool(np.array_equal(cold.final,
+                                                    res_off.final)),
+        "warm_topk_identical": bool(np.array_equal(warm.topk, res_off.topk)),
+        "warm_final_identical": bool(np.array_equal(warm.final,
+                                                    res_off.final)),
+        "warm_all_l1_hits": bool(c["l1_hits"] == q_batch),
+        "p50_off": res_off.stats["p50"], "p50_warm": warm.stats["p50"],
+        "hit_speedup_p50": float(res_off.stats["p50"]
+                                 / max(warm.stats["p50"], 1e-9)),
+        "worst_case_off": float(off_sys.worst_case_us()),
+        "worst_case_on": float(on_sys.worst_case_us()),
+    }
+
+    # ---- inert mode: zero-capacity spec == no cache, bit for bit ----
+    inert_spec = CacheSpec(enabled=True, l1_entries=0, l2_entries=0)
+    sys_a, sys_b = system(), system(inert_spec)
+    ra = sys_a.serve(ql.terms, ql.mask, ql.topic)
+    rb = sys_b.serve(ql.terms, ql.mask, ql.topic)
+    traffic_i = TrafficSpec(arrival="bursty", qps=0.8 * 500.0, skew=0.8,
+                            seed=seed + 1)
+    oa = system().serve_online(ql.terms, ql.mask, ql.topic,
+                               traffic=traffic_i)
+    ob = system(inert_spec).serve_online(ql.terms, ql.mask, ql.topic,
+                                         traffic=traffic_i)
+    inert = {
+        "cache_absent": bool(sys_b.cache is None),
+        "offline_topk_identical": bool(np.array_equal(ra.topk, rb.topk)),
+        "offline_final_identical": bool(np.array_equal(ra.final, rb.final)),
+        "offline_latency_identical": bool(np.array_equal(ra.latency,
+                                                         rb.latency)),
+        "online_event_log_identical": bool(oa.event_log == ob.event_log),
+    }
+
+    # ---- skew sweep at a common sub-saturation load ----
+    capacity_off = estimate_capacity(system(), ql.terms, ql.mask, ql.topic)
+    sweep = []
+    for skew in skews:
+        traffic = TrafficSpec(arrival="poisson",
+                              qps=sweep_load * capacity_off,
+                              skew=skew, seed=seed + 1)
+        r_on = system(cache_spec).serve_online(ql.terms, ql.mask, ql.topic,
+                                               traffic=traffic)
+        r_off = system().serve_online(ql.terms, ql.mask, ql.topic,
+                                      traffic=traffic)
+        sweep.append({"skew": skew, "load": sweep_load,
+                      "qps": float(sweep_load * capacity_off),
+                      "on": _cell(r_on), "off": _cell(r_off)})
+
+    # ---- overload certification at the heaviest skew ----
+    skew_hot = float(max(skews))
+    grid = {"on": [], "off": []}
+    for name, spec_c, loads in (("off", None, loads_off),
+                                ("on", cache_spec, loads_on)):
+        for load in loads:
+            traffic = TrafficSpec(arrival="poisson",
+                                  qps=load * capacity_off,
+                                  skew=skew_hot, seed=seed + 1)
+            r = system(spec_c).serve_online(ql.terms, ql.mask, ql.topic,
+                                            traffic=traffic)
+            grid[name].append({"load": load,
+                               "qps": float(load * capacity_off),
+                               **_cell(r)})
+
+    certified_off = _certified(grid["off"])
+    certified_on = _certified(grid["on"])
+    hot_on = [r["on"] for r in sweep if r["skew"] == skew_hot]
+    hit_ratio_hot = hot_on[0]["hit_ratio"] if hot_on else 0.0
+    enforced = ([r["on"] for r in sweep] + [r["off"] for r in sweep]
+                + grid["on"] + grid["off"])
+
+    payload = {
+        "config": {"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
+                   "backend": backend, "max_batch": max_batch,
+                   "skews": list(skews), "sweep_load": sweep_load,
+                   "loads_off": list(loads_off), "loads_on": list(loads_on),
+                   "cache": {"l1_entries": cache_spec.l1_entries,
+                             "l2_entries": cache_spec.l2_entries}},
+        "capacity_off_qps": float(capacity_off),
+        "parity": parity,
+        "inert": inert,
+        "sweep": sweep,
+        "grid": grid,
+        "certified_qps": {"off": certified_off, "on": certified_on,
+                          "speedup": (certified_on
+                                      / max(certified_off, 1e-9))},
+        "hit_ratio_at_hot_skew": float(hit_ratio_hot),
+        "gates": {},
+    }
+    payload["gates"] = {
+        "hits_bit_identical": (parity["no_trims_in_reference"]
+                               and parity["cold_topk_identical"]
+                               and parity["cold_final_identical"]
+                               and parity["warm_topk_identical"]
+                               and parity["warm_final_identical"]
+                               and parity["warm_all_l1_hits"]),
+        "inert_bit_identical": all(inert.values()),
+        "guarantee_holds": all(r["over_budget"] == 0 for r in enforced),
+        "capacity_speedup": (certified_off > 0
+                             and certified_on
+                             >= 1.2 * certified_off - 1e-9),
+        "hits_nonvacuous": hit_ratio_hot >= 0.2,
+    }
+    payload["artifact"] = write_bench_artifact("cache", payload)
+    return payload
+
+
+def render_cache(res: dict) -> str:
+    p, i, cq = res["parity"], res["inert"], res["certified_qps"]
+    lines = [f"capacity(off)={res['capacity_off_qps']:.0f} qps; "
+             f"worst-case bound off={p['worst_case_off']:.2f} "
+             f"on={p['worst_case_on']:.2f}",
+             f"hit parity: cold topk={p['cold_topk_identical']} "
+             f"final={p['cold_final_identical']}; warm "
+             f"topk={p['warm_topk_identical']} "
+             f"final={p['warm_final_identical']} "
+             f"(all-L1={p['warm_all_l1_hits']}, p50 speedup "
+             f"{p['hit_speedup_p50']:.1f}x)",
+             f"inert: {'identical' if all(i.values()) else 'DIVERGED'} "
+             f"(offline+online vs no-cache spec)",
+             "skew,side,p50,p99.99,qps,hit_ratio,front_door,over,shed"]
+    for r in res["sweep"]:
+        for side in ("off", "on"):
+            c = r[side]
+            hr = c.get("hit_ratio")
+            lines.append(
+                f"{r['skew']:.1f},{side},{c['p50']:.1f},{c['p99.99']:.1f},"
+                f"{c['achieved_qps']:.0f},"
+                f"{hr if hr is None else round(hr, 3)},"
+                f"{c.get('front_door_hits', 0)},{c['over_budget']},"
+                f"{c['shed']}")
+    lines.append("load,side,full,trim+stage1,shed,over,qps")
+    for side in ("off", "on"):
+        for c in res["grid"][side]:
+            m = c["modes"]
+            degraded = c["served"] - m["full"]
+            lines.append(f"{c['load']:.2f},{side},{m['full']},{degraded},"
+                         f"{c['shed']},{c['over_budget']},"
+                         f"{c['achieved_qps']:.0f}")
+    lines.append(f"certified sustainable qps: off={cq['off']:.0f} "
+                 f"on={cq['on']:.0f} ({cq['speedup']:.2f}x)")
+    lines.append("gates: " + " ".join(f"{k}={v}"
+                                      for k, v in res["gates"].items()))
+    return "\n".join(lines)
+
+
+def main() -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--q-batch", type=int, default=384)
+    ap.add_argument("--n-docs", type=int, default=4096)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--skews", type=float, nargs="+",
+                    default=[0.0, 0.8, 1.2])
+    ap.add_argument("--loads-off", type=float, nargs="+",
+                    default=[0.8, 1.0, 1.2, 1.5, 2.0])
+    ap.add_argument("--loads-on", type=float, nargs="+",
+                    default=[1.2, 1.5, 2.0, 2.5, 3.0])
+    ap.add_argument("--backend", default="jnp",
+                    help="jnp gives the bit-identical parity checks")
+    args = ap.parse_args()
+    res = run_cache(q_batch=args.q_batch, n_docs=args.n_docs,
+                    seed=args.seed, skews=tuple(args.skews),
+                    loads_off=tuple(args.loads_off),
+                    loads_on=tuple(args.loads_on),
+                    max_batch=args.max_batch, backend=args.backend)
+    print(render_cache(res))
+    print(f"artifact: {res['artifact']}")
+    failed = [k for k, v in res["gates"].items() if not v]
+    if failed:
+        print(f"CACHE CERTIFICATION FAILED: {', '.join(failed)}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

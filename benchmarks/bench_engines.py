@@ -16,7 +16,6 @@ recorded from PR to PR.  Run standalone with
 
 from __future__ import annotations
 
-import time
 
 import numpy as np
 
@@ -73,14 +72,8 @@ def render(res) -> str:
 def _time_engine(fn, reps: int):
     """Wall-clock an engine call; returns per-batch seconds (first call is
     the untimed jit warmup)."""
-    import jax
-    jax.block_until_ready(fn())
-    times = np.zeros(reps)
-    for i in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        times[i] = time.perf_counter() - t0
-    return times
+    from benchmarks.common import timed
+    return timed(fn, reps)
 
 
 def _topk_identical(a, b) -> float:

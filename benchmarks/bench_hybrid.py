@@ -21,7 +21,6 @@ with ``PYTHONPATH=src:. python benchmarks/bench_hybrid.py``.
 from __future__ import annotations
 
 import os
-import time
 
 import numpy as np
 
@@ -330,14 +329,10 @@ def run_cascade(q_batch: int = 64, n_docs: int = 8192, reps: int = 10,
                                       pipe.shard_specs[0], models, ltr, cfg,
                                       cost, k_serve, t_final)
 
-    def timed(fn, n):
-        fn()                               # untimed jit warmup
-        t = np.zeros(n)
-        for i in range(n):
-            t0 = time.perf_counter()
-            fn()                           # both paths return host numpy
-            t[i] = time.perf_counter() - t0
-        return t
+    # shared honest timer: blocks on any device values inside the timed
+    # window (both paths here return host numpy, but the serve path's
+    # internals dispatch async jax calls)
+    from benchmarks.common import timed
 
     res_b = run_batched()
     topk_l, final_l, used_l = run_loop()

@@ -19,7 +19,6 @@ Emits ``results/BENCH_system.json``.  Run standalone with
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
@@ -83,11 +82,9 @@ def run_system(q_batch: int = 64, n_docs: int = 8192,
                 raise RuntimeError(
                     f"scatter-gather divergence: n_shards={n} final top-t "
                     f"!= single-shard run")
-        t = np.zeros(reps)
-        for i in range(reps):
-            t0 = time.perf_counter()
-            sys_n.serve(ql.terms, ql.mask, ql.topic)
-            t[i] = time.perf_counter() - t0
+        from benchmarks.common import timed
+        t = timed(lambda: sys_n.serve(ql.terms, ql.mask, ql.topic), reps,
+                  warmup=0)   # the parity serve above already warmed jit
         s1 = res.stage_latency["stage1"]
         results[f"shards_{n}"] = {
             "n_shards": n,

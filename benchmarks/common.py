@@ -23,6 +23,28 @@ HELD_OUT = 50            # first 50 queries = TREC WebTrack analogue
 RBP_P = 0.95
 
 
+def timed(fn, reps: int, warmup: int = 1) -> np.ndarray:
+    """Wall-clock ``fn`` honestly under JAX async dispatch: every call's
+    result (any pytree; non-JAX leaves are ignored) is
+    ``jax.block_until_ready``'d *inside* the timed window, so a benchmark
+    can never under-count by timing only the dispatch.  The first
+    ``warmup`` calls are untimed (jit compilation).  Returns per-call
+    seconds."""
+    import jax
+
+    def _sync(x):
+        jax.block_until_ready(jax.tree_util.tree_leaves(x))
+
+    for _ in range(warmup):
+        _sync(fn())
+    out = np.zeros(reps)
+    for i in range(reps):
+        t0 = time.perf_counter()
+        _sync(fn())
+        out[i] = time.perf_counter() - t0
+    return out
+
+
 def write_bench_artifact(name: str, payload: dict) -> str:
     """Write a tracked benchmark artifact (``results/BENCH_<name>.json``).
 

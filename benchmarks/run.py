@@ -37,9 +37,9 @@ def main() -> None:
     if args.quick:
         args.queries = 2000
 
-    from benchmarks import (bench_engines, bench_faults, bench_heldout,
-                            bench_hybrid, bench_kernels, bench_online,
-                            bench_predict_k, bench_predict_rho,
+    from benchmarks import (bench_cache, bench_engines, bench_faults,
+                            bench_heldout, bench_hybrid, bench_kernels,
+                            bench_online, bench_predict_k, bench_predict_rho,
                             bench_predict_time, bench_system, bench_tail,
                             bench_tail_overlap)
     from benchmarks.common import load_experiment
@@ -91,6 +91,29 @@ def main() -> None:
         raise RuntimeError("online benchmark lost its teeth: the "
                            "no-admission/batch=1 baseline leaked no "
                            "violations at <= 0.8x capacity")
+
+    _section("Result cache (hit parity, inertness, certified capacity)")
+    ch = bench_cache.run_cache()
+    print(bench_cache.render_cache(ch))
+    print(f"artifact: {ch['artifact']}")
+    if not ch["gates"]["hits_bit_identical"]:
+        raise RuntimeError("cache hit parity regressed: a warm L1 hit (or "
+                           "a cold cache-on serve) diverged from the "
+                           "cache-off recompute")
+    if not ch["gates"]["inert_bit_identical"]:
+        raise RuntimeError("cache machinery is not inert: a zero-capacity "
+                           "CacheSpec perturbed cache-free serving")
+    if not ch["gates"]["guarantee_holds"]:
+        raise RuntimeError("response-time guarantee regressed with the "
+                           "cache attached: a served query exceeded the "
+                           "response budget")
+    if not ch["gates"]["capacity_speedup"]:
+        raise RuntimeError("cache capacity claim regressed: certified "
+                           "sustainable QPS at the hot skew is below 1.2x "
+                           "the cache-off certified capacity")
+    if not ch["gates"]["hits_nonvacuous"]:
+        raise RuntimeError("cache benchmark lost its teeth: the hot-skew "
+                           "trace produced almost no L1 hits")
 
     _section("Fault tolerance (crashes, stragglers, partition loss)")
     fl = bench_faults.run_faults()

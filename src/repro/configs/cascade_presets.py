@@ -26,6 +26,13 @@ fault_tolerant The paper point hardened for lossy clusters: 4 shards x 3
                200 ms guarantee survives replica crashes and stragglers;
                pair with a ``FaultSpec`` (``fault=...`` override or
                ``--fault-scenario``) to actually inject them.
+cached         The paper point with the two-level result cache in front
+               (L1 exact results + L2 Stage-1 candidates): repeated
+               queries are answered at the front door in
+               ``predict + cache_hit_us``, buying certified capacity on
+               skewed traffic.  Threshold adaptation is frozen
+               (``adapt_every=0``) so cache keys — which embed the route
+               signature — stay stable across the trace.
 =============  ==========================================================
 
 Every preset trains with ``RoutingSpec.calibrate=True``, so the routing
@@ -50,8 +57,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.serving.spec import (CascadeSpec, DeploySpec, OnlineSpec,
-                                RoutingSpec, Stage2Spec)
+from repro.serving.spec import (CacheSpec, CascadeSpec, DeploySpec,
+                                OnlineSpec, RoutingSpec, Stage2Spec)
 
 
 def _paper_200ms() -> CascadeSpec:
@@ -125,12 +132,30 @@ def _fault_tolerant() -> CascadeSpec:
     )
 
 
+def _cached() -> CascadeSpec:
+    return CascadeSpec(
+        name="cached",
+        # adapt_every=0: online threshold adaptation would rewrite the
+        # route signature embedded in every cache key (stale hits are
+        # impossible either way, but churning keys wastes the cache)
+        routing=RoutingSpec(algorithm=2, budget=200.0, rho_max=1 << 18,
+                            hedge_deadline=0.5, late_rho=4096,
+                            adapt_every=0, calibrate=True),
+        stage2=Stage2Spec(enabled=True, k_serve=128, t_final=10),
+        deploy=DeploySpec(n_shards=1, replicas=2),
+        online=OnlineSpec(max_batch=32, batch_deadline_us=5.0,
+                          admission=True, degrade=True),
+        cache=CacheSpec(enabled=True),
+    )
+
+
 PRESETS = {
     "paper_200ms": _paper_200ms,
     "throughput": _throughput,
     "quality": _quality,
     "stage1_only": _stage1_only,
     "fault_tolerant": _fault_tolerant,
+    "cached": _cached,
 }
 
 

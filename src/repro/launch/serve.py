@@ -62,6 +62,17 @@ def main():
                     help="override the preset's micro-batch width cap")
     ap.add_argument("--no-admission", action="store_true",
                     help="disable admission control (baseline mode)")
+    ap.add_argument("--cache", action="store_true",
+                    help="put the two-level result cache in front of the "
+                         "cascade (L1 exact results + L2 Stage-1 "
+                         "candidates; repro.serving.cache)")
+    ap.add_argument("--cache-entries", type=int, default=None,
+                    help="entry cap for each cache level (implies --cache)")
+    ap.add_argument("--cache-bytes", type=int, default=None,
+                    help="byte cap for each cache level (implies --cache)")
+    ap.add_argument("--zipf-skew", type=float, default=0.0,
+                    help="Zipfian query-repetition skew for --online "
+                         "traffic (0 = every query distinct, in order)")
     ap.add_argument("--trace-path", default="",
                     help="recorded arrival timestamps (.npy or JSON list) "
                          "for --arrival trace")
@@ -119,12 +130,22 @@ def main():
                                replicas=args.replicas,
                                horizon=args.fault_horizon,
                                seed=args.traffic_seed)
+    cache = spec.cache
+    if (args.cache or args.cache_entries is not None
+            or args.cache_bytes is not None):
+        kw = {"enabled": True}
+        if args.cache_entries is not None:
+            kw["l1_entries"] = kw["l2_entries"] = args.cache_entries
+        if args.cache_bytes is not None:
+            kw["l1_bytes"] = kw["l2_bytes"] = args.cache_bytes
+        cache = dataclasses.replace(cache, **kw)
     spec = dataclasses.replace(
         spec,
         deploy=dataclasses.replace(spec.deploy, n_shards=args.shards,
                                    replicas=args.replicas),
         routing=routing,
         fault=fault,
+        cache=cache,
         stage2=(spec.stage2 if not args.no_ltr else
                 dataclasses.replace(spec.stage2, enabled=False)),
         backend=(spec.backend if args.backend is None else
@@ -178,7 +199,7 @@ def main():
                                                 ql.terms, ql.mask, topics)
         qps = qps if qps is not None else 1.0  # unused by trace replay
         traffic = TrafficSpec(arrival=args.arrival, qps=qps,
-                              seed=args.traffic_seed,
+                              seed=args.traffic_seed, skew=args.zipf_skew,
                               trace_path=args.trace_path)
         src = (f"trace {args.trace_path}" if args.arrival == "trace"
                else f"qps={qps:.1f}")
@@ -203,6 +224,14 @@ def main():
             for name, sp in s["stages"].items():
                 print(f"[serve] {name:7s} ms: p50={sp['p50']:.2f} "
                       f"p99={sp['p99']:.2f} max={sp['max']:.2f}")
+        if "cache" in s:
+            c = s["cache"]
+            print(f"[serve] cache: hit_ratio={c['hit_ratio']:.3f} "
+                  f"(l1={c['l1_hits']} l2={c['l2_hits']} "
+                  f"miss={c['full_misses']}), front-door "
+                  f"hits={c['front_door_hits']}"
+                  + (f", ewma={c['hit_ewma']:.3f}" if "hit_ewma" in c
+                     else ""))
         if "coverage" in s:
             c = s["coverage"]
             print(f"[serve] coverage: min={c['min']:.2f} "
@@ -231,6 +260,11 @@ def main():
           f"{b['reserve']['stage1']:.1f}); "
           f"stage-2 trimmed={b['stage2_trimmed']} "
           f"skipped={b['stage2_skipped']}")
+    if "cache" in s:
+        c = s["cache"]
+        print(f"[serve] cache: hit_ratio={c['hit_ratio']:.3f} "
+              f"(l1={c['l1_hits']} l2={c['l2_hits']} "
+              f"miss={c['full_misses']})")
     for name, p in s.get("stages", {}).items():
         print(f"[serve] {name:7s} ms: p50={p['p50']:.2f} p99={p['p99']:.2f} "
               f"max={p['max']:.2f}")

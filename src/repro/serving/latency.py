@@ -75,6 +75,11 @@ class CostModel:
     # which is the paper's tail story at deployment scale.  0 keeps the
     # single-shard pipeline's accounting bit-identical.
     gather_per_shard_us: float = 0.0
+    # result-cache lookup: key normalization + one dict probe, charged to
+    # EVERY query when a ServingCache is attached (hits serve at
+    # predict + this; misses pay it on top of the cascade), and added to
+    # worst_case_us so the guarantee stays analytic with caching on.
+    cache_hit_us: float = 0.5
 
     @classmethod
     def v5e_shard(cls) -> "CostModel":
@@ -93,7 +98,8 @@ class CostModel:
         return cls(saat_fixed_us=3.0, saat_per_posting_us=6.4e-3,
                    daat_fixed_us=4.0, daat_per_posting_us=7.6e-3,
                    daat_per_block_us=25e-3, predict_us=0.75,
-                   ltr_fixed_us=1.0, ltr_per_candidate_us=15e-3)
+                   ltr_fixed_us=1.0, ltr_per_candidate_us=15e-3,
+                   cache_hit_us=0.05)
 
     def saat_time(self, work: np.ndarray) -> np.ndarray:
         return self.saat_fixed_us + work * self.saat_per_posting_us

@@ -21,11 +21,12 @@ from repro.serving.online.batcher import (MicroBatcher, bucket_size,
                                           pad_batch)
 from repro.serving.online.simulator import (OnlineResult, estimate_capacity,
                                             fresh_probe, simulate)
-from repro.serving.online.traffic import arrival_times, load_trace
+from repro.serving.online.traffic import (arrival_times, load_trace,
+                                          zipf_query_mix)
 
 __all__ = [
     "AdmissionController", "FULL", "MODE_NAMES", "MicroBatcher",
     "OnlineResult", "PARTIAL", "SHED", "STAGE1", "TRIM", "arrival_times",
     "bucket_size", "estimate_capacity", "fresh_probe", "load_trace",
-    "pad_batch", "simulate",
+    "pad_batch", "simulate", "zipf_query_mix",
 ]

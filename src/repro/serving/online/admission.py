@@ -33,6 +33,27 @@ Every *served* query therefore satisfies
 ``wait + dispatch + service <= response_budget`` by construction, which is
 exactly what ``benchmarks/bench_online.py`` certifies (0 violations,
 queueing included) where the no-admission baseline leaks.
+
+Cache-aware admission
+---------------------
+With a serving cache attached (``cache_bound`` = the hard service bound of
+a guaranteed L1 hit, ``predict_us + cache_hit_us``), the ladder gains a
+rung *above* full service: a query the dispatch-time peek proves is an L1
+hit is admitted at FULL whenever ``slack >= cache_bound`` — a hit bypasses
+the cascade, so it needs none of the Stage-1/Stage-2 reserves and consumes
+(almost) no server occupancy.  The controller also learns the live hit
+ratio ``h`` via EWMA (:meth:`observe_hits`) and folds it into the
+*arrival-time* floor:
+
+    floor_eff = h * cache_bound + (1 - h) * floor
+
+i.e. the expected service bound of the mix actually being served — the
+hit-ratio-adjusted capacity.  Observed capacity adapts on its own: hits
+shrink real batch occupancies, and :meth:`observe_batch` folds those into
+the wait estimator.  Both folds only move *predictions* (who gets
+admitted); the dispatch-time guarantee still prices every non-hit row at
+its full analytic bound, so 0 violations is preserved at any hit ratio —
+including a sudden drop to 0 (the EWMA re-learns, dispatch never lies).
 """
 
 from __future__ import annotations
@@ -67,7 +88,8 @@ class AdmissionController:
     def __init__(self, cfg: OnlineSpec, cost: CostModel,
                  stage1_bound: float, k_serve: int | None,
                  response_budget: float,
-                 partial_bounds=None):
+                 partial_bounds=None, cache_bound: float | None = None,
+                 hit_alpha: float = 0.2):
         cfg.validate()
         if response_budget <= 0:
             raise ValueError("response_budget must be positive")
@@ -101,15 +123,30 @@ class AdmissionController:
         # starts at the conservative worst case so a cold start over-sheds
         # rather than over-admits
         self.occupancy_ewma = cfg.dispatch_us + self._full_bound
+        # cache-aware rung: hard service bound of a guaranteed L1 hit
+        # (None = no cache attached), and the live hit-ratio EWMA —
+        # pessimistic 0 at cold start, so an empty cache changes nothing
+        self.cache_bound = (float(cache_bound) if cache_bound is not None
+                            else None)
+        self.hit_alpha = float(hit_alpha)
+        self.hit_ewma = 0.0
         self.stats = {"shed_arrival": 0, "shed_queue_cap": 0,
                       "shed_dispatch": 0, "degraded": 0, "partial": 0,
-                      "admitted": 0}
+                      "admitted": 0, "cache_admitted": 0}
 
     # ------------------------------------------------------------------
     def observe_batch(self, occupancy: float, alpha: float = 0.2) -> None:
         """Fold an observed batch occupancy into the wait estimator."""
         self.occupancy_ewma = ((1 - alpha) * self.occupancy_ewma
                                + alpha * float(occupancy))
+
+    def observe_hits(self, n_hits: int, n_lookups: int) -> None:
+        """Fold one batch's L1 hit count into the hit-ratio EWMA (no-op on
+        an empty batch, so padding rows never dilute the estimate)."""
+        if n_lookups <= 0:
+            return
+        self.hit_ewma = ((1 - self.hit_alpha) * self.hit_ewma
+                         + self.hit_alpha * (n_hits / n_lookups))
 
     def at_arrival(self, arrival: float, server_free: float,
                    queue_depth: int) -> bool:
@@ -125,6 +162,13 @@ class AdmissionController:
                     + batches_ahead * self.occupancy_ewma)
         floor = (self._degrade_floor if self.cfg.degrade
                  else self._full_bound)
+        if self.cache_bound is not None:
+            # hit-ratio-adjusted floor: the expected service bound of the
+            # mix actually served (h·hit + (1-h)·miss) — see module
+            # docstring.  Prediction only; dispatch still prices every
+            # non-hit at the full bound.
+            floor = (self.hit_ewma * self.cache_bound
+                     + (1.0 - self.hit_ewma) * floor)
         if wait_est + self.cfg.dispatch_us + floor > self.response_budget:
             self.stats["shed_arrival"] += 1
             return False
@@ -149,7 +193,26 @@ class AdmissionController:
         self.stats["partial"] += int(part.sum())
         return shard_cap
 
-    def at_dispatch(self, waits: np.ndarray
+    def _hit_override(self, mode: np.ndarray, slack: np.ndarray,
+                      hits) -> np.ndarray | None:
+        """Rows the dispatch-time cache peek *proves* are L1 hits are
+        admitted at FULL whenever their slack covers the hit bound — a hit
+        bypasses the cascade, so none of the Stage-1/Stage-2 reserves
+        apply.  Returns the override mask (``None`` when no cache/peek).
+        Un-does any rung counters the override supersedes."""
+        if hits is None or self.cache_bound is None:
+            return None
+        hit_ok = (np.asarray(hits, bool)
+                  & (slack >= self.cache_bound - 1e-9))
+        if not hit_ok.any():
+            return hit_ok
+        self.stats["cache_admitted"] += int(np.sum(hit_ok
+                                                   & (mode != FULL)))
+        self.stats["partial"] -= int(np.sum(hit_ok & (mode == PARTIAL)))
+        mode[hit_ok] = FULL
+        return hit_ok
+
+    def at_dispatch(self, waits: np.ndarray, hits=None
                     ) -> tuple[np.ndarray, np.ndarray | None,
                                np.ndarray | None]:
         """(mode, stage2_cap, shard_cap) per query from its *actual* wait
@@ -157,7 +220,10 @@ class AdmissionController:
         deployments; shed rows get cap 0 (they are never served).
         ``shard_cap`` is ``None`` unless the partial-coverage rung is live
         (``partial_bounds``); partial rows serve the rank-safe Stage-1
-        order over their first ``shard_cap`` partitions (stage2_cap 0)."""
+        order over their first ``shard_cap`` partitions (stage2_cap 0).
+        ``hits`` is an optional per-query bool mask of guaranteed L1 cache
+        hits (``SearchSystem.cache_peek`` at the dispatch clock): those
+        rows take the cache rung (see module docstring)."""
         waits = np.asarray(waits, np.float64)
         slack = self.response_budget - waits - self.cfg.dispatch_us
         mode = np.full(len(waits), SHED, np.int64)
@@ -165,6 +231,9 @@ class AdmissionController:
         if self.k_serve is None:
             mode[fits_s1] = FULL
             shard_cap = self._partial_rung(mode, slack, fits_s1)
+            hit_ok = self._hit_override(mode, slack, hits)
+            if hit_ok is not None and shard_cap is not None:
+                shard_cap[hit_ok] = len(self._partial_bounds)
             self.stats["shed_dispatch"] += int(np.sum(mode == SHED))
             return mode, None, shard_cap
         afford = stage2_afford(self.cost, slack - self.stage1_bound,
@@ -173,6 +242,8 @@ class AdmissionController:
             # admit/shed only: full service or nothing
             full = fits_s1 & (afford >= self.k_serve)
             mode[full] = FULL
+            self._hit_override(mode, slack, hits)
+            full = mode == FULL
             self.stats["shed_dispatch"] += int(np.sum(~full))
             return (mode, np.where(full, self.k_serve, 0).astype(np.int64),
                     None)
@@ -180,8 +251,16 @@ class AdmissionController:
         mode[fits_s1 & (0 < afford) & (afford < self.k_serve)] = TRIM
         mode[fits_s1 & (afford >= self.k_serve)] = FULL
         shard_cap = self._partial_rung(mode, slack, fits_s1)
-        self.stats["shed_dispatch"] += int(np.sum(mode == SHED))
-        self.stats["degraded"] += int(np.sum(fits_s1 & (afford
-                                                        < self.k_serve)))
+        hit_ok = self._hit_override(mode, slack, hits)
         cap = np.where(fits_s1, afford, 0).astype(np.int64)
+        if hit_ok is not None:
+            cap[hit_ok] = self.k_serve
+            if shard_cap is not None:
+                shard_cap[hit_ok] = len(self._partial_bounds)
+        else:
+            hit_ok = np.zeros(len(waits), bool)
+        self.stats["shed_dispatch"] += int(np.sum(mode == SHED))
+        self.stats["degraded"] += int(np.sum(fits_s1 & ~hit_ok
+                                             & (afford < self.k_serve)))
+        cap = np.minimum(np.maximum(cap, 0), self.k_serve)
         return mode, cap, shard_cap

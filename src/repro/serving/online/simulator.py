@@ -37,7 +37,7 @@ from repro.serving.latency import over_budget, percentiles
 from repro.serving.online.admission import (FULL, MODE_NAMES, SHED,
                                             AdmissionController)
 from repro.serving.online.batcher import MicroBatcher, pad_batch
-from repro.serving.online.traffic import arrival_times
+from repro.serving.online.traffic import arrival_times, zipf_query_mix
 from repro.serving.spec import OnlineSpec, TrafficSpec
 
 _NOT_SERVED = -1.0  # sentinel in per-query arrays / the event log (not NaN:
@@ -53,7 +53,8 @@ class OnlineResult:
     completion: np.ndarray       # (Q,) completion timestamp (-1 = shed)
     response: np.ndarray         # (Q,) completion - arrival (-1 = shed)
     mode: np.ndarray             # (Q,) FULL|TRIM|STAGE1|PARTIAL|SHED
-    batch_of: np.ndarray         # (Q,) batch id (-1 = shed)
+    batch_of: np.ndarray         # (Q,) batch id (-1 = shed, -2 = answered
+                                 # at the front door by an L1 cache hit)
     topk: np.ndarray             # (Q, k_serve) Stage-1 candidates (-1 = shed)
     final: np.ndarray | None     # (Q, t_final) re-ranked (None: no LTR)
     event_log: list = field(default_factory=list)
@@ -73,6 +74,15 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
     online.validate()
     q = len(terms)
     arr = arrival_times(traffic, q)
+    if traffic.skew > 0:
+        # Zipfian repetition: arrival j serves log row mix[j] (identities
+        # drawn from their own seeded stream, so the timestamps above are
+        # untouched).  skew=0 keeps the in-order replay bit-identical.
+        mix = zipf_query_mix(traffic, q)
+        terms = terms[mix]
+        mask = mask[mix]
+        if topics is not None:
+            topics = topics[mix]
     batcher = MicroBatcher(online)
     k_serve = system.k_serve if system.ltr is not None else None
     reserve2 = system._budget_reserve["stage2"]
@@ -86,8 +96,16 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
     if ns > 1 and system.cost.gather_per_shard_us > 0:
         partial_bounds = [system.sched.cfg.worst_case_us(system.cost, m)
                           for m in range(1, ns + 1)]
+    cache_on = getattr(system, "cache", None) is not None
+    # a guaranteed L1 hit bypasses the cascade: its hard service bound is
+    # just prediction + lookup — the cache rung of the admission ladder
+    hit_bound = (system.cost.predict_us + system.cost.cache_hit_us
+                 if cache_on else None)
     adm = (AdmissionController(online, system.cost, stage1_bound, k_serve,
-                               budget_r, partial_bounds=partial_bounds)
+                               budget_r, partial_bounds=partial_bounds,
+                               cache_bound=hit_bound,
+                               hit_alpha=(system.cache.spec.hit_alpha
+                                          if cache_on else 0.2))
            if online.admission else None)
 
     mode = np.full(q, SHED, np.int64)
@@ -107,8 +125,48 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
     pending: list[int] = []
     t_free = 0.0
     i = 0
+    n_front = 0
 
     def admit(qid: int) -> None:
+        nonlocal n_front
+        if cache_on:
+            # front-door lookup at arrival: an exact-result L1 hit is
+            # answered from the broker's memory (prediction + probe) and
+            # never consumes an engine-batch slot — this is where caching
+            # buys capacity, since batch occupancy is a max over rows.
+            # The peek and the serve below share the clock ``arr[qid]``
+            # (same fault epoch, no intervening fills), so the peek's
+            # verdict is binding.
+            t_arr = float(arr[qid])
+            hit = system.cache_peek(
+                terms[qid:qid + 1], mask[qid:qid + 1],
+                topics[qid:qid + 1] if system.ltr is not None else None,
+                now=t_arr)
+            if bool(hit[0]):
+                res = system.serve(
+                    terms[qid:qid + 1], mask[qid:qid + 1],
+                    topics[qid:qid + 1] if system.ltr is not None else None,
+                    now=t_arr)
+                svc = float(res.latency[0])
+                mode[qid] = FULL
+                wait[qid] = 0.0
+                service[qid] = svc
+                completion[qid] = t_arr + svc
+                batch_of[qid] = -2          # -2 = served at the front door
+                topk[qid] = res.topk[0]
+                if final is not None and res.final is not None:
+                    final[qid] = res.final[0]
+                if coverage is not None:
+                    coverage[qid] = 1.0
+                for name, t in res.stage_latency.items():
+                    stage_acc.setdefault(name, []).append(
+                        np.asarray(t, np.float64))
+                events.append((qid, -2, t_arr, t_arr, 0.0, svc,
+                               float(completion[qid]), FULL))
+                n_front += 1
+                if adm is not None:
+                    adm.observe_hits(1, 1)
+                return
         ok = (adm.at_arrival(float(arr[qid]), t_free, len(pending))
               if adm is not None else True)
         if ok:
@@ -120,8 +178,16 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
     def dispatch(rows: np.ndarray, t_start: float) -> None:
         nonlocal t_free
         waits = t_start - arr[rows]
+        hits = None
+        if cache_on:
+            # dispatch-time peek at the same clock serve() will run at —
+            # no recency moves, no RNG, so replay stays deterministic
+            hits = system.cache_peek(
+                terms[rows], mask[rows],
+                topics[rows] if system.ltr is not None else None,
+                now=float(t_start))
         if adm is not None:
-            m, cap, scap = adm.at_dispatch(waits)
+            m, cap, scap = adm.at_dispatch(waits, hits)
         else:
             m = np.full(len(rows), FULL, np.int64)
             cap = None
@@ -146,10 +212,18 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
             sc_k = scap[keep]
             shard_p = np.concatenate(
                 [sc_k, np.full(len(padded) - n_real, sc_k[0], np.int64)])
+        if cache_on:
+            c_pre = (system.cache.counters["l1_hits"],
+                     system.cache.counters["lookups"])
         res = system.serve(terms[padded], mask[padded],
                            topics[padded] if system.ltr is not None
                            else None, stage2_cap=cap_p, shard_cap=shard_p,
                            now=float(t_start))
+        if cache_on and adm is not None:
+            # feed the batch's realized hit ratio into the admission EWMA
+            adm.observe_hits(
+                system.cache.counters["l1_hits"] - c_pre[0],
+                system.cache.counters["lookups"] - c_pre[1])
         bid = len(batch_meta)
         svc = np.asarray(res.latency[:n_real], np.float64)
         occupancy = online.dispatch_us + float(np.max(res.latency))
@@ -215,6 +289,11 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
         "admission": dict(adm.stats) if adm is not None else None,
         "worst_case_bound": float(system.worst_case_us()),
     }
+    if cache_on:
+        stats["cache"] = system.cache.stats()
+        stats["cache"]["front_door_hits"] = n_front
+        if adm is not None:
+            stats["cache"]["hit_ewma"] = float(adm.hit_ewma)
     if faulted:
         if system.faults.active:
             stats["faults"] = dict(system._fault_counters)

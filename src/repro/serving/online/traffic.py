@@ -97,6 +97,34 @@ def load_trace(path: str) -> np.ndarray:
     return np.asarray(ts, np.float64).ravel()
 
 
+def zipf_query_mix(spec: TrafficSpec, n: int,
+                   n_unique: int | None = None) -> np.ndarray:
+    """``n`` query-log row indices with Zipfian repetition: arrival ``j``
+    serves log row ``out[j]``, drawn with probability ∝ 1/rank^skew over
+    the first ``n_unique`` rows (default: all of them).  This is the
+    *identity* half of a production workload — a small head of queries
+    repeating constantly — composable with ANY arrival process above:
+    identities are drawn from their own seeded stream
+    (``seed + 0x5EED``), so toggling ``skew`` never moves a timestamp.
+
+    ``skew <= 0`` returns the uniform in-order replay ``arange(n) %
+    n_unique`` — the historical behavior, bit-identical and RNG-free.
+    """
+    spec.validate()
+    if n < 1:
+        raise ValueError("need n >= 1 arrivals")
+    n_unique = int(n_unique) if n_unique is not None else int(n)
+    if n_unique < 1:
+        raise ValueError("need n_unique >= 1 distinct queries")
+    if spec.skew <= 0:
+        return np.arange(n, dtype=np.int64) % n_unique
+    ranks = np.arange(1, n_unique + 1, dtype=np.float64)
+    p = ranks ** -float(spec.skew)
+    p /= p.sum()
+    rng = np.random.RandomState(spec.seed + 0x5EED)
+    return rng.choice(n_unique, size=n, p=p).astype(np.int64)
+
+
 def arrival_times(spec: TrafficSpec, n: int) -> np.ndarray:
     """``n`` non-decreasing arrival timestamps for the process ``spec``
     names, starting at >= 0.  Deterministic in ``spec.seed``."""

@@ -79,6 +79,8 @@ class CascadePipeline(SearchSystem):
         return self.shard_specs[0]
 
     def stage1(self, terms: np.ndarray, mask: np.ndarray, routed):
-        """Historical signature: returns (topk, t_bmw)."""
-        topk, t_bmw, _ = self._stage1_full(terms, mask, routed)
+        """Historical signature: returns (topk, t_bmw).  Threads a fresh
+        per-call split memo so same-batch duplicates share their SAAT
+        level-cut resolution."""
+        topk, t_bmw, _ = self._stage1_full(terms, mask, routed, {})
         return topk, t_bmw

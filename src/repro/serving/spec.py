@@ -278,6 +278,56 @@ class FaultSpec:
             raise ValueError("timeout window is inverted")
 
 
+@dataclass(frozen=True)
+class CacheSpec:
+    """Two-level serving cache: the skew half of a production workload.
+
+    Production query streams are heavily skewed — a small head of queries
+    repeats constantly — and a repeat should not pay the Stage-0→1→2
+    cascade again.  This node names the cache half of the operating point:
+
+    * **L1** — exact result cache keyed on the normalized query (sorted
+      active term ids + weights + topic + the resolved route/ρ/k and the
+      Stage-2 depth): a hit bypasses the whole cascade and costs
+      ``CostModel.cache_hit_us``;
+    * **L2** — Stage-1 candidate cache keyed on (normalized query, route,
+      ρ) only: a hit skips retrieval but re-runs Stage-2, so trimmed /
+      degraded rungs and differing re-rank depths still get a partial win.
+
+    Both levels are deterministic capacity-bounded LRUs (entry- **and**
+    byte-limits, O(1) dict+linked-list, no wall-clock reads, no RNG) in
+    ``repro.serving.cache``, evaluated on the same serving clock as the
+    fault schedule: partial-coverage results are never admitted, and every
+    entry is tagged with the coverage/fault epoch at fill time so a result
+    cached while a partition was down can never be served after it heals
+    (and vice versa).
+
+    The default (``enabled=False``) is **inert**: ``SearchSystem`` takes
+    the historical serve path untouched — zero lookups, zero RNG draws,
+    bit-identical serving — the same discipline as an empty ``FaultSpec``.
+    """
+    enabled: bool = False
+    l1_entries: int = 4096       # exact-result entries (0 disables L1)
+    l2_entries: int = 4096       # Stage-1 candidate entries (0 disables L2)
+    l1_bytes: int = 1 << 26      # per-level byte cap (0 = entries-only)
+    l2_bytes: int = 1 << 26
+    hit_alpha: float = 0.2       # admission hit-ratio EWMA step (the live
+                                 # hit ratio folds into the shed floor and
+                                 # the observed-capacity estimate)
+
+    @property
+    def active(self) -> bool:
+        """Whether any level can hold an entry at all."""
+        return self.enabled and (self.l1_entries > 0 or self.l2_entries > 0)
+
+    def validate(self) -> None:
+        for name in ("l1_entries", "l2_entries", "l1_bytes", "l2_bytes"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0")
+        if not 0.0 < self.hit_alpha <= 1.0:
+            raise ValueError("hit_alpha must be in (0, 1]")
+
+
 ARRIVALS = ("poisson", "bursty", "diurnal", "trace")
 
 
@@ -297,6 +347,13 @@ class TrafficSpec:
     arrival: str = "poisson"     # poisson | bursty | diurnal | trace
     qps: float = 100.0
     seed: int = 0
+    # query-identity skew: each arrival's query is drawn Zipf(s=skew) over
+    # the log (rank r with probability ∝ 1/r^skew), so a head of queries
+    # repeats — the workload half of the serving cache.  0 = uniform replay
+    # of the log in order (the historical behavior, bit-identical).  The
+    # identity stream is seeded independently of the arrival-time stream,
+    # so toggling skew never moves a timestamp.
+    skew: float = 0.0
     # bursty (2-state MMPP): high-state rate = qps * burst_factor, dwell
     # times exponential with the given means; the low-state rate is solved
     # so the long-run mean rate stays qps
@@ -315,6 +372,8 @@ class TrafficSpec:
                              f"got {self.arrival!r}")
         if self.arrival != "trace" and self.qps <= 0:
             raise ValueError("qps must be positive")
+        if self.skew < 0:
+            raise ValueError("skew must be >= 0 (0 = no repetition)")
         if self.arrival == "trace" and not self.trace_path:
             raise ValueError("arrival='trace' needs trace_path")
         if self.arrival == "bursty":
@@ -377,7 +436,7 @@ class DeploySpec:
 
 _NODES = {"index": IndexSpec, "stage0": Stage0Spec, "routing": RoutingSpec,
           "stage2": Stage2Spec, "backend": BackendSpec, "deploy": DeploySpec,
-          "online": OnlineSpec, "fault": FaultSpec}
+          "online": OnlineSpec, "fault": FaultSpec, "cache": CacheSpec}
 
 
 @dataclass(frozen=True)
@@ -391,6 +450,7 @@ class CascadeSpec:
     deploy: DeploySpec = field(default_factory=DeploySpec)
     online: OnlineSpec = field(default_factory=OnlineSpec)
     fault: FaultSpec = field(default_factory=FaultSpec)
+    cache: CacheSpec = field(default_factory=CacheSpec)
     name: str = "custom"
 
     def validate(self) -> "CascadeSpec":

@@ -56,6 +56,8 @@ from repro.isn.saat import saat_serve
 from repro.ltr.cascade import CascadeResult, rerank_batched
 from repro.ltr.ranker import (LTRModel, csr_search_iters, ltr_training_set,
                               qd_features, stage2_arrays, train_ltr)
+from repro.serving.cache import (HEALTHY_EPOCH, ServingCache, l1_key,
+                                 l2_key, normalize_query, route_sig)
 from repro.serving.faults import FaultInjector
 from repro.serving.latency import (CostModel, budget_attribution,
                                    over_budget, percentiles,
@@ -191,6 +193,11 @@ class SearchSystem:
         # simulator drives it explicitly (now=dispatch time).
         self.faults = FaultInjector(spec.fault, spec.deploy.n_shards)
         self._clock = 0.0
+        # two-level result/candidate cache (spec.cache; inert by default):
+        # None keeps every serve path bit-identical to the uncached system
+        # — the same inertness discipline as FaultSpec
+        self.cache = (ServingCache(spec.cache) if spec.cache.active
+                      else None)
         self._fault_counters = {
             "retries": 0,        # failover re-issues after a shard timeout
             "transient": 0,      # attempts killed by the timeout storm
@@ -401,8 +408,10 @@ class SearchSystem:
 
     def stage1(self, terms: np.ndarray, mask: np.ndarray, routed):
         """Public alias of :meth:`_stage1_full` (shims may narrow the
-        return signature; ``serve`` always uses the full form)."""
-        return self._stage1_full(terms, mask, routed)
+        return signature; ``serve`` always uses the full form).  Threads a
+        fresh per-call split memo so same-batch duplicate queries share
+        their SAAT level-cut resolution instead of recomputing it."""
+        return self._stage1_full(terms, mask, routed, {})
 
     def _stage1_full(self, terms: np.ndarray, mask: np.ndarray, routed,
                      cache: dict | None = None, drop=None):
@@ -650,7 +659,28 @@ class SearchSystem:
         advanced by each batch's occupancy; the online simulator passes
         its dispatch time).  With an inert fault spec and no ``shard_cap``
         this path is bit-identical to fault-free serving.
+
+        With an active :class:`~repro.serving.spec.CacheSpec` every query
+        is first looked up in the two-level serving cache (L1 exact
+        results bypass the cascade, L2 candidates skip retrieval and
+        re-run Stage-2) and full-coverage results are filled back; with
+        the cache disabled (the default) this method IS the direct
+        cascade, bit-identical to the pre-cache system.
         """
+        if self.cache is None:
+            return self._serve_direct(terms, mask, topics,
+                                      stage2_cap=stage2_cap,
+                                      shard_cap=shard_cap, now=now)
+        return self._serve_cached(terms, mask, topics,
+                                  stage2_cap=stage2_cap,
+                                  shard_cap=shard_cap, now=now)
+
+    def _serve_direct(self, terms: np.ndarray, mask: np.ndarray,
+                      topics: np.ndarray | None = None, *,
+                      stage2_cap: np.ndarray | None = None,
+                      shard_cap: np.ndarray | None = None,
+                      now: float | None = None) -> PipelineResult:
+        """The uncached cascade (see :meth:`serve` for the contract)."""
         q = terms.shape[0]
         ns = self.n_shards
         now = float(self._clock if now is None else now)
@@ -845,6 +875,285 @@ class SearchSystem:
                               latency=lat, stage_latency=stage_latency,
                               stats=stats, coverage=coverage)
 
+    # ------------------------------------------------------------------
+    # result/candidate caching
+    # ------------------------------------------------------------------
+
+    def _cache_epoch(self, now: float):
+        """The coverage/fault epoch cache entries are tagged with at clock
+        ``now``: the per-partition reachability vector plus the transient-
+        storm window flag.  Entries only hit inside the epoch they were
+        filled in, so serving across a fault transition (a partition dying
+        or healing, a storm starting) re-derives from the live cascade
+        instead of trusting results certified under different coverage.
+        With an inert fault spec this is one constant — no per-query work,
+        no RNG (``transient`` draws are never consumed here)."""
+        if not self.faults.active:
+            return HEALTHY_EPOCH
+        reps = self.cascade_spec.deploy.replicas
+        up = tuple(self.faults.partition_up(p, reps, now)
+                   for p in range(self.n_shards))
+        sp = self.faults.spec
+        storm = bool(sp.timeout_p > 0
+                     and sp.timeout_start <= now < sp.timeout_end)
+        return up + (storm,)
+
+    def _pure_route(self, pk, pr, pt):
+        """Route a batch WITHOUT counting it: ``StageZeroScheduler.route``
+        accumulates routing stats, but cache-key derivation must not double
+        count rows the miss sub-batch re-routes for real below."""
+        saved = dict(self.sched.stats)
+        routed = self.sched.route(pk, pr, pt)
+        self.sched.stats.clear()
+        self.sched.stats.update(saved)
+        return routed
+
+    def cache_peek(self, terms: np.ndarray, mask: np.ndarray,
+                   topics: np.ndarray | None = None, *,
+                   now: float | None = None) -> np.ndarray:
+        """Per-query bool mask of *guaranteed* L1 hits at clock ``now`` —
+        rows for which :meth:`serve` (called at the same clock, before any
+        other serve) will bypass the cascade at full service.  Probes only
+        the FULL-mode key (``cap = k_serve``), mutates nothing (no recency
+        moves, no stats, no RNG), so admission can peek at dispatch time
+        without perturbing replay determinism."""
+        q = terms.shape[0]
+        out = np.zeros(q, bool)
+        if self.cache is None or self.cache.l1 is None:
+            return out
+        now = float(self._clock if now is None else now)
+        epoch = self._cache_epoch(now)
+        pk, pr, pt = self.stage0(terms, mask)
+        routed = self._pure_route(pk, pr, pt)
+        is_jass = np.zeros(q, bool)
+        is_jass[routed.jass_rows] = True
+        for i in range(q):
+            qk = normalize_query(terms[i], mask[i],
+                                 None if topics is None else topics[i])
+            rs = route_sig(bool(is_jass[i]), float(routed.rho[i]),
+                           float(routed.k[i]))
+            out[i] = self.cache.l1_contains(
+                l1_key(qk, rs, self.k_serve, self.t_final, self.k_serve),
+                epoch)
+        return out
+
+    def _serve_cached(self, terms: np.ndarray, mask: np.ndarray,
+                      topics: np.ndarray | None = None, *,
+                      stage2_cap: np.ndarray | None = None,
+                      shard_cap: np.ndarray | None = None,
+                      now: float | None = None) -> PipelineResult:
+        """serve() with the two-level cache in front of the cascade.
+
+        Per query: L1 hit → the cached (topk, final, used) row at
+        ``predict_us + cache_hit_us``; L2 hit → cached Stage-1 candidates,
+        fresh Stage-2 re-rank; miss → the full cascade via
+        :meth:`_serve_direct` on the miss sub-batch (row-independent
+        batched kernels keep sub-batch results bit-identical to the
+        full-batch ones).  Every query pays the ``cache_hit_us`` lookup —
+        that is the term :meth:`worst_case_us` charges.
+
+        Correctness guards: rows admitted at partial coverage
+        (``shard_cap < n_shards``) bypass the cache entirely, results that
+        came back with ``coverage < 1`` are never filled, and every entry
+        carries the fill-time fault epoch (see :meth:`_cache_epoch`).  A
+        hit may serve the *untrimmed* re-rank where a cold serve would
+        have had to trim for budget — the hit has the slack to spend;
+        whenever enforcement didn't trim the cold path, hit == recompute
+        bit-for-bit (certified by ``benchmarks/bench_cache.py``).
+        """
+        q = terms.shape[0]
+        ns = self.n_shards
+        now = float(self._clock if now is None else now)
+        cache = self.cache
+        epoch = self._cache_epoch(now)
+        pk, pr, pt = self.stage0(terms, mask)
+        routed = self._pure_route(pk, pr, pt)
+        is_jass = np.zeros(q, bool)
+        is_jass[routed.jass_rows] = True
+
+        cap = np.full(q, self.k_serve, np.int64)
+        if stage2_cap is not None:
+            cap = np.minimum(np.asarray(stage2_cap, np.int64), self.k_serve)
+        # the partial-coverage rung deliberately queries fewer partitions:
+        # those rows neither look up nor fill (a full-coverage cached
+        # result would silently upgrade the admission decision)
+        eligible = (np.ones(q, bool) if shard_cap is None
+                    else np.asarray(shard_cap, np.int64) >= ns)
+
+        keys1 = [None] * q
+        keys2 = [None] * q
+        l1_hit = np.zeros(q, bool)
+        l2_hit = np.zeros(q, bool)
+        l1_vals: dict = {}
+        l2_vals: dict = {}
+        for i in range(q):
+            if not eligible[i]:
+                cache.counters["skipped_partial"] += 1
+                continue
+            cache.counters["lookups"] += 1
+            qk = normalize_query(terms[i], mask[i],
+                                 None if topics is None else topics[i])
+            rs = route_sig(bool(is_jass[i]), float(routed.rho[i]),
+                           float(routed.k[i]))
+            keys1[i] = l1_key(qk, rs, self.k_serve, self.t_final,
+                              int(cap[i]))
+            v = cache.l1_get(keys1[i], epoch)
+            if v is not None:
+                l1_hit[i] = True
+                l1_vals[i] = v
+                cache.counters["l1_hits"] += 1
+                continue
+            keys2[i] = l2_key(qk, rs)
+            if self.ltr is not None:
+                v2 = cache.l2_get(keys2[i], epoch)
+                if v2 is not None:
+                    l2_hit[i] = True
+                    l2_vals[i] = v2
+                    cache.counters["l2_hits"] += 1
+                    continue
+            cache.counters["full_misses"] += 1
+
+        hit_us = self.cost.cache_hit_us
+        topk = np.zeros((q, self.k_serve), np.int64)
+        final_rows: list = [None] * q
+        used = np.zeros(q, np.int64) if self.ltr is not None else None
+        t0 = np.full(q, self.cost.predict_us)
+        t1 = np.zeros(q)
+        t2 = np.zeros(q)
+        faulted = self.faults.active or shard_cap is not None
+        coverage = np.ones(q) if faulted else None
+        trimmed = skipped = 0
+
+        rows1 = np.flatnonzero(l1_hit)
+        for i in rows1:
+            tk, f, u = l1_vals[i]
+            topk[i] = tk
+            if self.ltr is not None:
+                final_rows[i] = f
+                used[i] = u
+        t1[rows1] = hit_us
+
+        rows2 = np.flatnonzero(l2_hit)
+        if len(rows2):
+            cand = np.stack([l2_vals[i] for i in rows2])
+            topk[rows2] = cand
+            t1[rows2] = hit_us
+            k2 = np.minimum(np.minimum(routed.k[rows2], self.k_serve),
+                            cap[rows2]).astype(np.int64)
+            if self.sched.cfg.enforce_budget:
+                # same enforcement as the cold path, priced at the hit's
+                # actual stage-1 cost — a hit has the slack to afford the
+                # full grid whenever the reserve holds
+                afford = stage2_afford(
+                    self.cost,
+                    self.budget - (self.cost.predict_us + hit_us),
+                    self.k_serve)
+                trimmed += int(np.sum((0 < afford) & (afford < k2)))
+                skipped += int(np.sum((afford == 0) & (k2 > 0)))
+                k2 = np.minimum(k2, afford)
+            res2 = self.stage2(terms[rows2], mask[rows2], topics[rows2],
+                               cand.astype(np.int32), k2)
+            f2, u2 = res2.final, res2.candidates_used
+            skip = np.flatnonzero(k2 == 0)
+            if len(skip):
+                f2[skip] = cand[skip, :self.t_final]
+            for j, i in enumerate(rows2):
+                final_rows[i] = f2[j]
+                used[i] = u2[j]
+            t2[rows2] = np.where(u2 > 0, self.cost.ltr_time(u2), 0.0)
+            # promote: the fresh full-coverage re-rank is exactly an L1
+            # entry for this (query, route, stage-2 params) point
+            for j, i in enumerate(rows2):
+                cache.l1_put(keys1[i],
+                             (topk[i].copy(), f2[j].copy(), int(u2[j])),
+                             epoch)
+
+        miss_rows = np.flatnonzero(~(l1_hit | l2_hit))
+        sub = None
+        if len(miss_rows):
+            sub = self._serve_direct(
+                terms[miss_rows], mask[miss_rows],
+                None if topics is None else topics[miss_rows],
+                stage2_cap=(None if stage2_cap is None
+                            else np.asarray(stage2_cap)[miss_rows]),
+                shard_cap=(None if shard_cap is None
+                           else np.asarray(shard_cap)[miss_rows]),
+                now=now)
+            topk[miss_rows] = sub.topk
+            if self.ltr is not None:
+                for j, i in enumerate(miss_rows):
+                    final_rows[i] = sub.final[j]
+                used[miss_rows] = sub.candidates_used
+            t0[miss_rows] = sub.stage_latency["stage0"]
+            # misses pay the failed lookup on top of the cascade
+            t1[miss_rows] = sub.stage_latency["stage1"] + hit_us
+            t2[miss_rows] = sub.stage_latency["stage2"]
+            if coverage is not None and sub.coverage is not None:
+                coverage[miss_rows] = sub.coverage
+            sb = sub.stats["budget"]
+            trimmed += sb["stage2_trimmed"]
+            skipped += sb["stage2_skipped"]
+            for j, i in enumerate(miss_rows):
+                if not eligible[i]:
+                    continue
+                if sub.coverage is not None and sub.coverage[j] < 1.0:
+                    cache.counters["skipped_partial"] += 1
+                    continue   # partial coverage is never cached
+                if self.ltr is not None:
+                    cache.l2_put(keys2[i], sub.topk[j].copy(), epoch)
+                    cache.l1_put(keys1[i],
+                                 (sub.topk[j].copy(), sub.final[j].copy(),
+                                  int(sub.candidates_used[j])), epoch)
+                else:
+                    cache.l1_put(keys1[i],
+                                 (sub.topk[j].copy(), None, None), epoch)
+
+        final = (np.stack(final_rows) if self.ltr is not None else None)
+        lat = t0 + t1 + t2
+        stage_latency = {"stage0": t0, "stage1": t1, "stage2": t2}
+        # the batch advances the shared serving clock exactly like the
+        # direct path (the miss sub-serve's advance is overridden: the
+        # batch's occupancy is the max over ALL its rows)
+        self._clock = now + (float(lat.max()) if q else 0.0)
+
+        stats = dict(self.sched.stats)
+        stats.update(percentiles(lat))
+        n_over, pct = over_budget(lat, self.budget)
+        stats["over_budget"] = n_over
+        stats["over_budget_pct"] = pct
+        stats["stages"] = {}
+        for name, t in stage_latency.items():
+            if not np.any(t > 0):
+                continue
+            entry = percentiles(t)
+            entry["budget"] = self._budget_reserve[name]
+            entry["over_budget"] = over_budget(
+                t, self._budget_reserve[name])[0]
+            stats["stages"][name] = entry
+        stats["budget"] = {
+            "total": self.budget,
+            "reserve": dict(self._budget_reserve),
+            "enforce": self.sched.cfg.enforce_budget,
+            "worst_case_bound": self.worst_case_us(),
+            "stage2_trimmed": trimmed,
+            "stage2_skipped": skipped,
+        }
+        stats["n_shards"] = ns
+        stats["pool"] = self.pool.stats()
+        if faulted:
+            stats["faults"] = dict(self._fault_counters)
+            stats["faults"]["clock"] = now
+            stats["coverage"] = {
+                "min": float(coverage.min()) if q else 1.0,
+                "mean": float(coverage.mean()) if q else 1.0,
+                "degraded": int((coverage < 1.0).sum()),
+            }
+        stats["cache"] = cache.stats()
+        self._last_stats = stats
+        return PipelineResult(topk=topk, final=final, candidates_used=used,
+                              latency=lat, stage_latency=stage_latency,
+                              stats=stats, coverage=coverage)
+
     def serve_online(self, terms: np.ndarray, mask: np.ndarray,
                      topics: np.ndarray | None = None, *,
                      traffic, online=None):
@@ -868,9 +1177,14 @@ class SearchSystem:
         guarantee (certified on a trace by ``benchmarks/bench_tail.py``).
         The bound is scatter-gather aware: the late re-issue pays the
         per-extra-shard gather overhead, so ``max_late_rho`` shrinks as
-        shards are added."""
+        shards are added.  With a serving cache attached, every query
+        additionally pays the lookup (``cache_hit_us``) — charging it here
+        keeps the guarantee analytic with caching on (a hit costs strictly
+        less than the bound; a miss costs the cascade plus the lookup)."""
         return (self.sched.cfg.worst_case_us(self.cost, self.n_shards)
-                + self._budget_reserve["stage2"])
+                + self._budget_reserve["stage2"]
+                + (self.cost.cache_hit_us if self.cache is not None
+                   else 0.0))
 
     def _adapt_routing(self):
         """Close the routing feedback loop from pool EWMAs + scheduler

@@ -1,0 +1,351 @@
+"""Two-level serving cache suite: LRU mechanics (eviction order, byte
+caps, epoch tagging), key normalization, hit/miss bit-parity against the
+cache-off cascade, fault-epoch invalidation, inert-mode zero-RNG
+bit-identity, admission hit-ratio adaptation, and the Zipfian
+repeated-query generator.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving.cache import (HEALTHY_EPOCH, LRUCache, ServingCache,
+                                 entry_nbytes, l1_key, l2_key,
+                                 normalize_query, route_sig)
+from repro.serving.latency import CostModel
+from repro.serving.online import (FULL, AdmissionController, arrival_times,
+                                  zipf_query_mix)
+from repro.serving.spec import (BackendSpec, CacheSpec, CascadeSpec,
+                                DeploySpec, FaultSpec, OnlineSpec,
+                                RoutingSpec, Stage2Spec, TrafficSpec)
+from repro.serving.system import build_system
+
+# ---------------------------------------------------------------------------
+# LRU mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_lru_eviction_order():
+    lru = LRUCache(max_entries=3)
+    for key in (b"a", b"b", b"c"):
+        lru.put(key, key, HEALTHY_EPOCH)
+    assert lru.keys_mru() == [b"c", b"b", b"a"]
+    # a hit refreshes recency, so "b" is now the LRU tail
+    assert lru.get(b"a", HEALTHY_EPOCH) == b"a"
+    lru.put(b"d", b"d", HEALTHY_EPOCH)
+    assert lru.keys_mru() == [b"d", b"a", b"c"]
+    assert lru.get(b"b", HEALTHY_EPOCH) is None
+    assert lru.stats["evicted_entries"] == 1
+    # updating an existing key is not an eviction
+    lru.put(b"d", b"D", HEALTHY_EPOCH)
+    assert len(lru) == 3 and lru.get(b"d", HEALTHY_EPOCH) == b"D"
+
+
+def test_lru_byte_cap():
+    lru = LRUCache(max_entries=10, max_bytes=64)
+    a = np.zeros(8)                       # 64 bytes: exactly the cap
+    lru.put(b"a", a, HEALTHY_EPOCH)
+    assert lru.nbytes == 64
+    lru.put(b"b", np.zeros(4), HEALTHY_EPOCH)   # 32 bytes: "a" must go
+    assert lru.get(b"a", HEALTHY_EPOCH) is None
+    assert lru.nbytes == 32 and lru.stats["evicted_bytes"] == 64
+    # an entry larger than the whole budget is refused outright
+    lru.put(b"huge", np.zeros(9), HEALTHY_EPOCH)
+    assert lru.get(b"huge", HEALTHY_EPOCH) is None and lru.nbytes == 32
+    # tuple values charge array payloads + 8 per non-None scalar
+    assert entry_nbytes((np.zeros(2), None, 5)) == 16 + 8
+
+
+def test_lru_epoch_mismatch_drops_entry():
+    lru = LRUCache(max_entries=4)
+    lru.put(b"k", 1, (True, True))
+    assert lru.get(b"k", (False, True)) is None     # wrong epoch: dropped
+    assert lru.stats["epoch_misses"] == 1 and len(lru) == 0
+    lru.put(b"k", 2, (False, True))
+    assert lru.get(b"k", (False, True)) == 2
+    # contains() is side-effect-free: no recency refresh, no drop
+    small = LRUCache(max_entries=2)
+    small.put(b"a", 1, HEALTHY_EPOCH)
+    small.put(b"b", 2, HEALTHY_EPOCH)
+    assert small.contains(b"a", HEALTHY_EPOCH)
+    assert not small.contains(b"a", (False,))
+    assert small.keys_mru() == [b"b", b"a"]        # "a" not refreshed
+    small.put(b"c", 3, HEALTHY_EPOCH)
+    assert small.get(b"a", HEALTHY_EPOCH) is None  # evicted as LRU
+
+
+def test_key_normalization():
+    t1 = np.array([5, 2, 9, 0])
+    w1 = np.array([1.0, 2.0, 3.0, 0.0])
+    t2 = np.array([2, 9, 0, 5])           # permuted + padding moved
+    w2 = np.array([2.0, 3.0, 0.0, 1.0])
+    assert normalize_query(t1, w1, 0.5) == normalize_query(t2, w2, 0.5)
+    assert normalize_query(t1, w1, 0.5) != normalize_query(t1, w1, 0.6)
+    w3 = np.array([1.0, 2.5, 3.0, 0.0])   # weight matters
+    assert normalize_query(t1, w1, None) != normalize_query(t1, w3, None)
+    # route signature and level prefixes keep key spaces disjoint
+    q = normalize_query(t1, w1, None)
+    rs = route_sig(True, 4096.0, 64.0)
+    assert route_sig(False, 4096.0, 64.0) != rs
+    assert route_sig(True, 4096.0, 32.0) != rs
+    assert l1_key(q, rs, 32, 5, 32) != l1_key(q, rs, 32, 5, 16)
+    assert l1_key(q, rs, 32, 5, 32) != l2_key(q, rs)
+
+
+def test_cache_spec_validation_and_round_trip():
+    assert not CacheSpec().active                   # default is inert
+    assert not CacheSpec(enabled=True, l1_entries=0, l2_entries=0).active
+    assert CacheSpec(enabled=True).active
+    spec = CascadeSpec(cache=CacheSpec(enabled=True, l1_entries=7,
+                                       l2_bytes=123))
+    assert CascadeSpec.from_json(spec.to_json()).cache == spec.cache
+    # pre-cache wire format (no "cache" node) still loads, with defaults
+    import json
+    d = json.loads(spec.to_json())
+    d.pop("cache")
+    assert CascadeSpec.from_dict(d).cache == CacheSpec()
+    with pytest.raises(ValueError, match="l1_entries"):
+        CacheSpec(l1_entries=-1).validate()
+    with pytest.raises(ValueError, match="hit_alpha"):
+        CacheSpec(hit_alpha=0.0).validate()
+    with pytest.raises(ValueError, match="inactive"):
+        ServingCache(CacheSpec())
+
+
+# ---------------------------------------------------------------------------
+# system integration (small_collection + fitted thresholds, jnp backend)
+# ---------------------------------------------------------------------------
+
+
+def _spec(cache=None, deploy=None, fault=None, **routing_kw):
+    routing = {"budget": 100.0, "rho_max": 1 << 14, "t_k": 150.0,
+               "t_time": 18.0, "adapt_every": 0}
+    routing.update(routing_kw)
+    return CascadeSpec(
+        routing=RoutingSpec(**routing),
+        stage2=Stage2Spec(enabled=True, k_serve=32, t_final=5),
+        backend=BackendSpec(backend="jnp"),
+        deploy=deploy if deploy is not None else DeploySpec(),
+        fault=fault if fault is not None else FaultSpec(),
+        cache=cache if cache is not None else CacheSpec(),
+        online=OnlineSpec(max_batch=8, batch_deadline_us=4.0),
+        name="cache_test",
+    )
+
+
+@pytest.fixture(scope="module")
+def fitted(small_collection):
+    corpus, index, ql = small_collection
+    spec = dataclasses.replace(
+        _spec(), routing=dataclasses.replace(_spec().routing, t_k=None,
+                                             t_time=None, calibrate=True))
+    system = build_system(spec, index, corpus=corpus)
+    system.fit(ql, None, seed=5)
+    return corpus, index, ql, system, (system._base_cfg.t_k,
+                                       system._base_cfg.t_time)
+
+
+def _system(fitted, cache=None, deploy=None, fault=None, **routing_kw):
+    corpus, index, ql, system, (tk, tt) = fitted
+    spec = _spec(cache=cache, deploy=deploy, fault=fault, t_k=tk, t_time=tt,
+                 **routing_kw)
+    return build_system(spec, index, corpus=corpus, models=system.models,
+                        ltr=system.ltr)
+
+
+def test_hit_and_miss_bit_parity(fitted):
+    """Cold cache-on serving == cache-off serving bit for bit (misses pay
+    the probe only in modeled time); a warm L1 hit is bit-identical too
+    and costs exactly predict + probe."""
+    corpus, index, ql, _, _ = fitted
+    off = _system(fitted)
+    on = _system(fitted, cache=CacheSpec(enabled=True))
+    r_off = off.serve(ql.terms, ql.mask, ql.topic)
+    cold = on.serve(ql.terms, ql.mask, ql.topic)
+    np.testing.assert_array_equal(cold.topk, r_off.topk)
+    np.testing.assert_array_equal(cold.final, r_off.final)
+    np.testing.assert_allclose(cold.latency,
+                               r_off.latency + on.cost.cache_hit_us)
+    assert on.cache.counters["l1_hits"] == 0
+    warm = on.serve(ql.terms, ql.mask, ql.topic)
+    np.testing.assert_array_equal(warm.topk, r_off.topk)
+    np.testing.assert_array_equal(warm.final, r_off.final)
+    assert on.cache.counters["l1_hits"] == len(ql.terms)
+    np.testing.assert_allclose(
+        warm.latency, on.cost.predict_us + on.cost.cache_hit_us)
+    # the probe cost is charged into the analytic worst case
+    assert on.worst_case_us() == pytest.approx(
+        off.worst_case_us() + on.cost.cache_hit_us)
+
+
+def test_l2_hit_skips_retrieval_and_promotes(fitted):
+    """A changed Stage-2 cap misses L1 (the cap is in the key) but hits
+    L2: same candidates, Stage-2 re-run, and the result is promoted so
+    the next identical serve is an L1 hit."""
+    corpus, index, ql, _, _ = fitted
+    on = _system(fitted, cache=CacheSpec(enabled=True))
+    q = len(ql.terms)
+    cold = on.serve(ql.terms, ql.mask, ql.topic)
+    cap = np.full(q, 16, np.int64)
+    r2 = on.serve(ql.terms, ql.mask, ql.topic, stage2_cap=cap)
+    assert on.cache.counters["l2_hits"] == q
+    assert on.cache.counters["l1_hits"] == 0
+    np.testing.assert_array_equal(r2.topk, cold.topk)
+    assert r2.final is not None
+    r3 = on.serve(ql.terms, ql.mask, ql.topic, stage2_cap=cap)
+    assert on.cache.counters["l1_hits"] == q       # promoted entries hit
+    np.testing.assert_array_equal(r3.final, r2.final)
+
+
+def test_cache_peek_is_side_effect_free(fitted):
+    corpus, index, ql, _, _ = fitted
+    on = _system(fitted, cache=CacheSpec(enabled=True))
+    assert not on.cache_peek(ql.terms, ql.mask, ql.topic).any()
+    on.serve(ql.terms, ql.mask, ql.topic)
+    before = dict(on.cache.counters)
+    mru = on.cache.l1.keys_mru()
+    assert on.cache_peek(ql.terms, ql.mask, ql.topic).all()
+    assert on.cache.counters == before             # no lookup counted
+    assert on.cache.l1.keys_mru() == mru           # no recency moves
+    # a cache-off system reports no guaranteed hits, ever
+    assert not _system(fitted).cache_peek(ql.terms, ql.mask, ql.topic).any()
+
+
+def test_inert_cache_spec_is_bit_identical(fitted):
+    """enabled=True with zero capacity must be indistinguishable from no
+    cache at all: same outputs, same modeled latency, zero RNG draws, and
+    a tuple-identical online event log."""
+    corpus, index, ql, _, _ = fitted
+    inert = CacheSpec(enabled=True, l1_entries=0, l2_entries=0)
+    sys_a, sys_b = _system(fitted), _system(fitted, cache=inert)
+    assert sys_b.cache is None
+    ra = sys_a.serve(ql.terms, ql.mask, ql.topic)
+    rb = sys_b.serve(ql.terms, ql.mask, ql.topic)
+    np.testing.assert_array_equal(ra.topk, rb.topk)
+    np.testing.assert_array_equal(ra.final, rb.final)
+    np.testing.assert_array_equal(ra.latency, rb.latency)
+    assert sys_a.faults.draws == 0 and sys_b.faults.draws == 0
+    assert sys_a.worst_case_us() == sys_b.worst_case_us()
+    traffic = TrafficSpec(arrival="bursty", qps=150.0, skew=0.8, seed=3)
+    oa = _system(fitted).serve_online(ql.terms, ql.mask, ql.topic,
+                                      traffic=traffic)
+    ob = _system(fitted, cache=inert).serve_online(ql.terms, ql.mask,
+                                                   ql.topic,
+                                                   traffic=traffic)
+    assert oa.event_log == ob.event_log
+
+
+def test_fault_epoch_invalidation(fitted):
+    """Entries filled in one fault epoch can never be served in another,
+    and partial-coverage results are never admitted at all."""
+    corpus, index, ql, _, _ = fitted
+    q = 16
+    terms, mask, topic = ql.terms[:q], ql.mask[:q], ql.topic[:q]
+    fault = FaultSpec(crashes=((0, -1, 0.0, 50.0),))  # partition 0 lost
+    on = _system(fitted, cache=CacheSpec(enabled=True),
+                 deploy=DeploySpec(n_shards=2, replicas=2), fault=fault,
+                 failover_timeout=15.0, max_retries=2)
+    r_h = on.serve(terms, mask, topic, now=60.0)      # healthy: fills
+    assert on.cache.l1.stats["fills"] == q
+    r_f = on.serve(terms, mask, topic, now=10.0)      # partition 0 down
+    assert np.all(r_f.coverage < 1.0)
+    assert on.cache.counters["l1_hits"] == 0          # no cross-epoch hit
+    assert on.cache.l1.stats["epoch_misses"] == q     # stale entries drop
+    assert on.cache.counters["skipped_partial"] == q  # and no re-fill
+    on.serve(terms, mask, topic, now=10.0)
+    assert on.cache.counters["l1_hits"] == 0          # nothing was cached
+    assert on.cache.counters["skipped_partial"] == 2 * q
+    r_h2 = on.serve(terms, mask, topic, now=70.0)     # healed: refills
+    assert on.cache.counters["l1_hits"] == 0
+    np.testing.assert_array_equal(r_h2.topk, r_h.topk)
+    r_h3 = on.serve(terms, mask, topic, now=80.0)
+    assert on.cache.counters["l1_hits"] == q          # same epoch: hits
+    np.testing.assert_array_equal(r_h3.topk, r_h.topk)
+
+
+def test_online_front_door_and_hit_ewma(fitted):
+    """Under a skewed online trace, repeats are answered at the front door
+    (no engine-batch slot), the admission EWMA learns the live hit ratio,
+    and the response-time guarantee still holds."""
+    corpus, index, ql, _, _ = fitted
+    traffic = TrafficSpec(arrival="poisson", qps=200.0, skew=1.2, seed=3)
+    on = _system(fitted, cache=CacheSpec(enabled=True))
+    r = on.serve_online(ql.terms, ql.mask, ql.topic, traffic=traffic)
+    s = r.stats
+    assert s["over_budget"] == 0 and s["shed"] == 0
+    c = s["cache"]
+    assert c["front_door_hits"] > 0 and c["hit_ewma"] > 0.0
+    front = np.flatnonzero(r.batch_of == -2)
+    assert len(front) == c["front_door_hits"]
+    assert np.all(r.wait[front] == 0.0)
+    assert np.all(r.mode[front] == FULL)
+    # a front-door answer costs prediction + probe only
+    np.testing.assert_allclose(
+        r.service[front], on.cost.predict_us + on.cost.cache_hit_us)
+    # replaying the same (TrafficSpec, system) pair is bit-identical
+    r2 = _system(fitted, cache=CacheSpec(enabled=True)).serve_online(
+        ql.terms, ql.mask, ql.topic, traffic=traffic)
+    assert r.event_log == r2.event_log
+
+
+def test_admission_adapts_to_hit_ratio_step_change():
+    """The arrival-time floor tracks the hit-ratio EWMA: a hot cache
+    admits arrivals a cold cache would shed, and a sudden hit-ratio
+    collapse restores the conservative floor."""
+    cost = CostModel.paper_scale()
+    cfg = OnlineSpec(max_batch=4, dispatch_us=1.0)
+    adm = AdmissionController(cfg, cost, stage1_bound=100.0, k_serve=None,
+                              response_budget=150.0, cache_bound=2.0,
+                              hit_alpha=0.2)
+    # cold start is pessimistic (h=0): a busy server sheds at arrival
+    assert not adm.at_arrival(arrival=0.0, server_free=60.0, queue_depth=0)
+    for _ in range(20):
+        adm.observe_hits(1, 1)                       # hit ratio step to ~1
+    assert adm.hit_ewma > 0.95
+    assert adm.at_arrival(arrival=0.0, server_free=60.0, queue_depth=0)
+    for _ in range(20):
+        adm.observe_hits(0, 4)                       # collapse to ~0
+    assert adm.hit_ewma < 0.05
+    assert not adm.at_arrival(arrival=0.0, server_free=60.0, queue_depth=0)
+    adm.observe_hits(0, 0)                           # empty batch: no-op
+    assert adm.hit_ewma < 0.05
+    # dispatch: a proven hit with slack only for the probe serves FULL
+    adm2 = AdmissionController(cfg, cost, stage1_bound=100.0, k_serve=64,
+                               response_budget=200.0, cache_bound=2.0)
+    waits = np.array([150.0, 150.0])
+    mode, cap, _ = adm2.at_dispatch(waits, hits=np.array([True, False]))
+    assert mode[0] == FULL and mode[1] != FULL
+    assert cap[0] == 64
+    assert adm2.stats["cache_admitted"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Zipfian repeated-query generator
+# ---------------------------------------------------------------------------
+
+
+def test_zipf_query_mix():
+    spec = TrafficSpec(qps=100.0, skew=1.2, seed=9)
+    mix = zipf_query_mix(spec, 2000, n_unique=100)
+    np.testing.assert_array_equal(mix,
+                                  zipf_query_mix(spec, 2000, n_unique=100))
+    assert mix.min() >= 0 and mix.max() < 100
+    counts = np.bincount(mix, minlength=100)
+    assert counts[0] > counts[99] and counts[0] > 2000 // 100
+    assert not np.array_equal(
+        mix, zipf_query_mix(dataclasses.replace(spec, seed=10), 2000,
+                            n_unique=100))
+    # skew=0 is the RNG-free historical replay: every query once, in order
+    flat = zipf_query_mix(TrafficSpec(qps=100.0, skew=0.0), 7, n_unique=3)
+    np.testing.assert_array_equal(flat, [0, 1, 2, 0, 1, 2, 0])
+    # the identity stream is seeded independently of the arrival process:
+    # toggling skew never moves a timestamp
+    base = TrafficSpec(arrival="poisson", qps=100.0, seed=4)
+    np.testing.assert_array_equal(
+        arrival_times(base, 500),
+        arrival_times(dataclasses.replace(base, skew=1.2), 500))
+    with pytest.raises(ValueError, match="skew"):
+        TrafficSpec(qps=10.0, skew=-0.5).validate()
+    with pytest.raises(ValueError, match="n_unique"):
+        zipf_query_mix(spec, 10, n_unique=0)
