@@ -1,0 +1,263 @@
+"""Dense retrieval + hybrid fusion certification: the second Stage-1
+modality must be exact, fast because it is batched, and free when disabled.
+
+Four studies over one fitted cascade (frozen thresholds, jnp backend):
+
+* **kernel/engine parity** — the tiled streaming kernel (interpret mode)
+  must agree **bit for bit** with the jnp reference and the numpy
+  brute-force oracle on ragged shapes and exact ties, and the sharded
+  ``DenseEngine.serve`` (single and multi-shard through
+  ``merge_shard_topk``) must reproduce the unsharded oracle exactly —
+  grid-quantized embeddings make this determinism, not luck.
+* **batched speedup** — one Q=64 batched kernel call vs 64 single-query
+  calls on the same matrix.  Gate: >= 3x.  This is the reason the dense
+  modality is a *batched* engine and not a per-query scorer.
+* **route-mix sweep** — force the Stage-0 dispatch to all-lexical,
+  all-dense, and mixed (via ``t_dense`` extremes), plus a theta-band
+  configuration that exercises Stage-2 skips and lexical fallbacks.
+  Gate: 0 budget violations and max latency <= ``worst_case_us()`` in
+  every mix — the hard guarantee is per-route, not per-average.
+* **inert mode** — ``DenseSpec(enabled=False)`` (even with every other
+  dense/fusion knob set) must be provably absent: offline serving
+  bit-identical (top-k, final, modeled latency) and the online event log
+  tuple-identical to the dense-free spec.
+
+Emits ``results/BENCH_dense.json``; the CLI exits non-zero if any gate
+fails.  CI runs it as a smoke.  Run standalone with
+``PYTHONPATH=src:. python benchmarks/bench_dense.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.bench_online import _build
+from benchmarks.common import timed, write_bench_artifact
+
+
+def _parity(corpus, ql, seed: int) -> dict:
+    """Kernel backends and the sharded engine vs the numpy oracle."""
+    import jax.numpy as jnp
+
+    from repro.dense import DenseEngine, build_embeddings
+    from repro.index.postings import shard_ranges
+    from repro.kernels.dense_topk import dense_topk, dense_topk_oracle
+    from repro.serving.spec import DenseSpec
+
+    ds = DenseSpec(enabled=True, source="synthetic", seed=seed)
+    doc_emb, term_table = build_embeddings(ds, corpus=None,
+                                           n_docs=corpus.n_docs,
+                                           vocab=corpus.vocab)
+    eng1 = DenseEngine(doc_emb, term_table,
+                       shard_ranges(corpus.n_docs, 1), backend="jnp")
+    eng3 = DenseEngine(doc_emb, term_table,
+                       shard_ranges(corpus.n_docs, 3), backend="jnp")
+    q_emb = eng1.embed(ql.terms, ql.mask)
+    out = {}
+
+    # backends on a ragged slice (non-multiple docs + embed dim), two k's
+    q_sub, d_sub = q_emb[:32], jnp.asarray(doc_emb[:1000])
+    for k in (1, 33, 128):
+        o_sc, o_ids = dense_topk_oracle(np.asarray(q_sub),
+                                        doc_emb[:1000], k)
+        for backend in ("jnp", "interpret"):
+            sc, ids = dense_topk(q_sub, d_sub, k, backend=backend)
+            out[f"kernel_{backend}_k{k}"] = bool(
+                np.array_equal(np.asarray(sc), o_sc)
+                and np.array_equal(np.asarray(ids, np.int64), o_ids))
+
+    # ties: duplicated docs must resolve to the lower doc id everywhere
+    dup = np.concatenate([doc_emb[:256]] * 2)
+    t_sc, t_ids = dense_topk(q_emb[:16], jnp.asarray(dup), 64)
+    o_sc, o_ids = dense_topk_oracle(q_emb[:16], dup, 64)
+    out["kernel_tie_policy"] = bool(
+        np.array_equal(np.asarray(t_sc), o_sc)
+        and np.array_equal(np.asarray(t_ids, np.int64), o_ids))
+
+    # sharded engine == unsharded oracle, single and multi-shard
+    k = 128
+    o_ids, o_sc = eng1.oracle(q_emb, k)
+    for name, eng in (("1shard", eng1), ("3shard", eng3)):
+        ids, sc = eng.serve(q_emb, k)
+        out[f"engine_{name}"] = bool(np.array_equal(ids, o_ids)
+                                     and np.array_equal(sc, o_sc))
+    return out
+
+
+def _speedup(corpus, ql, seed: int, q_batch: int = 64,
+             reps: int = 5) -> dict:
+    """One batched Q=64 call vs 64 single-query calls (jnp, jit'd both)."""
+    import jax.numpy as jnp
+
+    from repro.dense import build_embeddings
+    from repro.kernels.dense_topk import dense_topk
+    from repro.serving.spec import DenseSpec
+
+    ds = DenseSpec(enabled=True, source="synthetic", seed=seed)
+    doc_emb, term_table = build_embeddings(ds, corpus=None,
+                                           n_docs=corpus.n_docs,
+                                           vocab=corpus.vocab)
+    from repro.dense import embed_queries
+    q_emb = jnp.asarray(embed_queries(term_table, ql.terms[:q_batch],
+                                      ql.mask[:q_batch]))
+    docs = jnp.asarray(doc_emb)
+    k = 128
+
+    t_batch = timed(lambda: dense_topk(q_emb, docs, k), reps, warmup=2)
+
+    def loop():
+        return [dense_topk(q_emb[i:i + 1], docs, k)
+                for i in range(q_batch)]
+
+    t_loop = timed(loop, reps, warmup=1)
+    speedup = float(np.median(t_loop) / max(np.median(t_batch), 1e-12))
+    return {"q_batch": q_batch, "k": k,
+            "batched_s": float(np.median(t_batch)),
+            "loop_s": float(np.median(t_loop)),
+            "speedup": speedup}
+
+
+def run_dense(q_batch: int = 384, n_docs: int = 4096, seed: int = 7,
+              max_batch: int = 16, backend: str = "jnp") -> dict:
+    from repro.serving.spec import DenseSpec, FusionSpec, TrafficSpec
+    from repro.serving.system import build_system
+
+    corpus, base, ql, fit_sys = _build(q_batch, n_docs, seed, backend,
+                                       max_batch)
+    index, models, ltr = fit_sys.index, fit_sys.models, fit_sys.ltr
+    cost = fit_sys.cost
+
+    def system(dense: DenseSpec | None = None,
+               fusion: FusionSpec | None = None):
+        spec = base
+        if dense is not None:
+            spec = dataclasses.replace(spec, dense=dense)
+        if fusion is not None:
+            spec = dataclasses.replace(spec, fusion=fusion)
+        return build_system(spec, index, corpus=corpus, models=models,
+                            ltr=ltr, cost=cost)
+
+    parity = _parity(corpus, ql, seed)
+    speed = _speedup(corpus, ql, seed)
+
+    # ---- route-mix sweep: every dispatch the router can emit ----
+    # t_dense moves the lexical/dense decision boundary; the calibrated
+    # t_time (t_dense=0) lands in the middle of the pred_t distribution
+    mixes = {
+        "mixed": DenseSpec(enabled=True, source="auto"),
+        "all_lexical": DenseSpec(enabled=True, source="auto",
+                                 t_dense=1e9),
+        "all_dense": DenseSpec(enabled=True, source="auto",
+                               t_dense=1e-6),
+        # thetas chosen inside the observed top-1 score range so skips
+        # AND fallbacks both fire on this trace
+        "theta_bands": DenseSpec(enabled=True, source="auto",
+                                 theta_high=0.45, theta_low=0.30),
+    }
+    sweep = []
+    for name, ds in mixes.items():
+        for method in (("rrf",) if name != "mixed" else ("rrf", "weighted")):
+            sy = system(ds, FusionSpec(method=method))
+            res = sy.serve(ql.terms, ql.mask, ql.topic)
+            s = res.stats
+            bound = float(sy.worst_case_us())
+            sweep.append({
+                "mix": name, "fusion": method,
+                "dense": s["dense"], "over_budget": int(s["over_budget"]),
+                "max_latency": float(np.max(res.latency)),
+                "worst_case_bound": bound,
+                "within_bound": bool(np.max(res.latency) <= bound + 1e-9),
+            })
+
+    # ---- inert mode: enabled=False with every other knob set ----
+    off_spec = DenseSpec(enabled=False, embed_dim=64, tile_d=256,
+                         source="synthetic", theta_high=0.45,
+                         theta_low=0.30)
+    sys_a, sys_b = system(), system(off_spec, FusionSpec(method="weighted"))
+    ra = sys_a.serve(ql.terms, ql.mask, ql.topic)
+    rb = sys_b.serve(ql.terms, ql.mask, ql.topic)
+    traffic = TrafficSpec(arrival="bursty", qps=0.8 * 500.0, skew=0.8,
+                          seed=seed + 1)
+    oa = system().serve_online(ql.terms, ql.mask, ql.topic, traffic=traffic)
+    ob = system(off_spec).serve_online(ql.terms, ql.mask, ql.topic,
+                                       traffic=traffic)
+    inert = {
+        "engine_absent": bool(sys_b.dense is None),
+        "offline_topk_identical": bool(np.array_equal(ra.topk, rb.topk)),
+        "offline_final_identical": bool(np.array_equal(ra.final, rb.final)),
+        "offline_latency_identical": bool(np.array_equal(ra.latency,
+                                                         rb.latency)),
+        "online_event_log_identical": bool(oa.event_log == ob.event_log),
+    }
+
+    mixed = [r for r in sweep if r["mix"] == "mixed"][0]["dense"]
+    theta = [r for r in sweep if r["mix"] == "theta_bands"][0]["dense"]
+    payload = {
+        "config": {"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
+                   "backend": backend, "max_batch": max_batch},
+        "parity": parity,
+        "speedup": speed,
+        "sweep": sweep,
+        "inert": inert,
+        "gates": {},
+    }
+    payload["gates"] = {
+        "kernel_engine_parity": all(parity.values()),
+        "batched_speedup": speed["speedup"] >= 3.0,
+        "route_guarantee": all(r["over_budget"] == 0 and r["within_bound"]
+                               for r in sweep),
+        "routes_nonvacuous": (mixed["lexical"] > 0 and mixed["fused"] > 0
+                              and theta["theta_skips"] > 0
+                              and theta["fallbacks"] > 0),
+        "inert_bit_identical": all(inert.values()),
+    }
+    payload["artifact"] = write_bench_artifact("dense", payload)
+    return payload
+
+
+def render_dense(res: dict) -> str:
+    p, sp, i = res["parity"], res["speedup"], res["inert"]
+    bad = [k for k, v in p.items() if not v]
+    lines = [f"parity: {'all bitwise' if not bad else 'DIVERGED: ' + str(bad)}",
+             f"batched Q={sp['q_batch']}: {sp['batched_s']*1e3:.2f} ms vs "
+             f"loop {sp['loop_s']*1e3:.2f} ms -> {sp['speedup']:.1f}x",
+             "mix,fusion,lex,dense,fused,skips,fallbacks,over,max_ms,bound"]
+    for r in res["sweep"]:
+        d = r["dense"]
+        lines.append(f"{r['mix']},{r['fusion']},{d['lexical']},"
+                     f"{d['dense_only']},{d['fused']},{d['theta_skips']},"
+                     f"{d['fallbacks']},{r['over_budget']},"
+                     f"{r['max_latency']:.1f},{r['worst_case_bound']:.1f}")
+    lines.append(f"inert: {'identical' if all(i.values()) else 'DIVERGED'} "
+                 f"(offline+online vs dense-free spec)")
+    lines.append("gates: " + " ".join(f"{k}={v}"
+                                      for k, v in res["gates"].items()))
+    return "\n".join(lines)
+
+
+def main() -> int:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--q-batch", type=int, default=384)
+    ap.add_argument("--n-docs", type=int, default=4096)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--backend", default="jnp",
+                    help="jnp gives the bit-identical parity checks")
+    args = ap.parse_args()
+    res = run_dense(q_batch=args.q_batch, n_docs=args.n_docs,
+                    seed=args.seed, max_batch=args.max_batch,
+                    backend=args.backend)
+    print(render_dense(res))
+    print(f"artifact: {res['artifact']}")
+    failed = [k for k, v in res["gates"].items() if not v]
+    if failed:
+        print(f"DENSE CERTIFICATION FAILED: {', '.join(failed)}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

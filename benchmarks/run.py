@@ -37,11 +37,11 @@ def main() -> None:
     if args.quick:
         args.queries = 2000
 
-    from benchmarks import (bench_cache, bench_engines, bench_faults,
-                            bench_heldout, bench_hybrid, bench_kernels,
-                            bench_online, bench_predict_k, bench_predict_rho,
-                            bench_predict_time, bench_system, bench_tail,
-                            bench_tail_overlap)
+    from benchmarks import (bench_cache, bench_dense, bench_engines,
+                            bench_faults, bench_heldout, bench_hybrid,
+                            bench_kernels, bench_online, bench_predict_k,
+                            bench_predict_rho, bench_predict_time,
+                            bench_system, bench_tail, bench_tail_overlap)
     from benchmarks.common import load_experiment
 
     t0 = time.time()
@@ -114,6 +114,29 @@ def main() -> None:
     if not ch["gates"]["hits_nonvacuous"]:
         raise RuntimeError("cache benchmark lost its teeth: the hot-skew "
                            "trace produced almost no L1 hits")
+
+    _section("Dense retrieval + hybrid fusion (parity, speedup, routes)")
+    dn = bench_dense.run_dense()
+    print(bench_dense.render_dense(dn))
+    print(f"artifact: {dn['artifact']}")
+    if not dn["gates"]["kernel_engine_parity"]:
+        raise RuntimeError("dense parity regressed: a kernel backend or "
+                           "the sharded engine diverged from the numpy "
+                           "oracle")
+    if not dn["gates"]["batched_speedup"]:
+        raise RuntimeError("dense batching claim regressed: the Q=64 "
+                           "batched kernel call is below 3x the "
+                           "per-query loop")
+    if not dn["gates"]["route_guarantee"]:
+        raise RuntimeError("dense route guarantee regressed: a route mix "
+                           "produced a budget violation or exceeded the "
+                           "worst-case bound")
+    if not dn["gates"]["routes_nonvacuous"]:
+        raise RuntimeError("dense benchmark lost its teeth: the mixed "
+                           "dispatch or the theta bands carried no traffic")
+    if not dn["gates"]["inert_bit_identical"]:
+        raise RuntimeError("dense machinery is not inert: a disabled "
+                           "DenseSpec perturbed dense-free serving")
 
     _section("Fault tolerance (crashes, stragglers, partition loss)")
     fl = bench_faults.run_faults()

@@ -33,6 +33,14 @@ cached         The paper point with the two-level result cache in front
                skewed traffic.  Threshold adaptation is frozen
                (``adapt_every=0``) so cache keys — which embed the route
                signature — stay stable across the trace.
+hybrid_fusion  The paper point with the dense Stage-1 modality enabled:
+               Stage-0 dispatches each query lexical / dense / both+fused
+               from its predicted traversal time, both-routed lists merge
+               by RRF inside a reserved ``fusion_us`` slice of the stage-1
+               budget, and the confidence bands (θ_high skips Stage-2
+               rank-safely, θ_low re-issues a ρ_late-capped lexical
+               fallback) stay inside the 200 ms bound.  Adaptation frozen
+               like ``cached``: the modality is part of the route.
 =============  ==========================================================
 
 Every preset trains with ``RoutingSpec.calibrate=True``, so the routing
@@ -57,8 +65,9 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.serving.spec import (CacheSpec, CascadeSpec, DeploySpec,
-                                OnlineSpec, RoutingSpec, Stage2Spec)
+from repro.serving.spec import (CacheSpec, CascadeSpec, DenseSpec,
+                                DeploySpec, FusionSpec, OnlineSpec,
+                                RoutingSpec, Stage2Spec)
 
 
 def _paper_200ms() -> CascadeSpec:
@@ -149,6 +158,27 @@ def _cached() -> CascadeSpec:
     )
 
 
+def _hybrid_fusion() -> CascadeSpec:
+    # theta bands sit inside the observed top-1 dense score range of both
+    # embedding sources (~0.23–0.58 on the experiment collection), so all
+    # five routes — lexical, dense, fused, theta-skip, theta-fallback —
+    # actually carry traffic.  adapt_every=0 for the same reason as
+    # `cached`: the resolved modality is part of the route signature.
+    return CascadeSpec(
+        name="hybrid_fusion",
+        routing=RoutingSpec(algorithm=2, budget=200.0, rho_max=1 << 18,
+                            hedge_deadline=0.5, late_rho=4096,
+                            adapt_every=0, calibrate=True),
+        stage2=Stage2Spec(enabled=True, k_serve=128, t_final=10),
+        deploy=DeploySpec(n_shards=1, replicas=2),
+        online=OnlineSpec(max_batch=32, batch_deadline_us=5.0,
+                          admission=True, degrade=True),
+        dense=DenseSpec(enabled=True, source="auto", fuse_band=0.25,
+                        theta_high=0.45, theta_low=0.25),
+        fusion=FusionSpec(method="rrf"),
+    )
+
+
 PRESETS = {
     "paper_200ms": _paper_200ms,
     "throughput": _throughput,
@@ -156,6 +186,7 @@ PRESETS = {
     "stage1_only": _stage1_only,
     "fault_tolerant": _fault_tolerant,
     "cached": _cached,
+    "hybrid_fusion": _hybrid_fusion,
 }
 
 

@@ -1,0 +1,11 @@
+from repro.dense.embeddings import (GRID, build_embeddings, embed_queries,
+                                    quantize, synthetic_embeddings,
+                                    two_tower_embeddings)
+from repro.dense.engine import DenseEngine
+from repro.dense.fusion import (M_BOTH, M_DENSE, M_LEX, fuse, rrf_fuse,
+                                weighted_fuse)
+
+__all__ = ["GRID", "build_embeddings", "embed_queries", "quantize",
+           "synthetic_embeddings", "two_tower_embeddings", "DenseEngine",
+           "M_LEX", "M_DENSE", "M_BOTH", "fuse", "rrf_fuse",
+           "weighted_fuse"]

@@ -1,0 +1,129 @@
+"""Embedding sources for the dense Stage-1 modality.
+
+Two sources behind one contract:
+
+* ``two_tower`` — the idle ``configs/two_tower_retrieval.REDUCED`` tower.
+  Doc embeddings come from the item tower over per-doc feature ids
+  (dominant topic + doc identity, both mod the table size), a per-term
+  embedding table from the user tower, so queries and docs that share
+  topical structure score high — real signal, not noise.
+* ``synthetic`` — seeded Gaussian doc/term tables needing nothing but the
+  collection shape (pre-built indexes without a corpus, CI smokes).
+
+Exact-parity quantization
+-------------------------
+Every embedding this module emits is snapped to the grid of integer
+multiples of ``1/GRID`` (a power of two) with magnitude <= 2.  With
+``GRID = 64`` and embed dims <= a few hundred, every pairwise product is an
+integer multiple of ``2^-12`` and every partial sum of a query·doc dot
+product stays well inside float32's 24-bit mantissa — so the dot product
+is *exactly* representable and independent of accumulation order.  That is
+what makes the numpy brute-force oracle, the jnp reference, the tiled
+Pallas kernel, and the multi-shard merge agree bit for bit (certified by
+``benchmarks/bench_dense.py``), and what keeps dense scores deterministic
+enough to live in cache keys and replay logs.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+GRID = 64          # embeddings are integer multiples of 1/GRID (2^-6)
+_CLIP = 2.0        # |value| <= 2 keeps dot products far from f32 exactness
+                   # limits for any realistic embed dim
+
+
+def quantize(x: np.ndarray) -> np.ndarray:
+    """Snap to the exact float32 grid: round(x·GRID)/GRID, clipped."""
+    g = np.rint(np.asarray(x, np.float64) * GRID)
+    return (np.clip(g, -_CLIP * GRID, _CLIP * GRID) / GRID).astype(np.float32)
+
+
+def embed_queries(term_table: np.ndarray, terms: np.ndarray,
+                  mask: np.ndarray) -> np.ndarray:
+    """(Q, d) quantized query embeddings: mean of active term vectors.
+
+    Row-independent and deterministic, so sub-batch serving (cache-miss
+    splits, online micro-batches) embeds bit-identically to the full batch.
+    The mean is re-quantized, putting query vectors back on the exact grid
+    the parity argument needs.
+    """
+    terms = np.asarray(terms)
+    w = (np.asarray(mask) > 0).astype(np.float32)
+    v = term_table[terms] * w[:, :, None]                  # (Q, L, d)
+    cnt = np.maximum(w.sum(axis=1, keepdims=True), 1.0)
+    return quantize(v.sum(axis=1) / cnt)
+
+
+def synthetic_embeddings(n_docs: int, vocab: int, d: int = 32,
+                         seed: int = 0):
+    """Seeded Gaussian (doc_emb (N, d), term_table (V, d)), quantized."""
+    rng = np.random.RandomState(seed)
+    scale = 1.0 / np.sqrt(d)
+    return (quantize(rng.randn(n_docs, d) * scale),
+            quantize(rng.randn(vocab, d) * scale))
+
+
+def two_tower_embeddings(corpus, seed: int = 0, batch: int = 4096):
+    """(doc_emb (N, d), term_table (V, d)) from the REDUCED two-tower model.
+
+    Docs go through the item tower with (dominant topic, doc id) feature
+    ids; vocabulary terms go through the user tower one-term bags.  Both
+    outputs are L2-normalized by the tower and then grid-quantized.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.two_tower_retrieval import REDUCED
+    from repro.models import recsys
+
+    c = REDUCED
+    params, _ = recsys.init(c, jax.random.PRNGKey(seed))
+    n = corpus.params.n_docs
+    vocab = corpus.params.vocab
+
+    topic = np.argmax(np.asarray(corpus.doc_topics), axis=1)
+    doc_ids = np.stack([topic % c.n_items,
+                        np.arange(n, dtype=np.int64) % c.n_items], axis=1)
+    doc_mask = np.ones_like(doc_ids, np.float32)
+    chunks = []
+    for lo in range(0, n, batch):
+        hi = min(lo + batch, n)
+        chunks.append(np.asarray(recsys.tower_embed(
+            params, c, "item_table", "item_mlp",
+            jnp.asarray(doc_ids[lo:hi]), jnp.asarray(doc_mask[lo:hi]))))
+    doc_emb = quantize(np.concatenate(chunks))
+
+    term_ids = (np.arange(vocab, dtype=np.int64) % c.n_users)[:, None]
+    term_mask = np.ones_like(term_ids, np.float32)
+    chunks = []
+    for lo in range(0, vocab, batch):
+        hi = min(lo + batch, vocab)
+        chunks.append(np.asarray(recsys.tower_embed(
+            params, c, "user_table", "user_mlp",
+            jnp.asarray(term_ids[lo:hi]), jnp.asarray(term_mask[lo:hi]))))
+    term_table = quantize(np.concatenate(chunks))
+    return doc_emb, term_table
+
+
+def build_embeddings(dense_spec, corpus=None, *, n_docs: int,
+                     vocab: int):
+    """Resolve a DenseSpec's embedding source to (doc_emb, term_table).
+
+    ``source="auto"`` uses the two-tower path when a corpus is available
+    and falls back to the synthetic tables otherwise (pre-built indexes
+    ship no topic mixtures); an explicit ``"two_tower"`` without a corpus
+    is an error rather than a silent downgrade.
+    """
+    source = dense_spec.source
+    if source == "auto":
+        source = "two_tower" if corpus is not None else "synthetic"
+    if source == "two_tower":
+        if corpus is None:
+            raise ValueError("DenseSpec.source='two_tower' needs the corpus "
+                             "(doc topic mixtures feed the item tower); "
+                             "use source='synthetic' or 'auto' with a "
+                             "pre-built index")
+        return two_tower_embeddings(corpus, seed=dense_spec.seed)
+    return synthetic_embeddings(n_docs, vocab, d=dense_spec.embed_dim,
+                                seed=dense_spec.seed)

@@ -1,0 +1,104 @@
+"""The dense Stage-1 engine: sharded query×doc similarity top-k.
+
+A first-class second modality next to the lexical DAAT/SAAT engines, built
+to slot into the existing deployment shape unchanged:
+
+* the embedding matrix is partitioned by the **same contiguous doc ranges**
+  as the inverted index (``shard_ranges``), per-shard results carry global
+  doc ids, and the multi-shard merge is the existing ``merge_shard_topk``
+  — ascending doc-range order + stable ``top_k`` preserve the lower-global-
+  doc-id tie-break, and ``drop`` masks (fault loss / partial coverage)
+  degrade a dense query exactly like a lexical one;
+* per-shard cost is **shape-static** — every query scores every doc tile,
+  so ``CostModel.dense_time(n_tiles)`` is exact from the spec alone, which
+  is what makes the dense route's contribution to ``worst_case_us``
+  analytic (no df tables, no per-query work counters).
+
+``serve`` is bit-identical to the numpy brute-force oracle on every
+backend thanks to grid-quantized embeddings (``repro.dense.embeddings``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dense.embeddings import embed_queries
+from repro.isn.backend import merge_shard_topk
+from repro.kernels.dense_topk.ops import dense_topk
+from repro.kernels.dense_topk.ref import dense_topk_oracle
+
+SCORE_FILL = float(np.finfo(np.float32).min)
+
+
+class DenseEngine:
+    """Doc-range-sharded dense retrieval over a quantized embedding matrix.
+
+    Args:
+      doc_emb: (n_docs, d) float32 grid-quantized doc embeddings.
+      term_table: (vocab, d) float32 grid-quantized per-term vectors
+        (queries embed as the quantized mean of their active terms).
+      ranges: the deployment's ``shard_ranges`` output — the SAME doc-range
+        partitioning the lexical shards use.
+      tile_d: docs per kernel grid tile (lane-width multiple).
+      backend: ``pallas | interpret | jnp`` kernel switch.
+    """
+
+    def __init__(self, doc_emb: np.ndarray, term_table: np.ndarray,
+                 ranges, *, tile_d: int = 512, backend: str | None = None):
+        self.doc_emb = np.asarray(doc_emb, np.float32)
+        self.term_table = np.asarray(term_table, np.float32)
+        self.tile_d = int(tile_d)
+        self.backend = backend if backend is not None else "jnp"
+        self.d = self.doc_emb.shape[1]
+        self.doc_lo = [lo for lo, _ in ranges]
+        self.shard_emb = [jnp.asarray(self.doc_emb[lo:hi])
+                          for lo, hi in ranges]
+        self.shard_docs = [hi - lo for lo, hi in ranges]
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shard_emb)
+
+    def n_tiles(self, s: int) -> int:
+        """Kernel grid tiles of shard ``s`` — the shape-static work unit."""
+        return -(-self.shard_docs[s] // self.tile_d)
+
+    def max_tiles(self) -> int:
+        """Largest per-shard tile count: the scatter-gather bound's term."""
+        return max(self.n_tiles(s) for s in range(self.n_shards))
+
+    def embed(self, terms: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """(Q, d) quantized query embeddings (row-independent)."""
+        return embed_queries(self.term_table, terms, mask)
+
+    def serve(self, q_emb: np.ndarray, k: int, drop=None):
+        """Scatter-gather dense top-k: (ids, scores), each (Q, k).
+
+        Ids are global; ``drop`` ((n_shards, Q) bool) excludes lost /
+        never-requested shard responses exactly like the lexical merge
+        (surviving-shard merge, ``-1`` padding).  Requires
+        ``k <= min(shard docs)`` — the deployment invariant ``SearchSystem``
+        already enforces for the lexical grid.
+        """
+        sc_list, id_list = [], []
+        for s in range(self.n_shards):
+            sc, ids = dense_topk(jnp.asarray(q_emb), self.shard_emb[s], k,
+                                 tile_d=self.tile_d, backend=self.backend)
+            sc_list.append(sc)
+            id_list.append(ids + self.doc_lo[s])
+        if self.n_shards == 1:
+            ids = np.asarray(id_list[0]).astype(np.int64)
+            sc = np.asarray(sc_list[0])
+            if drop is not None and drop[0].any():
+                ids[drop[0]] = -1
+                sc[drop[0]] = SCORE_FILL
+            return ids, sc
+        ids, sc = merge_shard_topk(sc_list, id_list, k, drop=drop)
+        return np.asarray(ids).astype(np.int64), np.asarray(sc)
+
+    def oracle(self, q_emb: np.ndarray, k: int):
+        """Brute-force ground truth over the unsharded matrix: (ids,
+        scores) — what ``serve`` must match bit for bit."""
+        sc, ids = dense_topk_oracle(q_emb, self.doc_emb, k)
+        return ids, sc

@@ -1,0 +1,4 @@
+from repro.kernels.dense_topk.ops import dense_topk
+from repro.kernels.dense_topk.ref import dense_topk_oracle, dense_topk_ref
+
+__all__ = ["dense_topk", "dense_topk_oracle", "dense_topk_ref"]

@@ -1,0 +1,44 @@
+"""Brute-force oracles for the dense similarity top-k kernel.
+
+Two references with one contract: exact scores, ties toward the lower doc
+id.  ``dense_topk_oracle`` is the host-side numpy ground truth (full score
+matrix + stable argsort); ``dense_topk_ref`` is the jnp backend the serving
+path uses off-TPU (``lax.top_k`` keeps the earliest position on ties, which
+over a doc-ordered score row is the same tie-break).
+
+Bitwise agreement between the two — and with the tiled Pallas kernel — is
+not a float accident: the dense index stores embeddings snapped to an exact
+power-of-two grid (``repro.dense.embeddings.quantize``), so every product
+and every partial sum of a query·doc dot product is exactly representable
+in float32 and the result is independent of accumulation order.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_topk_oracle(q_emb: np.ndarray, doc_emb: np.ndarray, k: int):
+    """numpy brute force: (scores, ids), each (Q, k), ties -> lower doc id.
+
+    ``-scores`` under a stable argsort keeps ascending index order inside
+    every tie group, i.e. the lower doc id wins — the cascade-wide tie
+    policy (``merge_shard_topk`` docstring).
+    """
+    q = np.asarray(q_emb, np.float32)
+    d = np.asarray(doc_emb, np.float32)
+    scores = q @ d.T                                        # (Q, N)
+    order = np.argsort(-scores, axis=1, kind="stable")[:, :k]
+    return (np.take_along_axis(scores, order, axis=1).astype(np.float32),
+            order.astype(np.int64))
+
+
+def dense_topk_ref(q_emb: jnp.ndarray, doc_emb: jnp.ndarray, k: int):
+    """Pure-jnp reference: full (Q, N) score matrix + ``lax.top_k``."""
+    scores = jnp.dot(jnp.asarray(q_emb, jnp.float32),
+                     jnp.asarray(doc_emb, jnp.float32).T,
+                     preferred_element_type=jnp.float32)
+    sc, ids = jax.lax.top_k(scores, k)
+    return sc, ids

@@ -178,6 +178,21 @@ def dryrun(spec: CascadeSpec, corpus: Corpus, ql: QueryLog | None = None,
         cfg.budget, cost,
         spec.stage2.k_serve if spec.stage2.enabled else None)
     reserve2, budget1 = reserve["stage2"], reserve["stage1"]
+    if spec.dense.enabled:
+        # mirror SearchSystem._attribute_budget: the fusion merge is carved
+        # out of the stage-1 share so both-routed queries stay in bound
+        budget1 = max(budget1 - cost.fusion_us, 0.0)
+
+    # dense Stage-1 is shape-static: every query scores every doc tile of
+    # its shard, so the per-shard time is exact from the spec alone —
+    # ceil(shard_docs / tile_d) tiles through CostModel.dense_time
+    dense_tiles = 0
+    t_dense_r = None
+    if spec.dense.enabled:
+        shard_docs = -(-corpus.n_docs // ns)       # largest contiguous range
+        dense_tiles = -(-shard_docs // spec.dense.tile_d)
+        t_dense_r = cost.gather_time(np.broadcast_to(
+            cost.dense_time(dense_tiles), (ns, q)))
 
     def shardwise(time_fn, work, *extra):
         per = [time_fn(work / ns, *(e / ns for e in extra))
@@ -198,7 +213,33 @@ def dryrun(spec: CascadeSpec, corpus: Corpus, ql: QueryLog | None = None,
                 late_rho=cfg.rho_max))):
         sched = StageZeroScheduler(mode_cfg, cost)
         routed = sched.route(pred_k, pred_rho, pred_t)
+        modality = None
+        if spec.dense.enabled:
+            # the same dispatch rule SearchSystem._modality applies, on the
+            # same predicted traversal time the router saw
+            ds = spec.dense
+            td = ds.t_dense if ds.t_dense > 0 else sched.cfg.t_time
+            modality = np.full(q, 2, np.int64)
+            modality[pred_t <= td * (1.0 - ds.fuse_band)] = 0
+            modality[pred_t > td * (1.0 + ds.fuse_band)] = 1
+            lex = modality != 1
+
+            def keep(rows, stat):
+                kept = rows[lex[rows]]
+                sched.stats[stat] -= int(len(rows) - len(kept))
+                return kept
+
+            routed = dataclasses.replace(
+                routed, jass_rows=keep(routed.jass_rows, "jass"),
+                bmw_rows=keep(routed.bmw_rows, "bmw"),
+                hedged_rows=keep(routed.hedged_rows, "hedged"))
         lat01 = sched.resolve_times(routed, t_bmw, jass_fn)
+        if modality is not None:
+            pd = cost.predict_us
+            lat01 = np.where(modality == 1, pd + t_dense_r, lat01)
+            lat01 = np.where(modality == 2,
+                             pd + np.maximum(lat01 - pd, t_dense_r)
+                             + cost.fusion_us, lat01)
         lat = lat01
         trimmed = skipped = 0
         if spec.stage2.enabled:
@@ -217,16 +258,34 @@ def dryrun(spec: CascadeSpec, corpus: Corpus, ql: QueryLog | None = None,
                                 ("jass", "bmw", "hedged", "late_hedged",
                                  "late_hedged_jass")},
                      "stage2_trimmed": trimmed, "stage2_skipped": skipped}
+        if modality is not None:
+            out[mode]["dense"] = {
+                "lexical": int(np.sum(modality == 0)),
+                "dense_only": int(np.sum(modality == 1)),
+                "fused": int(np.sum(modality == 2))}
 
     n_postings = int(corpus.n_postings)
     enforced_cfg = dataclasses.replace(cfg, budget=budget1)
+    bound = enforced_cfg.worst_case_us(cost, ns)
+    if spec.dense.enabled:
+        # the same dense/both/fallback route bounds SearchSystem.
+        # worst_case_us charges — analytic, from the tile count alone
+        pd = cost.predict_us
+        gather = cost.gather_per_shard_us * (ns - 1)
+        td_b = (float(cost.dense_time(dense_tiles)) + gather
+                + enforced_cfg.retry_us())
+        fb = (float(cost.saat_time(np.float64(
+                  enforced_cfg.resolved_late_rho()))) + gather
+              if np.isfinite(spec.dense.theta_low) else 0.0)
+        bound = max(bound, pd + td_b + fb,
+                    pd + max(bound - pd, td_b) + cost.fusion_us)
     out["config"] = {
         "spec": spec.name, "n_queries": q, "n_shards": ns,
         "replicas": spec.deploy.replicas, "budget": cfg.budget,
         "stage1_budget": budget1, "daat_prune": daat_prune,
         "costing": "index" if proxies.post_build else "corpus",
-        "worst_case_bound": (enforced_cfg.worst_case_us(cost, ns)
-                             + reserve2),
+        "worst_case_bound": bound + reserve2,
+        "dense_tiles": dense_tiles,
         "max_late_rho": enforced_cfg.max_late_rho(cost, ns),
         "late_rho": enforced_cfg.resolved_late_rho(),
     }
@@ -255,6 +314,11 @@ def render(res: dict) -> str:
         lines.append(f"{mode},{p['p50']:.1f},{p['p99']:.1f},"
                      f"{p['p99.99']:.1f},{p['max']:.1f},"
                      f"{r['over_budget']},{late}")
+        if "dense" in r:
+            d = r["dense"]
+            lines.append(f"  dense mix: lex={d['lexical']} "
+                         f"dense={d['dense_only']} fused={d['fused']} "
+                         f"({c['dense_tiles']} tiles/shard)")
     d = res["deploy_estimate"]
     lines.append(f"deploy: {d['n_postings']} postings, "
                  f"{d['mirror_bytes_per_shard'] / 1e6:.1f} MB mirror/shard, "

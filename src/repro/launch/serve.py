@@ -70,6 +70,20 @@ def main():
                     help="entry cap for each cache level (implies --cache)")
     ap.add_argument("--cache-bytes", type=int, default=None,
                     help="byte cap for each cache level (implies --cache)")
+    ap.add_argument("--dense", action="store_true",
+                    help="enable the dense Stage-1 modality: Stage-0 "
+                         "dispatches each query lexical / dense / "
+                         "both+fused (repro.dense)")
+    ap.add_argument("--fusion", default=None, choices=["rrf", "weighted"],
+                    help="hybrid fusion method for both-routed queries "
+                         "(implies --dense)")
+    ap.add_argument("--theta-high", type=float, default=None,
+                    help="top dense score above which Stage-2 is skipped "
+                         "rank-safely (implies --dense)")
+    ap.add_argument("--theta-low", type=float, default=None,
+                    help="top dense score below which a rho_late-capped "
+                         "lexical fallback replaces the dense candidates "
+                         "(implies --dense)")
     ap.add_argument("--zipf-skew", type=float, default=0.0,
                     help="Zipfian query-repetition skew for --online "
                          "traffic (0 = every query distinct, in order)")
@@ -139,6 +153,17 @@ def main():
         if args.cache_bytes is not None:
             kw["l1_bytes"] = kw["l2_bytes"] = args.cache_bytes
         cache = dataclasses.replace(cache, **kw)
+    dense, fusion = spec.dense, spec.fusion
+    if (args.dense or args.fusion is not None
+            or args.theta_high is not None or args.theta_low is not None):
+        kw = {"enabled": True}
+        if args.theta_high is not None:
+            kw["theta_high"] = args.theta_high
+        if args.theta_low is not None:
+            kw["theta_low"] = args.theta_low
+        dense = dataclasses.replace(dense, **kw)
+    if args.fusion is not None:
+        fusion = dataclasses.replace(fusion, method=args.fusion)
     spec = dataclasses.replace(
         spec,
         deploy=dataclasses.replace(spec.deploy, n_shards=args.shards,
@@ -146,6 +171,8 @@ def main():
         routing=routing,
         fault=fault,
         cache=cache,
+        dense=dense,
+        fusion=fusion,
         stage2=(spec.stage2 if not args.no_ltr else
                 dataclasses.replace(spec.stage2, enabled=False)),
         backend=(spec.backend if args.backend is None else
@@ -232,6 +259,12 @@ def main():
                   f"hits={c['front_door_hits']}"
                   + (f", ewma={c['hit_ewma']:.3f}" if "hit_ewma" in c
                      else ""))
+        if "dense" in s:
+            d = s["dense"]
+            print(f"[serve] dense: lex={d['lexical']} "
+                  f"dense={d['dense_only']} fused={d['fused']} "
+                  f"theta_skips={d['theta_skips']} "
+                  f"fallbacks={d['fallbacks']}")
         if "coverage" in s:
             c = s["coverage"]
             print(f"[serve] coverage: min={c['min']:.2f} "
@@ -265,6 +298,11 @@ def main():
         print(f"[serve] cache: hit_ratio={c['hit_ratio']:.3f} "
               f"(l1={c['l1_hits']} l2={c['l2_hits']} "
               f"miss={c['full_misses']})")
+    if "dense" in s:
+        d = s["dense"]
+        print(f"[serve] dense: lex={d['lexical']} dense={d['dense_only']} "
+              f"fused={d['fused']} theta_skips={d['theta_skips']} "
+              f"fallbacks={d['fallbacks']}")
     for name, p in s.get("stages", {}).items():
         print(f"[serve] {name:7s} ms: p50={p['p50']:.2f} p99={p['p99']:.2f} "
               f"max={p['max']:.2f}")

@@ -71,14 +71,22 @@ def normalize_query(terms_row: np.ndarray, mask_row: np.ndarray,
     return b"|".join(parts)
 
 
-def route_sig(is_jass: bool, rho: float, k: float) -> bytes:
+def route_sig(is_jass: bool, rho: float, k: float,
+              extra: bytes = b"") -> bytes:
     """The byte signature of one resolved routing decision.  ρ determines
     the SAAT traversal (the global impact-level cut) and k the Stage-2
     depth, so two serves agree bit-for-bit iff their signatures match —
     which is exactly what makes a hit safe after online threshold
-    adaptation (a changed route simply misses)."""
+    adaptation (a changed route simply misses).
+
+    ``extra`` extends the signature with any further serve-shaping
+    dimension — the dense subsystem passes its resolved modality
+    (``b"|M0"``/``b"|M1"``/``b"|M2"``) so lexical, dense and fused entries
+    for the same query can never collide.  The default ``b""`` keeps every
+    key byte-identical to the pre-dense layout, so a disabled
+    ``DenseSpec`` is provably inert at the cache layer too."""
     return (b"J" if is_jass else b"B") + np.float64(rho).tobytes() \
-        + np.float64(k).tobytes()
+        + np.float64(k).tobytes() + extra
 
 
 def l1_key(qkey: bytes, rsig: bytes, k_serve: int, t_final: int,

@@ -80,6 +80,15 @@ class CostModel:
     # predict + this; misses pay it on top of the cascade), and added to
     # worst_case_us so the guarantee stays analytic with caching on.
     cache_hit_us: float = 0.5
+    # dense Stage-1 modality: per-shard time is fixed dispatch + a term per
+    # kernel grid tile — SHAPE-STATIC (every query scores every tile), so
+    # the dense route's worst case is exact from the spec alone.  fusion_us
+    # is the host-side list merge for both-routed queries; set_models
+    # reserves it out of the scheduler's stage-1 budget so fused routes
+    # stay inside the cascade bound.
+    dense_fixed_us: float = 5.0
+    dense_tile_us: float = 0.5
+    fusion_us: float = 1.0
 
     @classmethod
     def v5e_shard(cls) -> "CostModel":
@@ -99,7 +108,8 @@ class CostModel:
                    daat_fixed_us=4.0, daat_per_posting_us=7.6e-3,
                    daat_per_block_us=25e-3, predict_us=0.75,
                    ltr_fixed_us=1.0, ltr_per_candidate_us=15e-3,
-                   cache_hit_us=0.05)
+                   cache_hit_us=0.05, dense_fixed_us=2.0,
+                   dense_tile_us=0.05, fusion_us=0.5)
 
     def saat_time(self, work: np.ndarray) -> np.ndarray:
         return self.saat_fixed_us + work * self.saat_per_posting_us
@@ -113,6 +123,15 @@ class CostModel:
         return (self.ltr_fixed_us
                 + np.asarray(n_candidates, np.float64)
                 * self.ltr_per_candidate_us)
+
+    def dense_time(self, n_tiles) -> np.ndarray:
+        """Per-shard dense Stage-1 time from the kernel grid tile count.
+        Shape-static: a dense query's cost depends only on the shard's doc
+        count and ``tile_d``, never on the query — which is what lets
+        ``worst_case_us`` and the spec dry-run price dense routes exactly
+        with no corpus statistics."""
+        return (self.dense_fixed_us
+                + np.asarray(n_tiles, np.float64) * self.dense_tile_us)
 
     def gather_time(self, t_shards: np.ndarray) -> np.ndarray:
         """Scatter-gather Stage-1 time over an (n_shards, Q) per-shard time

@@ -97,6 +97,7 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
         partial_bounds = [system.sched.cfg.worst_case_us(system.cost, m)
                           for m in range(1, ns + 1)]
     cache_on = getattr(system, "cache", None) is not None
+    dense_on = getattr(system, "dense", None) is not None
     # a guaranteed L1 hit bypasses the cascade: its hard service bound is
     # just prediction + lookup — the cache rung of the admission ladder
     hit_bound = (system.cost.predict_us + system.cost.cache_hit_us
@@ -121,6 +122,19 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
     stage_acc: dict = {}
     events: list = []
     batch_meta: list = []
+    dense_acc = {"lexical": 0, "dense_only": 0, "fused": 0,
+                 "theta_skips": 0, "fallbacks": 0}
+
+    def count_dense(info: dict | None, n: int) -> None:
+        # only the real rows — batch padding duplicates a row's modality
+        if not dense_on or info is None:
+            return
+        m = np.asarray(info["modality"][:n])
+        dense_acc["lexical"] += int(np.sum(m == 0))
+        dense_acc["dense_only"] += int(np.sum(m == 1))
+        dense_acc["fused"] += int(np.sum(m == 2))
+        dense_acc["theta_skips"] += int(np.sum(info["theta_skip"][:n]))
+        dense_acc["fallbacks"] += int(np.sum(info["fallback"][:n]))
 
     pending: list[int] = []
     t_free = 0.0
@@ -161,6 +175,7 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
                 for name, t in res.stage_latency.items():
                     stage_acc.setdefault(name, []).append(
                         np.asarray(t, np.float64))
+                count_dense(res.dense, 1)
                 events.append((qid, -2, t_arr, t_arr, 0.0, svc,
                                float(completion[qid]), FULL))
                 n_front += 1
@@ -239,6 +254,7 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
         for name, t in res.stage_latency.items():
             stage_acc.setdefault(name, []).append(
                 np.asarray(t[:n_real], np.float64))
+        count_dense(res.dense, n_real)
         for j, r in enumerate(served):
             events.append((int(r), bid, float(arr[r]), float(t_start),
                            float(t_start - arr[r]), float(svc[j]),
@@ -294,6 +310,8 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
         stats["cache"]["front_door_hits"] = n_front
         if adm is not None:
             stats["cache"]["hit_ewma"] = float(adm.hit_ewma)
+    if dense_on:
+        stats["dense"] = dense_acc
     if faulted:
         if system.faults.active:
             stats["faults"] = dict(system._fault_counters)

@@ -82,5 +82,5 @@ class CascadePipeline(SearchSystem):
         """Historical signature: returns (topk, t_bmw).  Threads a fresh
         per-call split memo so same-batch duplicates share their SAAT
         level-cut resolution."""
-        topk, t_bmw, _ = self._stage1_full(terms, mask, routed, {})
+        topk, _, t_bmw, _ = self._stage1_full(terms, mask, routed, {})
         return topk, t_bmw

@@ -328,6 +328,92 @@ class CacheSpec:
             raise ValueError("hit_alpha must be in (0, 1]")
 
 
+@dataclass(frozen=True)
+class DenseSpec:
+    """The dense Stage-1 modality: embedding retrieval + modality routing.
+
+    When enabled, ``SearchSystem`` builds a :class:`~repro.dense.engine.
+    DenseEngine` over the SAME doc-range partitioning as the lexical
+    shards and Stage-0 dispatches every query to one of three routes from
+    its predicted lexical time ``pred_t``:
+
+    * ``pred_t <= t_dense·(1 - fuse_band)`` — **lexical** (cheap queries
+      stay on the impact-ordered engines);
+    * inside the band — **both + fused** (uncertain queries run both
+      engines in parallel and merge by :class:`FusionSpec`);
+    * ``pred_t > t_dense·(1 + fuse_band)`` — **dense only** (the
+      shape-static dense cost undercuts a predicted-expensive traversal).
+
+    Confidence-band shortcuts: a dense-involved query whose top dense
+    score clears ``theta_high`` serves its Stage-1 order directly
+    (rank-safe Stage-2 skip, the existing zero-grid path); a dense-only
+    query below ``theta_low`` re-issues a bounded ρ-capped lexical
+    fallback (priced like the late hedge, so the route stays inside
+    ``worst_case_us``).  The ``inf``/``-inf`` defaults disarm both bands.
+
+    The default (``enabled=False``) is **inert**: no engine is built, no
+    embedding tables materialize, every serve path and cache key is
+    bit-identical to the lexical-only system — the same discipline as
+    ``FaultSpec``/``CacheSpec``.
+    """
+    enabled: bool = False
+    embed_dim: int = 32          # synthetic-source embedding width (the
+                                 # two-tower source uses the tower's output)
+    tile_d: int = 512            # docs per dense-kernel grid tile
+    source: str = "auto"         # auto | two_tower | synthetic
+    seed: int = 0                # embedding init / synthetic-table seed
+    t_dense: float = 0.0         # pred_t threshold routing toward dense
+                                 # (0 = auto: track routing.t_time)
+    fuse_band: float = 0.25      # both+fused band half-width around t_dense
+    theta_high: float = float("inf")   # top dense score >= this: skip
+                                       # Stage-2 rank-safely (inf = never)
+    theta_low: float = float("-inf")   # dense-only top score < this:
+                                       # bounded lexical fallback
+                                       # (-inf = never)
+
+    @property
+    def active(self) -> bool:
+        return self.enabled
+
+    def validate(self) -> None:
+        if self.embed_dim < 1:
+            raise ValueError("embed_dim must be >= 1")
+        if self.tile_d < 128 or self.tile_d % 128:
+            raise ValueError("tile_d must be a positive multiple of the "
+                             "128-lane width")
+        if self.source not in ("auto", "two_tower", "synthetic"):
+            raise ValueError(f"unknown dense source {self.source!r}")
+        if self.t_dense < 0:
+            raise ValueError("t_dense must be >= 0 (0 = auto)")
+        if not 0.0 <= self.fuse_band <= 1.0:
+            raise ValueError("fuse_band must be in [0, 1]")
+        if self.theta_low > self.theta_high:
+            raise ValueError("theta_low must not exceed theta_high")
+
+
+@dataclass(frozen=True)
+class FusionSpec:
+    """How a both-routed query's lexical and dense lists merge.
+
+    ``rrf`` is reciprocal-rank fusion (rank-only — no cross-modality score
+    calibration needed); ``weighted`` min-max normalizes each list per
+    query and blends by ``w_dense``.  Only consulted when
+    ``DenseSpec.enabled``; both rules break score ties toward the lower
+    global doc id (see ``repro.dense.fusion``).
+    """
+    method: str = "rrf"          # rrf | weighted
+    rrf_k0: float = 60.0         # RRF rank damping constant
+    w_dense: float = 0.5         # dense weight under 'weighted'
+
+    def validate(self) -> None:
+        if self.method not in ("rrf", "weighted"):
+            raise ValueError(f"unknown fusion method {self.method!r}")
+        if self.rrf_k0 <= 0:
+            raise ValueError("rrf_k0 must be positive")
+        if not 0.0 <= self.w_dense <= 1.0:
+            raise ValueError("w_dense must be in [0, 1]")
+
+
 ARRIVALS = ("poisson", "bursty", "diurnal", "trace")
 
 
@@ -436,7 +522,8 @@ class DeploySpec:
 
 _NODES = {"index": IndexSpec, "stage0": Stage0Spec, "routing": RoutingSpec,
           "stage2": Stage2Spec, "backend": BackendSpec, "deploy": DeploySpec,
-          "online": OnlineSpec, "fault": FaultSpec, "cache": CacheSpec}
+          "online": OnlineSpec, "fault": FaultSpec, "cache": CacheSpec,
+          "dense": DenseSpec, "fusion": FusionSpec}
 
 
 @dataclass(frozen=True)
@@ -451,6 +538,8 @@ class CascadeSpec:
     online: OnlineSpec = field(default_factory=OnlineSpec)
     fault: FaultSpec = field(default_factory=FaultSpec)
     cache: CacheSpec = field(default_factory=CacheSpec)
+    dense: DenseSpec = field(default_factory=DenseSpec)
+    fusion: FusionSpec = field(default_factory=FusionSpec)
     name: str = "custom"
 
     def validate(self) -> "CascadeSpec":

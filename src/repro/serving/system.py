@@ -46,6 +46,9 @@ import numpy as np
 
 from repro.core import features as F
 from repro.core import gbrt
+from repro.dense import (M_BOTH, M_DENSE, M_LEX, DenseEngine,
+                         build_embeddings, fuse)
+from repro.dense.engine import SCORE_FILL
 from repro.index.builder import InvertedIndex, build_index
 from repro.index.corpus import Corpus
 from repro.index.postings import shard_from_index, shard_ranges
@@ -63,7 +66,8 @@ from repro.serving.latency import (CostModel, budget_attribution,
                                    over_budget, percentiles,
                                    resolve_level_cut, stage2_afford)
 from repro.serving.replicas import BMW, JASS, PoolConfig, ReplicaPool
-from repro.serving.scheduler import SchedulerConfig, StageZeroScheduler
+from repro.serving.scheduler import (RoutedBatch, SchedulerConfig,
+                                     StageZeroScheduler)
 from repro.serving.spec import CascadeSpec, RoutingSpec
 
 
@@ -79,6 +83,9 @@ class PipelineResult:
     coverage: np.ndarray | None = None   # (Q,) fraction of partitions that
                                          # answered (None: full coverage,
                                          # no fault/partial path engaged)
+    dense: dict | None = None        # {"modality", "theta_skip",
+                                     #  "fallback"} (Q,) vectors (None:
+                                     #  dense modality disabled)
 
 
 def scheduler_config(routing: RoutingSpec) -> SchedulerConfig:
@@ -182,6 +189,21 @@ class SearchSystem:
         self.term_stats = jnp.asarray(index.term_stats)
         self.df = jnp.asarray(index.df)
 
+        # ---- dense Stage-1 modality (spec.dense; inert by default) ----
+        # None keeps every serve path and cache key bit-identical to the
+        # lexical-only system — the same discipline as FaultSpec/CacheSpec.
+        # The embedding matrix is partitioned by the SAME doc ranges as the
+        # inverted index, so merge_shard_topk and the pool failover
+        # protocol apply to dense traffic unchanged.
+        self.dense = None
+        if spec.dense.enabled:
+            doc_emb, term_table = build_embeddings(
+                spec.dense, corpus=corpus, n_docs=index.n_docs,
+                vocab=int(np.asarray(index.df).shape[0]))
+            self.dense = DenseEngine(doc_emb, term_table, ranges,
+                                     tile_d=spec.dense.tile_d,
+                                     backend=self.backend)
+
         self.pool = ReplicaPool(
             PoolConfig(n_partitions=spec.deploy.n_shards,
                        replicas_per_partition=spec.deploy.replicas,
@@ -212,8 +234,7 @@ class SearchSystem:
                                          # per-shard candidate lists
         self._batches = 0
         self._last_stats: dict = {}
-        self._budget_reserve = budget_attribution(self.budget, self.cost,
-                                                  None)
+        self._budget_reserve = self._attribute_budget(self.budget, None)
         self._adapt_last = {"late_hedged": 0, "bmw": 0}
         # rolling pinball loss of the t-predictor against observed BMW
         # engine times — drives the hedge_deadline adaptation (None until
@@ -232,6 +253,18 @@ class SearchSystem:
     @property
     def n_shards(self) -> int:
         return len(self.shards)
+
+    def _attribute_budget(self, budget: float, k_serve: int | None) -> dict:
+        """``budget_attribution`` plus the dense modality's fusion reserve:
+        with dense enabled, ``fusion_us`` is carved out of the scheduler's
+        stage-1 share, so a both-routed query — max(lexical, dense) plus
+        the host-side merge — still lands inside the cascade budget."""
+        reserve = budget_attribution(budget, self.cost, k_serve)
+        if self.cascade_spec.dense.enabled:
+            reserve["fusion"] = self.cost.fusion_us
+            reserve["stage1"] = max(reserve["stage1"] - self.cost.fusion_us,
+                                    0.0)
+        return reserve
 
     # ------------------------------------------------------------------
     # lifecycle: attach / train models
@@ -262,8 +295,8 @@ class SearchSystem:
                                  "(doc topic mixtures)")
             self.s2 = stage2_arrays(self.index, self.corpus)
             self.n_iter = csr_search_iters(int(self.index.df.max()))
-        self._budget_reserve = budget_attribution(
-            cfg.budget, self.cost, self.k_serve if ltr is not None else None)
+        self._budget_reserve = self._attribute_budget(
+            cfg.budget, self.k_serve if ltr is not None else None)
         cfg = replace(cfg, budget=self._budget_reserve["stage1"])
         self.sched = StageZeroScheduler(cfg, self.cost)
         return self
@@ -369,6 +402,37 @@ class SearchSystem:
         return tuple(np.expm1(np.asarray(gbrt.predict(self.models[n], x)))
                      for n in ("k", "rho", "t"))
 
+    def _modality(self, pt: np.ndarray) -> np.ndarray:
+        """Stage-0 modality dispatch from the predicted lexical time:
+        cheap queries stay lexical, predicted-expensive ones go dense only
+        (the dense cost is shape-static, so it undercuts any traversal the
+        t-predictor priced above ``t_dense``), and the uncertainty band in
+        between runs both engines and fuses."""
+        ds = self.cascade_spec.dense
+        td = ds.t_dense if ds.t_dense > 0 else self.sched.cfg.t_time
+        m = np.full(len(pt), M_BOTH, np.int64)
+        m[pt <= td * (1.0 - ds.fuse_band)] = M_LEX
+        m[pt > td * (1.0 + ds.fuse_band)] = M_DENSE
+        return m
+
+    def _restrict_lexical(self, routed: RoutedBatch,
+                          modality: np.ndarray) -> RoutedBatch:
+        """Strip dense-only rows from a routed batch: those queries never
+        touch the lexical engines, and the scheduler's mirror counters
+        (which drive pool rebalance and ``_adapt_routing``) must not claim
+        they did."""
+        lex = modality != M_DENSE
+
+        def keep(rows, stat):
+            kept = rows[lex[rows]]
+            self.sched.stats[stat] -= int(len(rows) - len(kept))
+            return kept
+
+        return replace(routed,
+                       jass_rows=keep(routed.jass_rows, "jass"),
+                       bmw_rows=keep(routed.bmw_rows, "bmw"),
+                       hedged_rows=keep(routed.hedged_rows, "hedged"))
+
     def _jass_split(self, terms, mask, rows, rho, cache: dict | None = None):
         """Resolve the ρ budget to the global impact-level cut and split the
         cut's work per shard.  Returns (per-shard work list, any_ok).
@@ -418,9 +482,12 @@ class SearchSystem:
         """Fan the routed sub-batches out across every shard's batched
         engine and merge the per-shard top-k.
 
-        Returns (topk, t_bmw, t_shards): merged global candidates, the
-        scatter-gather BMW time per query, and the (n_shards, Q) per-shard
-        engine-time matrix that feeds the replica pool's EWMA estimates.
+        Returns (topk, topk_sc, t_bmw, t_shards): merged global candidates
+        and their merged scores (engine-native units; ``SCORE_FILL`` marks
+        never-served / dropped slots — the fusion layer needs the scores,
+        lexical-only callers may ignore them), the scatter-gather BMW time
+        per query, and the (n_shards, Q) per-shard engine-time matrix that
+        feeds the replica pool's EWMA estimates.
 
         ``drop`` ((n_shards, Q) bool, optional) marks (shard, query) slots
         whose response was lost (fault injection) or never requested
@@ -432,6 +499,7 @@ class SearchSystem:
         q = terms.shape[0]
         ns = self.n_shards
         topk = np.zeros((q, self.k_serve), np.int64)
+        topk_sc = np.full((q, self.k_serve), SCORE_FILL, np.float32)
         t_bmw = np.zeros(q)
         t_shards = np.zeros((ns, q))
 
@@ -467,13 +535,17 @@ class SearchSystem:
                      [np.asarray(a) for a in id_list]))
             if ns == 1:
                 topk[rows] = np.asarray(id_list[0])
+                topk_sc[rows] = np.asarray(sc_list[0]).astype(np.float32)
                 if drop is not None and drop[0, rows].any():
-                    topk[rows[drop[0, rows]]] = -1
+                    dead = rows[drop[0, rows]]
+                    topk[dead] = -1
+                    topk_sc[dead] = SCORE_FILL
             else:
-                ids, _ = merge_shard_topk(
+                ids, sc = merge_shard_topk(
                     sc_list, id_list, self.k_serve,
                     drop=None if drop is None else drop[:, rows])
                 topk[rows] = np.asarray(ids)
+                topk_sc[rows] = np.asarray(sc).astype(np.float32)
 
         if len(routed.bmw_rows):
             rows = routed.bmw_rows
@@ -501,15 +573,19 @@ class SearchSystem:
                      [np.asarray(a) for a in id_list]))
             if ns == 1:
                 topk[rows] = np.asarray(id_list[0])
+                topk_sc[rows] = np.asarray(sc_list[0]).astype(np.float32)
                 if drop is not None and drop[0, rows].any():
-                    topk[rows[drop[0, rows]]] = -1
+                    dead = rows[drop[0, rows]]
+                    topk[dead] = -1
+                    topk_sc[dead] = SCORE_FILL
             else:
-                ids, _ = merge_shard_topk(
+                ids, sc = merge_shard_topk(
                     sc_list, id_list, self.k_serve,
                     drop=None if drop is None else drop[:, rows])
                 topk[rows] = np.asarray(ids)
+                topk_sc[rows] = np.asarray(sc).astype(np.float32)
             t_bmw[rows] = self.cost.gather_time(t_shards[:, rows])
-        return topk, t_bmw, t_shards
+        return topk, topk_sc, t_bmw, t_shards
 
     def stage2(self, terms, mask, topics, cand, k_per_query) -> CascadeResult:
         """Batched LTR re-rank of the merged Stage-1 candidate grid (the
@@ -694,6 +770,14 @@ class SearchSystem:
             self._fault_counters["recovered"] += rec
         pk, pr, pt = self.stage0(terms, mask)
         routed = self.sched.route(pk, pr, pt)
+        modality = None
+        if self.dense is not None:
+            # modality dispatch: dense-only rows leave the lexical
+            # sub-batches entirely (their replica picks below still pin the
+            # co-located partition replicas the dense engine runs on, so
+            # the failure protocol covers dense traffic too)
+            modality = self._modality(pt)
+            routed = self._restrict_lexical(routed, modality)
         # route replicas before the engines run so the pool sees the whole
         # batch in flight (power-of-two-choices balances against inflight)
         picks, hedge_picks = self._pool_route(routed, q)
@@ -722,8 +806,68 @@ class SearchSystem:
             self._fault_counters["degraded_queries"] += n_deg
 
         split_cache: dict = {}
-        topk, t_bmw, t_shards = self._stage1_full(terms, mask, routed,
-                                                  split_cache, drop=drop)
+        topk, topk_sc, t_bmw, t_shards = self._stage1_full(
+            terms, mask, routed, split_cache, drop=drop)
+
+        theta_skip = np.zeros(q, bool)
+        fallback = np.zeros(q, bool)
+        fb_extra = np.zeros(q)          # theta_low lexical-fallback latency
+        t_dense_mat = None              # (ns, Q) per-shard dense time
+        d_rows = (np.flatnonzero(modality != M_LEX)
+                  if self.dense is not None else np.zeros(0, np.int64))
+        if len(d_rows):
+            ds = self.cascade_spec.dense
+            q_emb = self.dense.embed(terms[d_rows], mask[d_rows])
+            d_ids, d_sc = self.dense.serve(
+                q_emb, self.k_serve,
+                drop=None if drop is None else drop[:, d_rows])
+            # shape-static per-shard dense time: every query scores every
+            # tile of every shard, so the matrix is query-independent
+            t_dense_mat = np.zeros((ns, q))
+            for s in range(ns):
+                t_dense_mat[s, d_rows] = float(
+                    self.cost.dense_time(self.dense.n_tiles(s)))
+            dmod = modality[d_rows]
+            only_rows = d_rows[dmod == M_DENSE]
+            both_rows = d_rows[dmod == M_BOTH]
+            # dense-only rows serve the dense list; both rows fuse the two
+            topk[only_rows] = d_ids[dmod == M_DENSE]
+            topk_sc[only_rows] = d_sc[dmod == M_DENSE]
+            if len(both_rows):
+                f_ids, f_sc = fuse(self.cascade_spec.fusion,
+                                   topk[both_rows], topk_sc[both_rows],
+                                   d_ids[dmod == M_BOTH],
+                                   d_sc[dmod == M_BOTH], self.k_serve)
+                topk[both_rows] = f_ids
+                topk_sc[both_rows] = f_sc
+            top_dense = d_sc[:, 0].astype(np.float64)
+            if np.isfinite(ds.theta_high):
+                # high-confidence shortcut: Stage-2 is skipped rank-safely
+                # (the existing zero-grid path serves the Stage-1 order)
+                theta_skip[d_rows] = top_dense >= ds.theta_high
+            if np.isfinite(ds.theta_low) and len(only_rows):
+                fb_rows = only_rows[top_dense[dmod == M_DENSE]
+                                    < ds.theta_low]
+                if len(fb_rows):
+                    # low-confidence dense-only rows re-issue a ρ-capped
+                    # lexical traversal — same cap and nominal-healthy
+                    # pricing as the scheduler's late hedge, so the route
+                    # stays inside worst_case_us
+                    fb_routed = RoutedBatch(
+                        jass_rows=fb_rows,
+                        bmw_rows=np.zeros(0, np.int64),
+                        hedged_rows=np.zeros(0, np.int64),
+                        k=routed.k,
+                        rho=np.minimum(
+                            routed.rho,
+                            float(self.sched.cfg.resolved_late_rho())))
+                    fb_topk, fb_sc, _, fb_tsh = self._stage1_full(
+                        terms, mask, fb_routed, split_cache)
+                    topk[fb_rows] = fb_topk[fb_rows]
+                    topk_sc[fb_rows] = fb_sc[fb_rows]
+                    fb_extra[fb_rows] = self.cost.gather_time(
+                        fb_tsh[:, fb_rows])
+                    fallback[fb_rows] = True
 
         if faulted:
             # per-shard completion time under the plan: a served slot pays
@@ -764,10 +908,38 @@ class SearchSystem:
                 routed, t_bmw, jass_fault_fn,
                 late_jass_fn=self._jass_time(terms, mask, split_cache))
             t_pool = t_fault
+            if t_dense_mat is not None:
+                # dense requests ride the same failure protocol: a served
+                # slot pays its retry wait + (possibly straggler-slowed)
+                # dense engine time, lost/dropped slots exactly as lexical
+                t_dense_eff = np.where(dropped, 0.0,
+                                       delay + np.where(lost, 0.0,
+                                                        t_dense_mat * mult))
+                t_pool = np.maximum(t_pool, t_dense_eff)
+                tdr = np.zeros(q)
+                tdr[d_rows] = (t_dense_eff[:, d_rows].max(axis=0)
+                               + gather_ov[d_rows])
         else:
             lat01 = self.sched.resolve_times(
                 routed, t_bmw, self._jass_time(terms, mask, split_cache))
             t_pool = t_shards
+            if t_dense_mat is not None:
+                # a partition replica hosting both engines is busy for the
+                # max of its co-located work
+                t_pool = np.maximum(t_pool, t_dense_mat)
+                tdr = np.zeros(q)
+                tdr[d_rows] = self.cost.gather_time(t_dense_mat[:, d_rows])
+        if len(d_rows):
+            # dense-only: predict + dense scatter-gather (+ any theta_low
+            # fallback); both: the two engines run in parallel, the query
+            # waits for the slower and pays the host-side fusion merge
+            pd = self.cost.predict_us
+            only = modality == M_DENSE
+            both = modality == M_BOTH
+            lat01 = np.where(only, pd + tdr + fb_extra, lat01)
+            lat01 = np.where(both,
+                             pd + np.maximum(lat01 - pd, tdr)
+                             + self.cost.fusion_us, lat01)
         t0 = np.full(q, self.cost.predict_us)
         stage_latency = {"stage0": t0, "stage1": lat01 - t0}
 
@@ -800,6 +972,11 @@ class SearchSystem:
                 # candidates (-1 padding from the masked merge): never ask
                 # Stage-2 to rank the padding
                 k2 = np.minimum(k2, (topk >= 0).sum(axis=1))
+            if theta_skip.any():
+                # dense confidence shortcut: the Stage-1 order is served
+                # directly (rank-safe), zeroed BEFORE enforcement so these
+                # rows never count as budget-driven skips
+                k2 = np.where(theta_skip, 0, k2)
             if enforce:
                 # cascade hedge: a query whose Stage-1 time already ate the
                 # budget gets its candidate grid trimmed (masked re-rank) —
@@ -847,10 +1024,13 @@ class SearchSystem:
                 continue
             entry = percentiles(t)
             # per-stage budget attribution: each stage is accountable to
-            # its reserved share of the cascade budget
-            entry["budget"] = self._budget_reserve[name]
-            entry["over_budget"] = over_budget(t,
-                                               self._budget_reserve[name])[0]
+            # its reserved share of the cascade budget (fused routes spend
+            # the fusion reserve inside stage 1)
+            b = (self._budget_reserve[name]
+                 + (self._budget_reserve.get("fusion", 0.0)
+                    if name == "stage1" else 0.0))
+            entry["budget"] = b
+            entry["over_budget"] = over_budget(t, b)[0]
             stats["stages"][name] = entry
         stats["budget"] = {
             "total": self.budget,
@@ -870,10 +1050,22 @@ class SearchSystem:
                 "mean": float(coverage.mean()) if q else 1.0,
                 "degraded": int((coverage < 1.0).sum()),
             }
+        dense_info = None
+        if self.dense is not None:
+            dense_info = {"modality": modality, "theta_skip": theta_skip,
+                          "fallback": fallback}
+            stats["dense"] = {
+                "lexical": int(np.sum(modality == M_LEX)),
+                "dense_only": int(np.sum(modality == M_DENSE)),
+                "fused": int(np.sum(modality == M_BOTH)),
+                "theta_skips": int(theta_skip.sum()),
+                "fallbacks": int(fallback.sum()),
+            }
         self._last_stats = stats
         return PipelineResult(topk=topk, final=final, candidates_used=used,
                               latency=lat, stage_latency=stage_latency,
-                              stats=stats, coverage=coverage)
+                              stats=stats, coverage=coverage,
+                              dense=dense_info)
 
     # ------------------------------------------------------------------
     # result/candidate caching
@@ -925,13 +1117,16 @@ class SearchSystem:
         epoch = self._cache_epoch(now)
         pk, pr, pt = self.stage0(terms, mask)
         routed = self._pure_route(pk, pr, pt)
+        modality = self._modality(pt) if self.dense is not None else None
         is_jass = np.zeros(q, bool)
         is_jass[routed.jass_rows] = True
         for i in range(q):
             qk = normalize_query(terms[i], mask[i],
                                  None if topics is None else topics[i])
             rs = route_sig(bool(is_jass[i]), float(routed.rho[i]),
-                           float(routed.k[i]))
+                           float(routed.k[i]),
+                           b"" if modality is None
+                           else b"|M%d" % modality[i])
             out[i] = self.cache.l1_contains(
                 l1_key(qk, rs, self.k_serve, self.t_final, self.k_serve),
                 epoch)
@@ -968,6 +1163,10 @@ class SearchSystem:
         epoch = self._cache_epoch(now)
         pk, pr, pt = self.stage0(terms, mask)
         routed = self._pure_route(pk, pr, pt)
+        # the resolved modality is part of the route: lexical, dense and
+        # fused entries for the same query must never collide (with dense
+        # disabled the suffix is b"" and keys are byte-identical)
+        modality = self._modality(pt) if self.dense is not None else None
         is_jass = np.zeros(q, bool)
         is_jass[routed.jass_rows] = True
 
@@ -994,7 +1193,9 @@ class SearchSystem:
             qk = normalize_query(terms[i], mask[i],
                                  None if topics is None else topics[i])
             rs = route_sig(bool(is_jass[i]), float(routed.rho[i]),
-                           float(routed.k[i]))
+                           float(routed.k[i]),
+                           b"" if modality is None
+                           else b"|M%d" % modality[i])
             keys1[i] = l1_key(qk, rs, self.k_serve, self.t_final,
                               int(cap[i]))
             v = cache.l1_get(keys1[i], epoch)
@@ -1034,12 +1235,23 @@ class SearchSystem:
         t1[rows1] = hit_us
 
         rows2 = np.flatnonzero(l2_hit)
+        skip_flags = None
         if len(rows2):
-            cand = np.stack([l2_vals[i] for i in rows2])
+            vals = [l2_vals[i] for i in rows2]
+            if self.dense is not None:
+                # dense-mode L2 entries carry the fill-time theta-skip
+                # decision, so a hit replays the same Stage-2 shortcut the
+                # cold serve took
+                cand = np.stack([v[0] for v in vals])
+                skip_flags = np.array([bool(v[1]) for v in vals])
+            else:
+                cand = np.stack(vals)
             topk[rows2] = cand
             t1[rows2] = hit_us
             k2 = np.minimum(np.minimum(routed.k[rows2], self.k_serve),
                             cap[rows2]).astype(np.int64)
+            if skip_flags is not None:
+                k2[skip_flags] = 0
             if self.sched.cfg.enforce_budget:
                 # same enforcement as the cold path, priced at the hit's
                 # actual stage-1 cost — a hit has the slack to afford the
@@ -1100,7 +1312,10 @@ class SearchSystem:
                     cache.counters["skipped_partial"] += 1
                     continue   # partial coverage is never cached
                 if self.ltr is not None:
-                    cache.l2_put(keys2[i], sub.topk[j].copy(), epoch)
+                    v2 = sub.topk[j].copy()
+                    if self.dense is not None:
+                        v2 = (v2, bool(sub.dense["theta_skip"][j]))
+                    cache.l2_put(keys2[i], v2, epoch)
                     cache.l1_put(keys1[i],
                                  (sub.topk[j].copy(), sub.final[j].copy(),
                                   int(sub.candidates_used[j])), epoch)
@@ -1126,9 +1341,11 @@ class SearchSystem:
             if not np.any(t > 0):
                 continue
             entry = percentiles(t)
-            entry["budget"] = self._budget_reserve[name]
-            entry["over_budget"] = over_budget(
-                t, self._budget_reserve[name])[0]
+            b = (self._budget_reserve[name]
+                 + (self._budget_reserve.get("fusion", 0.0)
+                    if name == "stage1" else 0.0))
+            entry["budget"] = b
+            entry["over_budget"] = over_budget(t, b)[0]
             stats["stages"][name] = entry
         stats["budget"] = {
             "total": self.budget,
@@ -1149,10 +1366,31 @@ class SearchSystem:
                 "degraded": int((coverage < 1.0).sum()),
             }
         stats["cache"] = cache.stats()
+        dense_info = None
+        if self.dense is not None:
+            theta_all = np.zeros(q, bool)
+            fb_all = np.zeros(q, bool)
+            if sub is not None:
+                theta_all[miss_rows] = sub.dense["theta_skip"]
+                fb_all[miss_rows] = sub.dense["fallback"]
+            if skip_flags is not None:
+                theta_all[rows2] = skip_flags
+            # L1 rows keep False flags: their final list already baked in
+            # whatever shortcut the fill-time serve took
+            dense_info = {"modality": modality, "theta_skip": theta_all,
+                          "fallback": fb_all}
+            stats["dense"] = {
+                "lexical": int(np.sum(modality == M_LEX)),
+                "dense_only": int(np.sum(modality == M_DENSE)),
+                "fused": int(np.sum(modality == M_BOTH)),
+                "theta_skips": int(theta_all.sum()),
+                "fallbacks": int(fb_all.sum()),
+            }
         self._last_stats = stats
         return PipelineResult(topk=topk, final=final, candidates_used=used,
                               latency=lat, stage_latency=stage_latency,
-                              stats=stats, coverage=coverage)
+                              stats=stats, coverage=coverage,
+                              dense=dense_info)
 
     def serve_online(self, terms: np.ndarray, mask: np.ndarray,
                      topics: np.ndarray | None = None, *,
@@ -1180,9 +1418,37 @@ class SearchSystem:
         shards are added.  With a serving cache attached, every query
         additionally pays the lookup (``cache_hit_us``) — charging it here
         keeps the guarantee analytic with caching on (a hit costs strictly
-        less than the bound; a miss costs the cascade plus the lookup)."""
-        return (self.sched.cfg.worst_case_us(self.cost, self.n_shards)
-                + self._budget_reserve["stage2"]
+        less than the bound; a miss costs the cascade plus the lookup).
+
+        With the dense modality enabled the bound is the max over the
+        three routes, all analytic from spec shapes alone:
+
+        * **lexical** — the scheduler bound, unchanged (the stage-1 share
+          it enforces already had ``fusion_us`` carved out);
+        * **dense only** — ``predict + dense_time(max_tiles) + gather +
+          retry``, plus the ρ_late-capped fallback traversal when
+          ``theta_low`` is armed (the dense per-shard cost is shape-static,
+          so this term needs no df tables);
+        * **both + fused** — the engines run in parallel (max of the two
+          stage-1 terms) plus the reserved ``fusion_us``; since the
+          scheduler enforces the reduced share, this collapses back to at
+          most the original stage-1 reserve.
+        """
+        cfg = self.sched.cfg
+        base = cfg.worst_case_us(self.cost, self.n_shards)
+        if self.dense is not None:
+            ds = self.cascade_spec.dense
+            pd = self.cost.predict_us
+            gather = self.cost.gather_per_shard_us * (self.n_shards - 1)
+            td = (float(self.cost.dense_time(self.dense.max_tiles()))
+                  + gather + cfg.retry_us())
+            fb = (float(self.cost.saat_time(
+                      np.float64(cfg.resolved_late_rho()))) + gather
+                  if np.isfinite(ds.theta_low) else 0.0)
+            dense_bound = pd + td + fb
+            both_bound = pd + max(base - pd, td) + self.cost.fusion_us
+            base = max(base, dense_bound, both_bound)
+        return (base + self._budget_reserve["stage2"]
                 + (self.cost.cache_hit_us if self.cache is not None
                    else 0.0))
 

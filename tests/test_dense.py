@@ -1,0 +1,437 @@
+"""Dense retrieval + hybrid fusion suite: grid quantization, kernel
+backend bit-parity (ragged shapes, exact ties), sharded engine vs oracle,
+fusion tie policy, Stage-0 modality dispatch, theta confidence bands,
+spec round-trip, worst-case bound accounting, cache interplay, and the
+provable inertness of a disabled DenseSpec.
+"""
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dense import (GRID, M_BOTH, M_DENSE, M_LEX, DenseEngine,
+                         build_embeddings, embed_queries, quantize,
+                         rrf_fuse, synthetic_embeddings, weighted_fuse)
+from repro.index.postings import shard_ranges
+from repro.kernels.dense_topk import dense_topk, dense_topk_oracle
+from repro.serving.cache import route_sig
+from repro.serving.spec import (BackendSpec, CacheSpec, CascadeSpec,
+                                DenseSpec, DeploySpec, FusionSpec,
+                                OnlineSpec, RoutingSpec, Stage2Spec,
+                                TrafficSpec)
+from repro.serving.system import build_system
+
+# ---------------------------------------------------------------------------
+# embeddings: the exactness contract
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_snaps_to_grid_and_clips():
+    x = np.array([0.01, -1.73205, 3.5, -9.0, 0.0])
+    q = quantize(x)
+    assert q.dtype == np.float32
+    np.testing.assert_array_equal(q * GRID, np.rint(q * GRID))
+    assert q.max() <= 2.0 and q.min() >= -2.0
+    assert q[2] == 2.0 and q[3] == -2.0
+
+
+def test_embed_queries_row_independent():
+    _, table = synthetic_embeddings(64, 128, d=16, seed=1)
+    rng = np.random.RandomState(0)
+    terms = rng.randint(0, 128, size=(6, 5))
+    mask = (rng.rand(6, 5) > 0.3).astype(np.float32)
+    full = embed_queries(table, terms, mask)
+    for i in range(6):
+        row = embed_queries(table, terms[i:i + 1], mask[i:i + 1])
+        np.testing.assert_array_equal(row[0], full[i])
+    np.testing.assert_array_equal(full * GRID, np.rint(full * GRID))
+
+
+def test_build_embeddings_source_resolution(small_collection):
+    corpus, index, ql = small_collection
+    doc_emb, table = build_embeddings(
+        DenseSpec(enabled=True, source="synthetic", embed_dim=16),
+        corpus=None, n_docs=64, vocab=128)
+    assert doc_emb.shape == (64, 16) and table.shape == (128, 16)
+    # auto without a corpus falls back to synthetic (same seeded tables)
+    d2, t2 = build_embeddings(DenseSpec(enabled=True, embed_dim=16),
+                              corpus=None, n_docs=64, vocab=128)
+    np.testing.assert_array_equal(doc_emb, d2)
+    # explicit two_tower without a corpus is an error, never a downgrade
+    with pytest.raises(ValueError, match="two_tower"):
+        build_embeddings(DenseSpec(enabled=True, source="two_tower"),
+                         corpus=None, n_docs=64, vocab=128)
+    dt, tt = build_embeddings(DenseSpec(enabled=True), corpus=corpus,
+                              n_docs=corpus.n_docs, vocab=corpus.vocab)
+    assert dt.shape[0] == corpus.n_docs and tt.shape[0] == corpus.vocab
+
+
+# ---------------------------------------------------------------------------
+# kernel: backend bit-parity and tie policy
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_dense():
+    doc_emb, table = synthetic_embeddings(1000, 256, d=24, seed=3)
+    rng = np.random.RandomState(7)
+    terms = rng.randint(0, 256, size=(32, 6))
+    mask = np.ones((32, 6), np.float32)
+    return doc_emb, embed_queries(table, terms, mask)
+
+
+@pytest.mark.parametrize("k", [1, 33, 128])
+def test_kernel_backend_parity(small_dense, k):
+    """interpret == jnp == numpy oracle, bitwise, on ragged shapes
+    (n_docs and embed dim both non-multiples of the tile sizes)."""
+    doc_emb, q_emb = small_dense
+    o_sc, o_ids = dense_topk_oracle(q_emb, doc_emb, k)
+    for backend in ("jnp", "interpret"):
+        sc, ids = dense_topk(jnp.asarray(q_emb), jnp.asarray(doc_emb), k,
+                             tile_d=512, backend=backend)
+        np.testing.assert_array_equal(np.asarray(sc), o_sc)
+        np.testing.assert_array_equal(np.asarray(ids, np.int64), o_ids)
+
+
+def test_kernel_exact_ties_pick_lower_doc_id(small_dense):
+    doc_emb, q_emb = small_dense
+    dup = np.concatenate([doc_emb[:100]] * 3)      # every score 3x duplicated
+    o_sc, o_ids = dense_topk_oracle(q_emb, dup, 64)
+    for backend in ("jnp", "interpret"):
+        sc, ids = dense_topk(jnp.asarray(q_emb), jnp.asarray(dup), 64,
+                             tile_d=128, backend=backend)
+        np.testing.assert_array_equal(np.asarray(sc), o_sc)
+        np.testing.assert_array_equal(np.asarray(ids, np.int64), o_ids)
+
+
+def test_kernel_rejects_bad_shapes(small_dense):
+    doc_emb, q_emb = small_dense
+    with pytest.raises(ValueError, match="k="):
+        dense_topk(jnp.asarray(q_emb), jnp.asarray(doc_emb), 0)
+    with pytest.raises(ValueError, match="tile_d"):
+        dense_topk(jnp.asarray(q_emb), jnp.asarray(doc_emb), 8,
+                   tile_d=100, backend="interpret")
+
+
+# ---------------------------------------------------------------------------
+# engine: sharded serve vs unsharded oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", [1, 3])
+def test_engine_sharded_parity(small_dense, n_shards):
+    doc_emb, q_emb = small_dense
+    _, table = synthetic_embeddings(1000, 256, d=24, seed=3)
+    eng = DenseEngine(doc_emb, table, shard_ranges(1000, n_shards),
+                      tile_d=128, backend="jnp")
+    ids, sc = eng.serve(q_emb, 64)
+    o_ids, o_sc = eng.oracle(q_emb, 64)
+    np.testing.assert_array_equal(ids, o_ids)
+    np.testing.assert_array_equal(sc, o_sc)
+
+
+def test_engine_drop_mask_merges_survivors(small_dense):
+    """Dropping a shard serves exactly the merge over survivors — i.e. the
+    oracle over the surviving doc range."""
+    doc_emb, q_emb = small_dense
+    _, table = synthetic_embeddings(1000, 256, d=24, seed=3)
+    ranges = shard_ranges(1000, 2)
+    eng = DenseEngine(doc_emb, table, ranges, tile_d=128, backend="jnp")
+    q = len(q_emb)
+    drop = np.zeros((2, q), bool)
+    drop[1, : q // 2] = True                      # lose shard 1 for half
+    ids, sc = eng.serve(q_emb, 64, drop=drop)
+    lo, hi = ranges[0]
+    surv_sc, surv_ids = dense_topk_oracle(q_emb[: q // 2], doc_emb[lo:hi],
+                                          64)
+    np.testing.assert_array_equal(ids[: q // 2], surv_ids + lo)
+    np.testing.assert_array_equal(sc[: q // 2], surv_sc)
+    full_ids, full_sc = eng.oracle(q_emb, 64)
+    np.testing.assert_array_equal(ids[q // 2:], full_ids[q // 2:])
+
+
+# ---------------------------------------------------------------------------
+# fusion
+# ---------------------------------------------------------------------------
+
+
+def test_rrf_prefers_docs_in_both_lists():
+    lex = np.array([[10, 11, 12]])
+    den = np.array([[20, 10, 21]])
+    ids, sc = rrf_fuse(lex, den, 5, k0=60.0)
+    assert ids[0, 0] == 10                     # only doc in both lists
+    # singles rank by their one contribution: 20 (rank 0) above 11
+    # (rank 1); the rank-2 contributions tie (12 lexical vs 21 dense)
+    # -> lower doc id first
+    assert list(ids[0, 1:5]) == [20, 11, 12, 21]
+    r = 1.0 / (60.0 + np.arange(3) + 1.0)
+    np.testing.assert_allclose(sc[0, 0], r[0] + r[1], rtol=1e-6)
+    assert sc[0, 3] == sc[0, 4]
+
+
+def test_fusion_excludes_padding_and_pads_short_lists():
+    lex = np.array([[5, -1, -1]])
+    den = np.array([[-1, -1, -1]])
+    ids, sc = rrf_fuse(lex, den, 4)
+    assert list(ids[0]) == [5, -1, -1, -1]
+    assert (sc[0, 1:] == 0).all()
+
+
+def test_weighted_fuse_extremes_follow_one_modality():
+    lex = np.array([[1, 2, 3]])
+    lex_sc = np.array([[9.0, 5.0, 1.0]])
+    den = np.array([[3, 4, 5]])
+    den_sc = np.array([[0.9, 0.5, 0.1]])
+    # positive scores follow the favored modality's order; zero-scored
+    # entries (the other list + the favored list's min) tie -> lower id
+    ids_d, _ = weighted_fuse(lex, lex_sc, den, den_sc, 3, w_dense=1.0)
+    assert list(ids_d[0]) == [3, 4, 1]
+    ids_l, _ = weighted_fuse(lex, lex_sc, den, den_sc, 3, w_dense=0.0)
+    assert list(ids_l[0]) == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# spec
+# ---------------------------------------------------------------------------
+
+
+def test_dense_spec_roundtrip_with_infinite_thetas():
+    spec = CascadeSpec(
+        dense=DenseSpec(enabled=True, embed_dim=48, tile_d=256,
+                        theta_high=0.5, theta_low=0.2),
+        fusion=FusionSpec(method="weighted", w_dense=0.7),
+        name="dense_rt")
+    back = CascadeSpec.from_json(spec.to_json())
+    assert back.dense == spec.dense and back.fusion == spec.fusion
+    # defaults carry +/- infinity through JSON
+    d2 = CascadeSpec.from_json(CascadeSpec(
+        dense=DenseSpec(enabled=True)).to_json()).dense
+    assert d2.theta_high == np.inf and d2.theta_low == -np.inf
+    assert json.loads(spec.to_json())["dense"]["enabled"] is True
+
+
+def test_dense_spec_validation():
+    DenseSpec(enabled=True).validate()
+    assert DenseSpec(enabled=True).active
+    assert not DenseSpec().active
+    with pytest.raises(ValueError):
+        DenseSpec(enabled=True, tile_d=100).validate()
+    with pytest.raises(ValueError):
+        DenseSpec(enabled=True, theta_low=0.9, theta_high=0.1).validate()
+    with pytest.raises(ValueError):
+        DenseSpec(enabled=True, source="bm25").validate()
+    with pytest.raises(ValueError):
+        FusionSpec(method="borda").validate()
+    with pytest.raises(ValueError):
+        FusionSpec(w_dense=1.5).validate()
+
+
+# ---------------------------------------------------------------------------
+# system integration (small_collection, jnp backend, frozen thresholds)
+# ---------------------------------------------------------------------------
+
+
+def _spec(dense=None, fusion=None, cache=None, deploy=None, **routing_kw):
+    routing = {"budget": 100.0, "rho_max": 1 << 14, "t_k": 150.0,
+               "t_time": 18.0, "adapt_every": 0}
+    routing.update(routing_kw)
+    return CascadeSpec(
+        routing=RoutingSpec(**routing),
+        stage2=Stage2Spec(enabled=True, k_serve=32, t_final=5),
+        backend=BackendSpec(backend="jnp"),
+        deploy=deploy if deploy is not None else DeploySpec(),
+        dense=dense if dense is not None else DenseSpec(),
+        fusion=fusion if fusion is not None else FusionSpec(),
+        cache=cache if cache is not None else CacheSpec(),
+        online=OnlineSpec(max_batch=8, batch_deadline_us=4.0),
+        name="dense_test",
+    )
+
+
+@pytest.fixture(scope="module")
+def fitted(small_collection):
+    corpus, index, ql = small_collection
+    spec = dataclasses.replace(
+        _spec(), routing=dataclasses.replace(_spec().routing, t_k=None,
+                                             t_time=None, calibrate=True))
+    system = build_system(spec, index, corpus=corpus)
+    system.fit(ql, None, seed=5)
+    return corpus, index, ql, system, (system._base_cfg.t_k,
+                                       system._base_cfg.t_time)
+
+
+def _system(fitted, dense=None, fusion=None, cache=None, deploy=None,
+            **routing_kw):
+    corpus, index, ql, system, (tk, tt) = fitted
+    spec = _spec(dense=dense, fusion=fusion, cache=cache, deploy=deploy,
+                 t_k=tk, t_time=tt, **routing_kw)
+    return build_system(spec, index, corpus=corpus, models=system.models,
+                        ltr=system.ltr)
+
+
+def test_disabled_dense_is_bit_inert(fitted):
+    """enabled=False — even with every other knob set — must be provably
+    absent: identical top-k, final lists, and modeled latency."""
+    corpus, index, ql, _, _ = fitted
+    base = _system(fitted)
+    off = _system(fitted, dense=DenseSpec(enabled=False, embed_dim=64,
+                                          theta_high=0.4, theta_low=0.3),
+                  fusion=FusionSpec(method="weighted", w_dense=0.9))
+    assert off.dense is None
+    ra = base.serve(ql.terms, ql.mask, ql.topic)
+    rb = off.serve(ql.terms, ql.mask, ql.topic)
+    np.testing.assert_array_equal(ra.topk, rb.topk)
+    np.testing.assert_array_equal(ra.final, rb.final)
+    np.testing.assert_array_equal(ra.latency, rb.latency)
+    assert ra.dense is None and rb.dense is None
+
+
+def test_disabled_dense_online_event_log_identical(fitted):
+    corpus, index, ql, _, _ = fitted
+    traffic = TrafficSpec(arrival="bursty", qps=300.0, skew=0.6, seed=9)
+    oa = _system(fitted).serve_online(ql.terms, ql.mask, ql.topic,
+                                      traffic=traffic)
+    ob = _system(fitted, dense=DenseSpec(enabled=False, theta_high=0.4)
+                 ).serve_online(ql.terms, ql.mask, ql.topic,
+                                traffic=traffic)
+    assert oa.event_log == ob.event_log
+    assert "dense" not in oa.stats and "dense" not in ob.stats
+
+
+def test_route_sig_modality_suffix():
+    """The cache key's route signature embeds the resolved modality; the
+    empty default keeps dense-free keys byte-identical to the pre-dense
+    format."""
+    base = route_sig(True, 4096.0, 64.0)
+    assert route_sig(True, 4096.0, 64.0, b"") == base
+    tagged = {route_sig(True, 4096.0, 64.0, b"|M%d" % m)
+              for m in (M_LEX, M_DENSE, M_BOTH)}
+    assert len(tagged) == 3 and base not in tagged
+
+
+def test_modality_dispatch_extremes(fitted):
+    corpus, index, ql, _, _ = fitted
+    q = len(ql.terms)
+    all_lex = _system(fitted, dense=DenseSpec(enabled=True,
+                                              source="synthetic",
+                                              t_dense=1e9))
+    r = all_lex.serve(ql.terms, ql.mask, ql.topic)
+    assert r.stats["dense"]["lexical"] == q
+    np.testing.assert_array_equal(r.dense["modality"],
+                                  np.full(q, M_LEX))
+    all_dense = _system(fitted, dense=DenseSpec(enabled=True,
+                                                source="synthetic",
+                                                t_dense=1e-6))
+    r2 = all_dense.serve(ql.terms, ql.mask, ql.topic)
+    assert r2.stats["dense"]["dense_only"] == q
+    # dense-only candidates come from the dense engine verbatim
+    q_emb = all_dense.dense.embed(ql.terms, ql.mask)
+    ids, _ = all_dense.dense.serve(q_emb, all_dense.k_serve)
+    np.testing.assert_array_equal(r2.topk, ids)
+
+
+def test_mixed_dispatch_within_bound(fitted):
+    corpus, index, ql, _, _ = fitted
+    for method in ("rrf", "weighted"):
+        sy = _system(fitted, dense=DenseSpec(enabled=True,
+                                             source="synthetic"),
+                     fusion=FusionSpec(method=method))
+        r = sy.serve(ql.terms, ql.mask, ql.topic)
+        d = r.stats["dense"]
+        assert (d["lexical"] + d["dense_only"] + d["fused"]
+                == len(ql.terms))
+        assert r.stats["over_budget"] == 0
+        assert float(np.max(r.latency)) <= sy.worst_case_us() + 1e-9
+
+
+def test_theta_high_skips_stage2_rank_safely(fitted):
+    corpus, index, ql, _, _ = fitted
+    sy = _system(fitted, dense=DenseSpec(enabled=True, source="synthetic",
+                                         t_dense=1e-6, theta_high=-1.0))
+    r = sy.serve(ql.terms, ql.mask, ql.topic)
+    q = len(ql.terms)
+    assert r.stats["dense"]["theta_skips"] == q
+    # the skip serves the Stage-1 order: final head == top-k head
+    np.testing.assert_array_equal(r.final, r.topk[:, : r.final.shape[1]])
+    assert float(np.max(r.latency)) <= sy.worst_case_us() + 1e-9
+
+
+def test_theta_low_falls_back_to_lexical(fitted):
+    corpus, index, ql, _, _ = fitted
+    sy = _system(fitted, dense=DenseSpec(enabled=True, source="synthetic",
+                                         t_dense=1e-6, theta_low=10.0))
+    r = sy.serve(ql.terms, ql.mask, ql.topic)
+    q = len(ql.terms)
+    assert r.stats["dense"]["fallbacks"] == q
+    # fallback replaces dense candidates with a lexical re-issue
+    q_emb = sy.dense.embed(ql.terms, ql.mask)
+    d_ids, _ = sy.dense.serve(q_emb, sy.k_serve)
+    assert not np.array_equal(r.topk, d_ids)
+    assert float(np.max(r.latency)) <= sy.worst_case_us() + 1e-9
+    assert r.stats["over_budget"] == 0
+
+
+def test_worst_case_bound_accounts_for_dense_routes(fitted):
+    base = _system(fitted)
+    dense = _system(fitted, dense=DenseSpec(enabled=True,
+                                            source="synthetic"))
+    with_fb = _system(fitted, dense=DenseSpec(enabled=True,
+                                              source="synthetic",
+                                              theta_low=0.1))
+    assert dense.worst_case_us() >= base.worst_case_us() - 1e-9
+    assert dense._budget_reserve["fusion"] == dense.cost.fusion_us
+    # at this collection's tile count the lexical late-hedge path (which
+    # already contains a full rho_late SAAT re-issue) dominates, so the
+    # theta_low fallback is absorbed by the same bound ...
+    assert with_fb.worst_case_us() == dense.worst_case_us()
+    # ... but once the dense route dominates (inflated tile count), a
+    # finite theta_low must charge the lexical fallback on top
+    for sy in (dense, with_fb):
+        sy.dense.max_tiles = lambda: 100_000
+    assert with_fb.worst_case_us() > dense.worst_case_us()
+    fb = float(dense.cost.saat_time(
+        np.float64(dense.sched.cfg.resolved_late_rho())))
+    assert (with_fb.worst_case_us() - dense.worst_case_us()
+            == pytest.approx(fb - dense.cost.fusion_us))
+
+
+def test_multishard_dense_serve_matches_singleshard(fitted):
+    corpus, index, ql, _, _ = fitted
+    ds = DenseSpec(enabled=True, source="synthetic")
+    one = _system(fitted, dense=ds)
+    three = _system(fitted, dense=ds,
+                    deploy=DeploySpec(n_shards=3, replicas=2))
+    r1 = one.serve(ql.terms, ql.mask, ql.topic)
+    r3 = three.serve(ql.terms, ql.mask, ql.topic)
+    np.testing.assert_array_equal(r1.topk, r3.topk)
+    np.testing.assert_array_equal(r1.final, r3.final)
+    assert float(np.max(r3.latency)) <= three.worst_case_us() + 1e-9
+
+
+def test_cache_replays_dense_results_bitwise(fitted):
+    corpus, index, ql, _, _ = fitted
+    sy = _system(fitted, dense=DenseSpec(enabled=True, source="synthetic",
+                                         theta_high=0.55),
+                 cache=CacheSpec(enabled=True))
+    r1 = sy.serve(ql.terms, ql.mask, ql.topic)
+    r2 = sy.serve(ql.terms, ql.mask, ql.topic)
+    assert sy.cache.counters["l1_hits"] == len(ql.terms)
+    np.testing.assert_array_equal(r1.topk, r2.topk)
+    np.testing.assert_array_equal(r1.final, r2.final)
+    np.testing.assert_array_equal(r1.dense["theta_skip"],
+                                  r2.dense["theta_skip"])
+
+
+def test_online_dense_stats_and_guarantee(fitted):
+    corpus, index, ql, _, _ = fitted
+    sy = _system(fitted, dense=DenseSpec(enabled=True, source="synthetic"))
+    res = sy.serve_online(ql.terms, ql.mask, ql.topic,
+                          traffic=TrafficSpec(arrival="poisson", qps=200.0,
+                                              seed=4))
+    d = res.stats["dense"]
+    assert (d["lexical"] + d["dense_only"] + d["fused"]
+            == res.stats["served"])
+    assert res.stats["over_budget"] == 0
