@@ -1,0 +1,279 @@
+"""Live-ingest certification: serving must stay inside the response-time
+guarantee while the collection mutates, and a background merge must land
+exactly where a from-scratch rebuild would.
+
+Four studies over one fitted cascade (frozen thresholds, jnp backend):
+
+* **post-merge bit parity** — serve → ingest a feed → merge; the resealed
+  index and the post-merge results (top-k, final, modeled latency) must be
+  **bit-identical** to a system built from scratch over the extended
+  collection with the same spec.
+* **worst-case accounting** — attaching a delta raises ``worst_case_us()``
+  by exactly the capacity-sized delta-scan term (``CostModel.delta_time``
+  at the postings capacity): the live scan is charged into the analytic
+  bound, never absorbed silently.
+* **inert mode** — ``IngestSpec(enabled=False)`` must be provably absent:
+  offline serving bit-identical and the online event log tuple-identical
+  to a spec with no ingest node at all.
+* **serve-while-ingesting sweep** — offered load x {ingest on, off} with
+  the seeded feed landing between queries and merges running on the same
+  virtual clock.  Gate: **zero** response-budget violations everywhere,
+  with the feed actually applied (non-vacuous).
+
+Emits ``results/BENCH_ingest.json``; the CLI exits non-zero if any gate
+fails.  CI runs it as a smoke.  Run standalone with
+``PYTHONPATH=src:. python benchmarks/bench_ingest.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.bench_online import _build
+from benchmarks.common import write_bench_artifact
+
+
+def _index_identical(a, b) -> bool:
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, np.ndarray) or isinstance(vb, np.ndarray):
+            if not np.array_equal(np.asarray(va), np.asarray(vb)):
+                return False
+        elif va != vb:
+            return False
+    return True
+
+
+def _cell(res) -> dict:
+    s = res.stats
+    out = {
+        "served": s["served"], "shed": s["shed"],
+        "over_budget": s["over_budget"],
+        "modes": s["modes"],
+        "p50": s["response"]["p50"] if "response" in s else None,
+        "p99.99": s["response"]["p99.99"] if "response" in s else None,
+        "achieved_qps": s.get("achieved_qps"),
+    }
+    if "ingest" in s:
+        i = s["ingest"]
+        out["ingest"] = {
+            "feed_batches_applied": i["feed_batches_applied"],
+            "feed_batches_due": i["feed_batches_due"],
+            "feed_throttled": i.get("feed_throttled", 0),
+            "docs_ingested": i["docs_ingested"],
+            "merges": i["merges"],
+            "merge_deferred": i.get("merge_deferred", 0),
+            "merges_forced": i.get("merges_forced", 0),
+            "fill": i["fill"],
+        }
+    return out
+
+
+def run_ingest(q_batch: int = 384, n_docs: int = 4096, seed: int = 7,
+               loads: tuple = (0.5, 0.8, 0.95),
+               feed_docs: int = 128,
+               max_batch: int = 16, backend: str = "jnp") -> dict:
+    from repro.configs.cascade_presets import get_preset
+    from repro.index.builder import build_index
+    from repro.index.corpus import (extend_corpus, slice_feed,
+                                    synthesize_feed_docs)
+    from repro.serving.online import estimate_capacity
+    from repro.serving.spec import IngestSpec, TrafficSpec
+    from repro.serving.system import build_system
+
+    corpus, base, ql, fit_sys = _build(q_batch, n_docs, seed, backend,
+                                       max_batch)
+    index, models, ltr = fit_sys.index, fit_sys.models, fit_sys.ltr
+    cost = fit_sys.cost
+    # the shipped operating point's delta sizing (budget-sized capacities)
+    ing = get_preset("live_ingest").ingest
+
+    def system(ingest: IngestSpec | None = None, idx=None, corp=None):
+        spec = base if ingest is None else dataclasses.replace(base,
+                                                               ingest=ingest)
+        return build_system(spec, idx if idx is not None else index,
+                            corpus=corp if corp is not None else corpus,
+                            models=models, ltr=ltr, cost=cost)
+
+    # ---- post-merge bit parity vs the from-scratch rebuild oracle ----
+    on_sys = system(ing)
+    feed = synthesize_feed_docs(corpus, feed_docs, seed=seed + 3)
+    took = on_sys.add_documents(feed)
+    mid = on_sys.serve(ql.terms, ql.mask, ql.topic)
+    live_hits = int((np.asarray(mid.topk) >= index.n_docs).sum())
+    merged = on_sys.merge()
+    after = on_sys.serve(ql.terms, ql.mask, ql.topic)
+    # the delta admits the longest capacity-fitting prefix; the rebuild
+    # oracle must see exactly the admitted docs
+    ext = extend_corpus(corpus, slice_feed(feed, 0, took))
+    oracle_idx = build_index(ext, stop_k=base.index.stop_k)
+    fresh = system(ing, idx=oracle_idx, corp=ext)
+    ref = fresh.serve(ql.terms, ql.mask, ql.topic)
+    parity = {
+        "docs_ingested": int(took), "docs_merged": int(merged),
+        "live_candidate_slots": live_hits,
+        "index_identical": _index_identical(on_sys.index, oracle_idx),
+        "topk_identical": bool(np.array_equal(after.topk, ref.topk)),
+        "final_identical": bool(np.array_equal(after.final, ref.final)),
+        "latency_identical": bool(np.array_equal(after.latency,
+                                                 ref.latency)),
+    }
+
+    # ---- worst-case accounting of the live delta scan ----
+    off_sys = system()
+    wc_off = float(off_sys.worst_case_us())
+    wc_on = float(system(ing).worst_case_us())
+    delta_term = float(cost.delta_time(ing.delta_postings))
+    accounting = {
+        "worst_case_off": wc_off, "worst_case_on": wc_on,
+        "delta_scan_term": delta_term,
+        "budget": float(base.routing.budget),
+        "covers_delta": bool(wc_on >= wc_off + delta_term - 1e-9),
+    }
+
+    # ---- inert mode: enabled=False == no ingest node, bit for bit ----
+    inert_spec = IngestSpec(enabled=False, delta_docs=ing.delta_docs,
+                            feed_qps=ing.feed_qps)
+    sys_a, sys_b = system(), system(inert_spec)
+    ra = sys_a.serve(ql.terms, ql.mask, ql.topic)
+    rb = sys_b.serve(ql.terms, ql.mask, ql.topic)
+    capacity = estimate_capacity(system(), ql.terms, ql.mask, ql.topic)
+    traffic_i = TrafficSpec(arrival="bursty", qps=0.8 * capacity,
+                            seed=seed + 1)
+    oa = system().serve_online(ql.terms, ql.mask, ql.topic,
+                               traffic=traffic_i)
+    ob = system(inert_spec).serve_online(ql.terms, ql.mask, ql.topic,
+                                         traffic=traffic_i)
+    inert = {
+        "delta_absent": bool(sys_b.delta is None),
+        "offline_topk_identical": bool(np.array_equal(ra.topk, rb.topk)),
+        "offline_final_identical": bool(np.array_equal(ra.final, rb.final)),
+        "offline_latency_identical": bool(np.array_equal(ra.latency,
+                                                         rb.latency)),
+        "online_event_log_identical": bool(oa.event_log == ob.event_log),
+        "worst_case_identical": bool(sys_a.worst_case_us()
+                                     == sys_b.worst_case_us()),
+    }
+
+    # ---- serve-while-ingesting sweep: zero violations under mutation ----
+    # load is relative to the LIVE system's capacity: the delta-scan term
+    # is part of every query's service time, so the mutable operating
+    # point saturates earlier than the sealed one — that cost is the
+    # price of ingest and the sweep prices it honestly (the sealed side
+    # runs at the same offered qps for comparison)
+    capacity_live = estimate_capacity(system(ing), ql.terms, ql.mask,
+                                      ql.topic)
+    sweep = []
+    for load in loads:
+        traffic = TrafficSpec(arrival="bursty", qps=load * capacity_live,
+                              seed=seed + 1)
+        r_on = system(ing).serve_online(ql.terms, ql.mask, ql.topic,
+                                        traffic=traffic)
+        r_off = system().serve_online(ql.terms, ql.mask, ql.topic,
+                                      traffic=traffic)
+        sweep.append({"load": load, "qps": float(load * capacity_live),
+                      "on": _cell(r_on), "off": _cell(r_off)})
+
+    enforced = [r[s] for r in sweep for s in ("on", "off")]
+    applied = sum(r["on"]["ingest"]["feed_batches_applied"] for r in sweep)
+    ingested = sum(r["on"]["ingest"]["docs_ingested"] for r in sweep)
+
+    payload = {
+        "config": {"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
+                   "backend": backend, "max_batch": max_batch,
+                   "loads": list(loads), "feed_docs": feed_docs,
+                   "ingest": {"delta_docs": ing.delta_docs,
+                              "delta_postings": ing.delta_postings,
+                              "feed_qps": ing.feed_qps,
+                              "feed_batch": ing.feed_batch,
+                              "merge_threshold": ing.merge_threshold}},
+        "capacity_qps": {"sealed": float(capacity),
+                         "live": float(capacity_live)},
+        "parity": parity,
+        "accounting": accounting,
+        "inert": inert,
+        "sweep": sweep,
+        "gates": {},
+    }
+    payload["gates"] = {
+        "post_merge_bit_parity": (parity["index_identical"]
+                                  and parity["topk_identical"]
+                                  and parity["final_identical"]
+                                  and parity["latency_identical"]),
+        "worst_case_covers_delta": accounting["covers_delta"],
+        "inert_bit_identical": all(inert.values()),
+        "zero_violations": all(c["over_budget"] == 0 for c in enforced),
+        "ingest_nonvacuous": (applied > 0 and ingested > 0
+                              and parity["live_candidate_slots"] > 0),
+    }
+    payload["artifact"] = write_bench_artifact("ingest", payload)
+    return payload
+
+
+def render_ingest(res: dict) -> str:
+    p, a, i = res["parity"], res["accounting"], res["inert"]
+    lines = [
+        f"post-merge parity: index={p['index_identical']} "
+        f"topk={p['topk_identical']} final={p['final_identical']} "
+        f"latency={p['latency_identical']} "
+        f"(ingested {p['docs_ingested']}, merged {p['docs_merged']}, "
+        f"{p['live_candidate_slots']} live candidate slots pre-merge)",
+        f"worst case: off={a['worst_case_off']:.2f} "
+        f"on={a['worst_case_on']:.2f} "
+        f"(delta term {a['delta_scan_term']:.2f}, "
+        f"budget {a['budget']:.0f}) covered={a['covers_delta']}",
+        f"inert: {'identical' if all(i.values()) else 'DIVERGED'} "
+        f"(offline+online vs no-ingest spec)",
+        "load,side,served,shed,over,full,batches_applied/due,throttled,"
+        "merges(def/forced)",
+    ]
+    for r in res["sweep"]:
+        for side in ("on", "off"):
+            c = r[side]
+            if side == "on":
+                g = c["ingest"]
+                tail = (f"{g['feed_batches_applied']}/"
+                        f"{g['feed_batches_due']},{g['feed_throttled']},"
+                        f"{g['merges']}({g['merge_deferred']}/"
+                        f"{g['merges_forced']})")
+            else:
+                tail = "-,-,-"
+            lines.append(f"{r['load']:.2f},{side},{c['served']},"
+                         f"{c['shed']},{c['over_budget']},"
+                         f"{c['modes']['full']},{tail}")
+    g = res["gates"]
+    lines.append("gates: " + ", ".join(f"{k}={v}" for k, v in g.items()))
+    return "\n".join(lines)
+
+
+def main() -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--q-batch", type=int, default=384)
+    ap.add_argument("--n-docs", type=int, default=4096)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--loads", type=float, nargs="+",
+                    default=[0.5, 0.8, 0.95])
+    ap.add_argument("--feed-docs", type=int, default=128)
+    ap.add_argument("--backend", default="jnp",
+                    help="jnp gives the bit-identical parity checks")
+    args = ap.parse_args()
+    res = run_ingest(q_batch=args.q_batch, n_docs=args.n_docs,
+                     seed=args.seed, loads=tuple(args.loads),
+                     feed_docs=args.feed_docs,
+                     max_batch=args.max_batch, backend=args.backend)
+    print(render_ingest(res))
+    print(f"artifact: {res['artifact']}")
+    failed = [k for k, v in res["gates"].items() if not v]
+    if failed:
+        print(f"INGEST CERTIFICATION FAILED: {', '.join(failed)}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -39,9 +39,10 @@ def main() -> None:
 
     from benchmarks import (bench_cache, bench_dense, bench_engines,
                             bench_faults, bench_heldout, bench_hybrid,
-                            bench_kernels, bench_online, bench_predict_k,
-                            bench_predict_rho, bench_predict_time,
-                            bench_system, bench_tail, bench_tail_overlap)
+                            bench_ingest, bench_kernels, bench_online,
+                            bench_predict_k, bench_predict_rho,
+                            bench_predict_time, bench_system, bench_tail,
+                            bench_tail_overlap)
     from benchmarks.common import load_experiment
 
     t0 = time.time()
@@ -114,6 +115,31 @@ def main() -> None:
     if not ch["gates"]["hits_nonvacuous"]:
         raise RuntimeError("cache benchmark lost its teeth: the hot-skew "
                            "trace produced almost no L1 hits")
+
+    _section("Live ingest (post-merge parity, delta accounting, "
+             "backpressure)")
+    ig = bench_ingest.run_ingest()
+    print(bench_ingest.render_ingest(ig))
+    print(f"artifact: {ig['artifact']}")
+    if not ig["gates"]["post_merge_bit_parity"]:
+        raise RuntimeError("merge parity regressed: the post-merge index "
+                           "or results diverged from a from-scratch "
+                           "rebuild over the extended collection")
+    if not ig["gates"]["worst_case_covers_delta"]:
+        raise RuntimeError("delta accounting regressed: worst_case_us no "
+                           "longer covers the capacity-sized live "
+                           "delta-scan term")
+    if not ig["gates"]["inert_bit_identical"]:
+        raise RuntimeError("ingest machinery is not inert: a disabled "
+                           "IngestSpec perturbed mutation-free serving")
+    if not ig["gates"]["zero_violations"]:
+        raise RuntimeError("response-time guarantee regressed under "
+                           "mutation: a served query exceeded the "
+                           "response budget while the feed was landing")
+    if not ig["gates"]["ingest_nonvacuous"]:
+        raise RuntimeError("ingest benchmark lost its teeth: no feed "
+                           "batch was applied or no live doc ever "
+                           "surfaced in a candidate list")
 
     _section("Dense retrieval + hybrid fusion (parity, speedup, routes)")
     dn = bench_dense.run_dense()

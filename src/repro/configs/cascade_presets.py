@@ -33,6 +33,14 @@ cached         The paper point with the two-level result cache in front
                skewed traffic.  Threshold adaptation is frozen
                (``adapt_every=0``) so cache keys — which embed the route
                signature — stay stable across the trace.
+live_ingest    The paper point serving while the collection mutates: a
+               capacity-bounded delta tile-set absorbs a seeded document
+               feed (its worst-case scan charged into every query's bound
+               and into admission), background merges reseal the index in
+               idle gaps — deferred under load, forced only when the delta
+               is full — and the feed throttles strictly before queries
+               degrade.  Adaptation frozen like ``cached``: ingest bumps
+               the cache epoch, stable routes keep replay deterministic.
 hybrid_fusion  The paper point with the dense Stage-1 modality enabled:
                Stage-0 dispatches each query lexical / dense / both+fused
                from its predicted traversal time, both-routed lists merge
@@ -66,8 +74,8 @@ from __future__ import annotations
 import dataclasses
 
 from repro.serving.spec import (CacheSpec, CascadeSpec, DenseSpec,
-                                DeploySpec, FusionSpec, OnlineSpec,
-                                RoutingSpec, Stage2Spec)
+                                DeploySpec, FusionSpec, IngestSpec,
+                                OnlineSpec, RoutingSpec, Stage2Spec)
 
 
 def _paper_200ms() -> CascadeSpec:
@@ -158,6 +166,31 @@ def _cached() -> CascadeSpec:
     )
 
 
+def _live_ingest() -> CascadeSpec:
+    # the delta capacities are budget-sized, not storage-sized: the
+    # worst-case delta scan (delta_time(8192 postings) + the dense tiles
+    # over 256 capacity docs when dense is on) is charged into EVERY
+    # query's bound, so an oversized delta would push the full-service
+    # floor past the 200 ms budget and shed everything.  delta_docs must
+    # also stay >= k_serve so the delta pseudo-shard can fill a top-k.
+    # adapt_every=0 for the same reason as `cached`: ingest bumps the
+    # cache epoch on every applied batch, and stable route signatures
+    # keep the event log replayable bit-for-bit.
+    return CascadeSpec(
+        name="live_ingest",
+        routing=RoutingSpec(algorithm=2, budget=200.0, rho_max=1 << 18,
+                            hedge_deadline=0.5, late_rho=4096,
+                            adapt_every=0, calibrate=True),
+        stage2=Stage2Spec(enabled=True, k_serve=128, t_final=10),
+        deploy=DeploySpec(n_shards=1, replicas=2),
+        online=OnlineSpec(max_batch=32, batch_deadline_us=5.0,
+                          admission=True, degrade=True),
+        ingest=IngestSpec(enabled=True, delta_docs=256, delta_postings=8192,
+                          feed_qps=8.0, feed_batch=16,
+                          merge_threshold=0.6),
+    )
+
+
 def _hybrid_fusion() -> CascadeSpec:
     # theta bands sit inside the observed top-1 dense score range of both
     # embedding sources (~0.23–0.58 on the experiment collection), so all
@@ -186,6 +219,7 @@ PRESETS = {
     "stage1_only": _stage1_only,
     "fault_tolerant": _fault_tolerant,
     "cached": _cached,
+    "live_ingest": _live_ingest,
     "hybrid_fusion": _hybrid_fusion,
 }
 

@@ -127,3 +127,45 @@ def build_embeddings(dense_spec, corpus=None, *, n_docs: int,
         return two_tower_embeddings(corpus, seed=dense_spec.seed)
     return synthetic_embeddings(n_docs, vocab, d=dense_spec.embed_dim,
                                 seed=dense_spec.seed)
+
+
+def delta_doc_embeddings(dense_spec, *, n_sealed: int, n_new: int,
+                         vocab: int, topics: np.ndarray | None = None,
+                         corpus=None) -> np.ndarray:
+    """(n_new, d) rows for docs appended at global ids >= ``n_sealed``.
+
+    Both sources are per-row functions of the (global doc id, doc features)
+    pair — the synthetic table because RandomState fills row-major (the
+    first ``n`` rows of a grown draw equal the ``n``-doc draw bitwise), the
+    two-tower path because the item tower sees only (dominant topic,
+    doc id).  So incrementally embedding the delta through the same
+    quantized source is bit-identical to slicing a full rebuild at the
+    grown size — the property the delta-vs-rebuild dense parity test pins.
+    """
+    source = dense_spec.source
+    if source == "auto":
+        source = "two_tower" if corpus is not None else "synthetic"
+    if source == "two_tower":
+        import jax
+        import jax.numpy as jnp
+
+        from repro.configs.two_tower_retrieval import REDUCED
+        from repro.models import recsys
+
+        if topics is None:
+            raise ValueError("two_tower delta embeddings need the feed "
+                             "docs' topic mixtures")
+        c = REDUCED
+        params, _ = recsys.init(c, jax.random.PRNGKey(dense_spec.seed))
+        topic = np.argmax(np.asarray(topics), axis=1)
+        gids = np.arange(n_sealed, n_sealed + n_new, dtype=np.int64)
+        doc_ids = np.stack([topic % c.n_items, gids % c.n_items], axis=1)
+        doc_mask = np.ones_like(doc_ids, np.float32)
+        emb = recsys.tower_embed(params, c, "item_table", "item_mlp",
+                                 jnp.asarray(doc_ids),
+                                 jnp.asarray(doc_mask))
+        return quantize(np.asarray(emb))
+    full, _ = synthetic_embeddings(n_sealed + n_new, vocab,
+                                   d=dense_spec.embed_dim,
+                                   seed=dense_spec.seed)
+    return full[n_sealed:]

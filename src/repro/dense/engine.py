@@ -55,6 +55,10 @@ class DenseEngine:
         self.shard_emb = [jnp.asarray(self.doc_emb[lo:hi])
                           for lo, hi in ranges]
         self.shard_docs = [hi - lo for lo, hi in ranges]
+        # live delta segment (capacity-padded, appended above the ranges)
+        self.delta_emb = None
+        self.delta_live = 0
+        self.delta_lo = 0
 
     @property
     def n_shards(self) -> int:
@@ -72,6 +76,29 @@ class DenseEngine:
         """(Q, d) quantized query embeddings (row-independent)."""
         return embed_queries(self.term_table, terms, mask)
 
+    def set_delta(self, emb: np.ndarray, n_live: int, doc_lo: int) -> None:
+        """Attach/refresh the live delta segment.
+
+        ``emb`` is the capacity-padded (cap, d) quantized matrix (rows
+        >= ``n_live`` are ghosts), ``doc_lo`` the global id of delta doc 0.
+        The shape is the fixed delta capacity so the kernel signature never
+        changes as documents stream in.
+        """
+        self.delta_emb = jnp.asarray(np.asarray(emb, np.float32))
+        self.delta_live = int(n_live)
+        self.delta_lo = int(doc_lo)
+
+    def clear_delta(self) -> None:
+        self.delta_emb = None
+        self.delta_live = 0
+        self.delta_lo = 0
+
+    def delta_tiles(self) -> int:
+        """Kernel grid tiles the delta scan adds to every query's cost."""
+        if self.delta_emb is None:
+            return 0
+        return -(-int(self.delta_emb.shape[0]) // self.tile_d)
+
     def serve(self, q_emb: np.ndarray, k: int, drop=None):
         """Scatter-gather dense top-k: (ids, scores), each (Q, k).
 
@@ -87,13 +114,34 @@ class DenseEngine:
                                  tile_d=self.tile_d, backend=self.backend)
             sc_list.append(sc)
             id_list.append(ids + self.doc_lo[s])
-        if self.n_shards == 1:
+        if self.n_shards == 1 and self.delta_emb is None:
             ids = np.asarray(id_list[0]).astype(np.int64)
             sc = np.asarray(sc_list[0])
             if drop is not None and drop[0].any():
                 ids[drop[0]] = -1
                 sc[drop[0]] = SCORE_FILL
             return ids, sc
+        if self.delta_emb is not None:
+            # Rank the WHOLE delta segment (its capacity is small and
+            # static), then mask ghost rows explicitly: a ghost's zero
+            # vector scores 0, which would outrank genuinely negative live
+            # scores, and requesting only k could let ghosts displace live
+            # docs from the candidate list. A full ranking plus post-mask
+            # makes padding provably inert.
+            cap = int(self.delta_emb.shape[0])
+            dsc, dids = dense_topk(jnp.asarray(q_emb), self.delta_emb, cap,
+                                   tile_d=self.tile_d, backend=self.backend)
+            dsc = np.asarray(dsc).copy()
+            dids = np.asarray(dids)
+            ghost = dids >= self.delta_live
+            dsc[ghost] = SCORE_FILL
+            dids = np.where(ghost, -1, dids + self.delta_lo)
+            sc_list.append(dsc)
+            id_list.append(dids)
+            if drop is not None:
+                drop = np.concatenate(
+                    [np.asarray(drop),
+                     np.zeros((1, np.asarray(drop).shape[1]), bool)])
         ids, sc = merge_shard_topk(sc_list, id_list, k, drop=drop)
         return np.asarray(ids).astype(np.int64), np.asarray(sc)
 

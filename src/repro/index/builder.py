@@ -4,6 +4,15 @@
 Mirrors the paper's setup: one corpus, two physical index layouts serving as
 "index mirrors" on different ISN replicas — a BMW-style block-max index for
 rank-safe DAAT and an ATIRE/JASS-style impact-ordered index for anytime SAAT.
+
+The assembly core is shared between two producers:
+
+* ``build_index`` — the sealed from-scratch build (stoplist derived from the
+  corpus, collection statistics computed over the postings being indexed);
+* the live **delta tile-set** (``index/delta.py``) — an append-only segment
+  over freshly fed documents, scored with the *frozen* statistics of the
+  sealed index (``CollectionStats``) so live results converge bit-exactly to
+  the post-merge rebuild once the delta is folded in.
 """
 
 from __future__ import annotations
@@ -49,9 +58,40 @@ class InvertedIndex:
     # stage-0 features
     term_stats: np.ndarray         # (V, 36) float32
 
+    # term ids dropped at build time (the stop_k most frequent); retained so
+    # a live delta segment applies the same stoplist to incoming feed docs
+    stoplist: np.ndarray = None    # (S,) int64
+
     @property
     def n_postings(self) -> int:
         return self.docs.shape[0]
+
+
+@dataclass(frozen=True)
+class CollectionStats:
+    """Collection-level quantities that price a posting.
+
+    A live delta segment scores its postings with the *sealed* index's stats
+    (frozen at seal time) rather than its own — otherwise per-posting scores
+    would drift as the delta grows and live results could never match the
+    post-merge rebuild posting-for-posting.
+    """
+    n_docs: int
+    avg_dl: float
+    total_tokens: float
+    df: np.ndarray                 # (V,) float64
+    cf: np.ndarray                 # (V,) float64
+    quant_scale: float             # frozen impact quantization scale
+
+
+def frozen_stats(index: InvertedIndex) -> CollectionStats:
+    """Snapshot the scoring statistics of a sealed index."""
+    return CollectionStats(
+        n_docs=index.n_docs, avg_dl=index.avg_dl,
+        total_tokens=index.total_tokens,
+        df=np.asarray(index.df, np.float64),
+        cf=np.asarray(index.cf, np.float64),
+        quant_scale=index.quant_scale)
 
 
 def _per_term_stats(term_ids, scores, offsets, df, vocab):
@@ -83,10 +123,11 @@ def _per_term_stats(term_ids, scores, offsets, df, vocab):
     return np.where(has[:, None], cols, 0.0).astype(np.float32)
 
 
-def bucket_postings_by_tile(docs: np.ndarray, terms: np.ndarray,
-                            values: list[tuple[np.ndarray, float, np.dtype]],
-                            n_docs: int, tile_d: int,
-                            lane_multiple: int = 128):
+def pack_tiles(docs: np.ndarray, terms: np.ndarray,
+               values: list[tuple[np.ndarray, float, np.dtype]],
+               n_docs: int, tile_d: int,
+               lane_multiple: int = 128,
+               tile_cap: int | None = None):
     """Pre-tile postings into ``(n_tiles, cap)`` doc-local buckets.
 
     This is the build-time half of the serving kernels' one-doc-tile-per-
@@ -94,6 +135,9 @@ def bucket_postings_by_tile(docs: np.ndarray, terms: np.ndarray,
     tile, doc ids are rebased to be tile-local, and each bucket is padded to
     a common lane-aligned ``cap`` so the whole structure is a dense
     ``(n_tiles, cap)`` array the kernels can view with zero per-query copies.
+
+    The one tiling helper shared by the sealed build, the append-only delta
+    tile-set, and the merge re-tile.
 
     Args:
       docs: (P,) doc ids local to the shard.
@@ -103,6 +147,9 @@ def bucket_postings_by_tile(docs: np.ndarray, terms: np.ndarray,
       n_docs: shard size (defines the tile count).
       tile_d: docs per tile; must match the kernels' accumulator tile.
       lane_multiple: pad cap to a multiple of this (TPU lane width).
+      tile_cap: pin the lane capacity to this static value instead of the
+        data-derived one — the delta tile-set passes its postings capacity so
+        every rebuild keeps a single jit signature as documents stream in.
 
     Returns:
       (tile_docs, tile_terms, bucketed_values, cap) where ``tile_docs`` is
@@ -116,6 +163,10 @@ def bucket_postings_by_tile(docs: np.ndarray, terms: np.ndarray,
     counts = np.bincount(tile, minlength=n_tiles)
     cap = max(int(counts.max()) if p else 0, 1)
     cap = -(-cap // lane_multiple) * lane_multiple
+    if tile_cap is not None:
+        if tile_cap < cap:
+            raise ValueError(f"tile_cap={tile_cap} below required cap={cap}")
+        cap = tile_cap
 
     order = np.argsort(tile, kind="stable")   # keeps (term, doc) order in-tile
     tsort = tile[order]
@@ -136,77 +187,127 @@ def bucket_postings_by_tile(docs: np.ndarray, terms: np.ndarray,
             bucketed, cap)
 
 
-def build_index(corpus: Corpus, block_size: int = 64,
-                n_levels: int = 255, stop_k: int = 64) -> InvertedIndex:
-    n, v = corpus.n_docs, corpus.vocab
-    term = corpus.postings_term
-    doc = corpus.postings_doc
-    tf = corpus.postings_tf.astype(np.float64)
+def impact_order_layout(term: np.ndarray, doc: np.ndarray,
+                        impact: np.ndarray, vocab: int):
+    """Impact-ordered mirror layout shared by the monolithic build and the
+    per-shard slicer: the per-term impact-descending (doc-ascending within a
+    level) permutation plus the (V, 256) cumulative level table
+    ``level_cum[t, l] = # postings of t with impact >= l``."""
+    order = np.lexsort((doc, -impact.astype(np.int32), term))
+    lvl = np.bincount(term.astype(np.int64) * 256 + impact,
+                      minlength=vocab * 256).reshape(vocab, 256)
+    level_cum = np.flip(np.cumsum(np.flip(lvl, axis=1), axis=1),
+                        axis=1).astype(np.int32)
+    return order, level_cum
 
-    if stop_k > 0:
-        # stop the collection (paper: Indri stoplist): drop the stop_k most
-        # frequent terms from the index entirely
-        cf_all = np.bincount(term, weights=tf, minlength=v)
-        stopped = np.argsort(-cf_all)[:stop_k]
-        keep = ~np.isin(term, stopped)
-        term, doc, tf = term[keep], doc[keep], tf[keep]
+
+def assemble_index(term: np.ndarray, doc: np.ndarray, tf: np.ndarray,
+                   doclen: np.ndarray, vocab: int, *,
+                   block_size: int = 64, n_levels: int = 255,
+                   stoplist: np.ndarray | None = None,
+                   frozen: CollectionStats | None = None) -> InvertedIndex:
+    """Assemble every index mirror from prepared postings.
+
+    ``term``/``doc``/``tf`` must already be stoplist-filtered and
+    (term, doc)-sorted; ``tf`` float64. With ``frozen`` set, per-posting
+    scores and impact quantization use those sealed collection statistics
+    instead of the combined ones — the live-delta discipline. Structural
+    quantities (df, offsets, layouts) always describe the postings given.
+    """
+    n, v = len(doclen), vocab
+    p = len(term)
 
     df = np.bincount(term, minlength=v).astype(np.int64)
     cf = np.bincount(term, weights=tf, minlength=v)
     offsets = np.zeros(v + 1, np.int64)
     np.cumsum(df, out=offsets[1:])
 
-    doclen = corpus.doclen.astype(np.float64)
-    dl = doclen[doc]
-    avg_dl = float(doclen.mean())
-    total_tokens = float(doclen.sum())
-    df_p = df[term].astype(np.float64)
-    cf_p = cf[term]
+    doclen_f = doclen.astype(np.float64)
+    dl = doclen_f[doc]
+    if frozen is None:
+        score_n = n
+        avg_dl = float(doclen_f.mean())
+        total_tokens = float(doclen_f.sum())
+        df_p = df[term].astype(np.float64)
+        cf_p = cf[term]
+        smax = None
+    else:
+        score_n = frozen.n_docs
+        avg_dl = frozen.avg_dl
+        total_tokens = frozen.total_tokens
+        df_p = frozen.df[term]
+        cf_p = frozen.cf[term]
+        smax = frozen.quant_scale
 
-    sims = scoring.all_similarity_scores(tf, df_p, cf_p, dl, n, avg_dl,
+    sims = scoring.all_similarity_scores(tf, df_p, cf_p, dl, score_n, avg_dl,
                                          total_tokens)  # (P, 6)
     bm25_sc = sims[:, 1].astype(np.float32)
-    impact, qmax = scoring.quantize_impacts(bm25_sc, n_levels)
+    impact, qmax = scoring.quantize_impacts(bm25_sc, n_levels, smax=smax)
 
     # ---- block-max structure ----
     n_blocks = (n + block_size - 1) // block_size
-    blk = (doc // block_size).astype(np.int64)
-    key = term.astype(np.int64) * n_blocks + blk
-    # postings are (term, doc)-sorted => (term, block) groups are contiguous
-    group_start = np.flatnonzero(np.r_[True, key[1:] != key[:-1]])
-    gmax = np.maximum.reduceat(impact.astype(np.int32), group_start)
-    gcount = np.diff(np.r_[group_start, len(key)])
-    gkey = key[group_start]
     block_max = np.zeros((v, n_blocks), np.uint8)
     block_count = np.zeros((v, n_blocks), np.uint16)
-    block_max.reshape(-1)[gkey] = gmax.astype(np.uint8)
-    block_count.reshape(-1)[gkey] = np.minimum(gcount, 65535).astype(np.uint16)
+    if p:
+        blk = (doc // block_size).astype(np.int64)
+        key = term.astype(np.int64) * n_blocks + blk
+        # postings are (term, doc)-sorted => (term, block) groups contiguous
+        group_start = np.flatnonzero(np.r_[True, key[1:] != key[:-1]])
+        gmax = np.maximum.reduceat(impact.astype(np.int32), group_start)
+        gcount = np.diff(np.r_[group_start, len(key)])
+        gkey = key[group_start]
+        block_max.reshape(-1)[gkey] = gmax.astype(np.uint8)
+        block_count.reshape(-1)[gkey] = \
+            np.minimum(gcount, 65535).astype(np.uint16)
 
     # ---- impact-ordered layout ----
-    order = np.lexsort((doc, -impact.astype(np.int32), term))
+    order, level_cum = impact_order_layout(term, doc, impact, v)
     docs_imp = doc[order]
     imp_sorted = impact[order]
-    lvl_counts = np.bincount(term.astype(np.int64) * 256 + impact,
-                             minlength=v * 256).reshape(v, 256)
-    # level_cum[v, l] = # postings of v with impact >= l
-    level_cum = np.flip(np.cumsum(np.flip(lvl_counts, axis=1), axis=1),
-                        axis=1).astype(np.int32)
 
     # ---- stage-0 term statistics table ----
-    stats = [
-        _per_term_stats(term, sims[:, s].astype(np.float64), offsets, df, v)
-        for s in range(sims.shape[1])
-    ]
-    # layout: (V, 6 sims * 6 stats), sim-major to match feature_names()
-    term_stats = np.concatenate(stats, axis=1)
+    if p:
+        stats = [
+            _per_term_stats(term, sims[:, s].astype(np.float64), offsets,
+                            df, v)
+            for s in range(sims.shape[1])
+        ]
+        # layout: (V, 6 sims * 6 stats), sim-major to match feature_names()
+        term_stats = np.concatenate(stats, axis=1)
+    else:
+        term_stats = np.zeros((v, 36), np.float32)
+
+    if stoplist is None:
+        stoplist = np.zeros(0, np.int64)
 
     return InvertedIndex(
         n_docs=n, vocab=v, avg_dl=avg_dl, total_tokens=total_tokens,
-        doclen=corpus.doclen, df=df.astype(np.int32), cf=cf.astype(np.float32),
+        doclen=doclen, df=df.astype(np.int32), cf=cf.astype(np.float32),
         offsets=offsets, docs=doc, tf=tf.astype(np.int32),
         bm25_score=bm25_sc, impact=impact, quant_scale=qmax,
         block_size=block_size, n_blocks=n_blocks,
         block_max=block_max, block_count=block_count,
         docs_imp=docs_imp, imp_sorted=imp_sorted, level_cum=level_cum,
         term_stats=term_stats,
+        stoplist=np.asarray(stoplist, np.int64),
     )
+
+
+def build_index(corpus: Corpus, block_size: int = 64,
+                n_levels: int = 255, stop_k: int = 64) -> InvertedIndex:
+    term = corpus.postings_term
+    doc = corpus.postings_doc
+    tf = corpus.postings_tf.astype(np.float64)
+
+    stoplist = np.zeros(0, np.int64)
+    if stop_k > 0:
+        # stop the collection (paper: Indri stoplist): drop the stop_k most
+        # frequent terms from the index entirely
+        cf_all = np.bincount(term, weights=tf, minlength=corpus.vocab)
+        stoplist = np.argsort(-cf_all)[:stop_k]
+        keep = ~np.isin(term, stoplist)
+        term, doc, tf = term[keep], doc[keep], tf[keep]
+
+    return assemble_index(term, doc, tf, corpus.doclen, corpus.vocab,
+                          block_size=block_size, n_levels=n_levels,
+                          stoplist=stoplist)

@@ -123,6 +123,116 @@ def build_corpus(params: CorpusParams = CorpusParams()) -> Corpus:
                   postings_tf, doc_topics, topic_perm, zipf.astype(np.float32))
 
 
+@dataclass(frozen=True)
+class FeedDocs:
+    """A batch of freshly crawled documents awaiting ingest.
+
+    Doc ids are *local* to the batch (0..n_docs); the delta store rebases
+    them above the sealed collection when it appends. Postings are raw
+    (pre-stoplist) and (term, doc)-sorted, exactly the corpus convention, so
+    a merge can interleave them with the sealed corpus without re-deriving
+    anything.
+    """
+    doclen: np.ndarray            # (M,) int32
+    doc_topics: np.ndarray        # (M, K) float32
+    postings_term: np.ndarray     # (P,) int32, sorted by (term, doc)
+    postings_doc: np.ndarray      # (P,) int32 batch-local
+    postings_tf: np.ndarray       # (P,) int32
+
+    @property
+    def n_docs(self) -> int:
+        return int(self.doclen.shape[0])
+
+    @property
+    def n_postings(self) -> int:
+        return int(self.postings_term.shape[0])
+
+
+def slice_feed(feed: FeedDocs, lo: int, hi: int) -> FeedDocs:
+    """Docs [lo, hi) of a feed as a standalone batch (ids rebased to 0)."""
+    sel = (feed.postings_doc >= lo) & (feed.postings_doc < hi)
+    return FeedDocs(
+        doclen=feed.doclen[lo:hi],
+        doc_topics=feed.doc_topics[lo:hi],
+        postings_term=feed.postings_term[sel],
+        postings_doc=feed.postings_doc[sel] - lo,
+        postings_tf=feed.postings_tf[sel])
+
+
+def synthesize_feed_docs(corpus: Corpus, n_docs: int,
+                         seed: int = 99) -> FeedDocs:
+    """Draw feed documents from the same generative family as the corpus.
+
+    Reuses the corpus's Zipf background, topic permutations, and length
+    distribution so fed documents are statistically indistinguishable from
+    sealed ones — but applies *no* URL-style docid reordering: a live feed
+    arrives in crawl order, which is exactly the regime that stresses the
+    delta tile-set (block-max bounds are weaker on unclustered postings).
+    """
+    rng = np.random.RandomState(seed)
+    p = corpus.params
+    m, v, k = n_docs, corpus.vocab, p.n_topics
+
+    doclen = np.maximum(
+        rng.lognormal(mean=np.log(p.avg_doclen), sigma=0.6, size=m), 8
+    ).astype(np.int64)
+    total = int(doclen.sum())
+
+    gam = rng.gamma(0.08, size=(m, k)).astype(np.float32) + 1e-8
+    doc_topics = gam / gam.sum(axis=1, keepdims=True)
+
+    zipf = corpus.zipf_probs.astype(np.float64)
+    cdf = np.cumsum(zipf / zipf.sum())
+
+    tok_doc = np.repeat(np.arange(m, dtype=np.int32), doclen)
+    u = rng.random_sample(total)
+    tok_term = np.minimum(np.searchsorted(cdf, u), v - 1).astype(np.int32)
+
+    topical = rng.random_sample(total) < p.topical_fraction
+    n_topical = int(topical.sum())
+    logits = np.log(doc_topics[tok_doc[topical]])
+    gumbel = -np.log(-np.log(rng.random_sample((n_topical, k)) + 1e-12)
+                     + 1e-12)
+    tok_topic = np.argmax(logits + gumbel, axis=1).astype(np.int32)
+    base_draw = np.minimum(
+        np.searchsorted(cdf, rng.random_sample(n_topical)), v - 1)
+    tok_term[topical] = corpus.topic_perm[tok_topic, base_draw]
+
+    key = tok_term.astype(np.int64) * m + tok_doc.astype(np.int64)
+    uniq, counts = np.unique(key, return_counts=True)
+    return FeedDocs(
+        doclen=doclen.astype(np.int32),
+        doc_topics=doc_topics,
+        postings_term=(uniq // m).astype(np.int32),
+        postings_doc=(uniq % m).astype(np.int32),
+        postings_tf=counts.astype(np.int32))
+
+
+def extend_corpus(corpus: Corpus, feed: FeedDocs) -> Corpus:
+    """The merged collection: feed docs appended at ids >= corpus.n_docs.
+
+    This is the from-scratch oracle the background merge must reproduce
+    bit-identically — an independent construction (global lexsort rather
+    than the merge's per-term counted interleave).
+    """
+    import dataclasses
+
+    n, m = corpus.n_docs, feed.n_docs
+    term = np.concatenate([corpus.postings_term, feed.postings_term])
+    doc = np.concatenate([corpus.postings_doc,
+                          feed.postings_doc.astype(np.int32) + n])
+    tf = np.concatenate([corpus.postings_tf, feed.postings_tf])
+    order = np.lexsort((doc, term))
+    params = dataclasses.replace(corpus.params, n_docs=n + m)
+    return Corpus(
+        params,
+        np.concatenate([corpus.doclen, feed.doclen]).astype(np.int32),
+        term[order].astype(np.int32), doc[order].astype(np.int32),
+        tf[order].astype(np.int32),
+        np.concatenate([corpus.doc_topics, feed.doc_topics]),
+        corpus.topic_perm, corpus.zipf_probs)
+
+
 @dataclass
 class QueryLog:
     terms: np.ndarray        # (Q, L) int32, padded with 0

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.builder import InvertedIndex, bucket_postings_by_tile
+from repro.index.builder import InvertedIndex, impact_order_layout, pack_tiles
 
 
 class IndexShardSpec(NamedTuple):
@@ -92,10 +92,37 @@ def shard_ranges(n_docs: int, n_shards: int) -> list[tuple[int, int]]:
     return list(zip(bounds[:-1], bounds[1:]))
 
 
+def _pad_to(arr: np.ndarray, size: int, fill) -> np.ndarray:
+    """Right-pad a 1-D postings column to a static capacity.
+
+    Pads are inert by construction: every serving gather is offsets/df
+    addressed (compact lanes mask ``lane < df``), so a padded tail is never
+    combined into a score.
+    """
+    if size < len(arr):
+        raise ValueError(f"pad size {size} below array length {len(arr)}")
+    out = np.full(size, fill, arr.dtype)
+    out[:len(arr)] = arr
+    return out
+
+
 def shard_from_index(index: InvertedIndex, doc_lo: int = 0,
                      doc_hi: int | None = None,
-                     tile_d: int = 128) -> tuple[IndexShard, IndexShardSpec]:
-    """Materialize the device structures for docs in [doc_lo, doc_hi)."""
+                     tile_d: int = 128, *,
+                     tile_cap: int | None = None,
+                     pad_postings: int | None = None,
+                     max_df: int | None = None,
+                     max_blocks_per_term: int | None = None,
+                     ) -> tuple[IndexShard, IndexShardSpec]:
+    """Materialize the device structures for docs in [doc_lo, doc_hi).
+
+    The keyword overrides pin *capacity* shapes and static caps instead of
+    the data-derived ones, so a delta tile-set rebuilt on every ingest batch
+    keeps one jit signature while it fills: ``pad_postings`` pads every
+    postings column (and the sparse block-max CSR) to that length,
+    ``tile_cap`` pins the bucketed mirror's lane capacity, and
+    ``max_df``/``max_blocks_per_term`` pin the per-term gather caps.
+    """
     doc_hi = index.n_docs if doc_hi is None else doc_hi
     n_local = doc_hi - doc_lo
     v = index.vocab
@@ -120,39 +147,55 @@ def shard_from_index(index: InvertedIndex, doc_lo: int = 0,
     score = s
 
     # impact-ordered: per-term sort by impact desc
-    order = np.lexsort((d, -im, t))
+    order, level_cum = impact_order_layout(t, d, im, v)
     docs_imp = d[order]
     imp = im[order]
-    lvl = np.bincount(t.astype(np.int64) * 256 + im, minlength=v * 256)
-    lvl = lvl.reshape(v, 256)
-    level_cum = np.flip(np.cumsum(np.flip(lvl, axis=1), axis=1), axis=1)
 
     # sparse block-max
-    blk = (d // bs).astype(np.int64)
-    key = t.astype(np.int64) * (1 << 32) + blk
-    start = np.flatnonzero(np.r_[True, key[1:] != key[:-1]])
-    b_term = t[start]
-    b_id = blk[start].astype(np.int32)
-    b_max = np.maximum.reduceat(s, start).astype(np.float32)
-    b_cnt = np.diff(np.r_[start, len(key)]).astype(np.int32)
+    if len(d):
+        blk = (d // bs).astype(np.int64)
+        key = t.astype(np.int64) * (1 << 32) + blk
+        start = np.flatnonzero(np.r_[True, key[1:] != key[:-1]])
+        b_term = t[start]
+        b_id = blk[start].astype(np.int32)
+        b_max = np.maximum.reduceat(s, start).astype(np.float32)
+        b_cnt = np.diff(np.r_[start, len(key)]).astype(np.int32)
+    else:
+        b_term = np.zeros(0, np.int64)
+        b_id = np.zeros(0, np.int32)
+        b_max = np.zeros(0, np.float32)
+        b_cnt = np.zeros(0, np.int32)
     bm_df = np.bincount(b_term, minlength=v)
     bm_offsets = np.zeros(v + 1, np.int64)
     np.cumsum(bm_df, out=bm_offsets[1:])
 
+    if pad_postings is not None:
+        docs = _pad_to(docs, pad_postings, 0)
+        score = _pad_to(score, pad_postings, 0.0)
+        docs_imp = _pad_to(docs_imp, pad_postings, 0)
+        imp = _pad_to(imp, pad_postings, 0)
+        b_id = _pad_to(b_id, pad_postings, 0)
+        b_max = _pad_to(b_max, pad_postings, 0.0)
+        b_cnt = _pad_to(b_cnt, pad_postings, 0)
+
     # bucketed doc-tile-major mirror for the batched serving kernels
-    tile_docs, tile_terms, (tile_scores, tile_imps), tile_cap = \
-        bucket_postings_by_tile(
-            d, t, [(s, 0.0, np.float32), (im, 0, np.int32)], n_local, tile_d)
+    tile_docs, tile_terms, (tile_scores, tile_imps), tcap = \
+        pack_tiles(
+            d, t, [(s, 0.0, np.float32), (im, 0, np.int32)], n_local, tile_d,
+            tile_cap=tile_cap)
 
     n_blocks = (n_local + bs - 1) // bs
     n_tiles = max(1, (n_local + tile_d - 1) // tile_d)
     spec = IndexShardSpec(
-        n_docs=n_local, vocab=v, n_postings=len(d), n_blocks=n_blocks,
+        n_docs=n_local, vocab=v, n_postings=len(docs), n_blocks=n_blocks,
         n_block_entries=len(b_id), n_levels=256, block_size=bs,
-        max_df=int(df.max()) if len(df) else 1,
-        max_blocks_per_term=int(bm_df.max()) if len(bm_df) else 1,
+        max_df=(max_df if max_df is not None
+                else int(df.max()) if len(df) else 1),
+        max_blocks_per_term=(max_blocks_per_term
+                             if max_blocks_per_term is not None
+                             else int(bm_df.max()) if len(bm_df) else 1),
         quant_scale=index.quant_scale,
-        tile_d=tile_d, tile_cap=tile_cap, n_tiles=n_tiles)
+        tile_d=tile_d, tile_cap=tcap, n_tiles=n_tiles)
 
     shard = IndexShard(
         df=jnp.asarray(df),

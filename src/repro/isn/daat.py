@@ -286,3 +286,39 @@ def daat_serve_laxmap(shard: IndexShard, terms: jnp.ndarray,
     ids, sc, work, blocks = jax.lax.map(lambda args: one(*args),
                                         (terms, mask, theta))
     return DaatResult(ids, sc, work, blocks)
+
+
+def daat_serve_segments(segments, terms, mask, theta, *, k, qcaps=None,
+                        tile_d: int = 128, q_block: int = 64,
+                        backend: str | None = None, drop=None):
+    """Serve one batch over sealed + delta segments and merge the top-k.
+
+    ``segments`` is a list of ``(shard, spec, doc_lo)`` in ascending
+    global-doc order — sealed shards first, then (optionally) the live
+    delta pseudo-shard, whose ``doc_lo`` is the sealed collection size.
+    Each segment is scanned with its own static caps (a delta segment's
+    capacity padding is inert: padded lanes sit past every term's df and
+    are never gathered), and the candidates merge through
+    ``merge_shard_topk``'s lower-global-doc-id tie policy.
+
+    ``qcaps[i]``/``drop[i]`` (optional) are per-segment; ``drop`` rows
+    follow segment order. Returns ``(ids, scores, works, blocks)``: the
+    merged (Q, k) global result plus per-segment work/block counters.
+    """
+    from repro.isn.backend import merge_shard_topk
+
+    sc_list, id_list, works, blocks = [], [], [], []
+    for i, (shard, spec, doc_lo) in enumerate(segments):
+        r = daat_serve(shard, terms, mask, theta, n_docs=spec.n_docs,
+                       n_blocks=spec.n_blocks, block_size=spec.block_size,
+                       k=k, cap=spec.max_df, bcap=spec.max_blocks_per_term,
+                       qcap=None if qcaps is None else qcaps[i],
+                       tile_d=tile_d, q_block=q_block, backend=backend)
+        sc_list.append(r.topk_scores)
+        id_list.append(r.topk_docs + doc_lo)
+        works.append(r.work)
+        blocks.append(r.blocks)
+    if len(segments) == 1 and drop is None:
+        return id_list[0], sc_list[0], works, blocks
+    ids, sc = merge_shard_topk(sc_list, id_list, k, drop=drop)
+    return ids, sc, works, blocks

@@ -174,3 +174,35 @@ def saat_serve_laxmap(shard: IndexShard, terms: jnp.ndarray,
 
     ids, sc, work = jax.lax.map(lambda args: one(*args), (terms, mask, rho))
     return SaatResult(ids, sc, work)
+
+
+def saat_serve_segments(segments, terms, mask, rhos, *, k, cap,
+                        tile_d: int = 128, q_block: int = 64,
+                        backend: str | None = None, drop=None):
+    """Serve one batch over sealed + delta segments and merge the top-k.
+
+    ``segments`` is a list of ``(shard, spec, doc_lo)`` in ascending
+    global-doc order (delta pseudo-shard last); ``rhos[i]`` is segment
+    ``i``'s per-query postings budget — the caller resolves the global
+    ρ → level-cut split across *all* segments (delta included) so the
+    combined scanned prefix is exactly the budgeted work. Integer impact
+    accumulation keeps the merge bit-exact across backends; a delta
+    segment's capacity padding contributes zero impact and is outranked
+    by the sealed segments' real candidates.
+
+    Returns ``(ids, scores, works)`` with per-segment work counters.
+    """
+    from repro.isn.backend import merge_shard_topk
+
+    sc_list, id_list, works = [], [], []
+    for i, (shard, spec, doc_lo) in enumerate(segments):
+        r = saat_serve(shard, terms, mask, rhos[i], n_docs=spec.n_docs,
+                       k=k, cap=cap, tile_d=tile_d, q_block=q_block,
+                       backend=backend)
+        sc_list.append(r.topk_scores)
+        id_list.append(r.topk_docs + doc_lo)
+        works.append(r.work)
+    if len(segments) == 1 and drop is None:
+        return id_list[0], sc_list[0], works
+    ids, sc = merge_shard_topk(sc_list, id_list, k, drop=drop)
+    return ids, sc, works

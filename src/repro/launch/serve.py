@@ -84,6 +84,21 @@ def main():
                     help="top dense score below which a rho_late-capped "
                          "lexical fallback replaces the dense candidates "
                          "(implies --dense)")
+    ap.add_argument("--ingest", action="store_true",
+                    help="serve while the collection mutates: a seeded "
+                         "document feed lands in a capacity-bounded delta "
+                         "tile-set, background merges reseal the index "
+                         "(repro.index.delta); online mode only")
+    ap.add_argument("--feed-qps", type=float, default=None,
+                    help="feed-batch arrivals per 1000 cost units "
+                         "(implies --ingest)")
+    ap.add_argument("--delta-docs", type=int, default=None,
+                    help="delta tile-set doc capacity; must be >= k_serve "
+                         "(implies --ingest)")
+    ap.add_argument("--delta-postings", type=int, default=None,
+                    help="delta tile-set postings capacity — sizes the "
+                         "worst-case delta-scan term charged into every "
+                         "query's bound (implies --ingest)")
     ap.add_argument("--zipf-skew", type=float, default=0.0,
                     help="Zipfian query-repetition skew for --online "
                          "traffic (0 = every query distinct, in order)")
@@ -153,6 +168,18 @@ def main():
         if args.cache_bytes is not None:
             kw["l1_bytes"] = kw["l2_bytes"] = args.cache_bytes
         cache = dataclasses.replace(cache, **kw)
+    ingest = spec.ingest
+    if (args.ingest or args.feed_qps is not None
+            or args.delta_docs is not None
+            or args.delta_postings is not None):
+        kw = {"enabled": True}
+        if args.feed_qps is not None:
+            kw["feed_qps"] = args.feed_qps
+        if args.delta_docs is not None:
+            kw["delta_docs"] = args.delta_docs
+        if args.delta_postings is not None:
+            kw["delta_postings"] = args.delta_postings
+        ingest = dataclasses.replace(ingest, **kw)
     dense, fusion = spec.dense, spec.fusion
     if (args.dense or args.fusion is not None
             or args.theta_high is not None or args.theta_low is not None):
@@ -173,6 +200,7 @@ def main():
         cache=cache,
         dense=dense,
         fusion=fusion,
+        ingest=ingest,
         stage2=(spec.stage2 if not args.no_ltr else
                 dataclasses.replace(spec.stage2, enabled=False)),
         backend=(spec.backend if args.backend is None else
@@ -265,6 +293,17 @@ def main():
                   f"dense={d['dense_only']} fused={d['fused']} "
                   f"theta_skips={d['theta_skips']} "
                   f"fallbacks={d['fallbacks']}")
+        if "ingest" in s:
+            i = s["ingest"]
+            print(f"[serve] ingest: docs={i['docs_ingested']} in "
+                  f"{i['feed_batches']} batches "
+                  f"(due {i.get('feed_batches_due', '?')}, throttled "
+                  f"{i.get('feed_throttled', 0)}), merges={i['merges']} "
+                  f"(deferred {i.get('merge_deferred', 0)}, forced "
+                  f"{i.get('merges_forced', 0)}), delta "
+                  f"{i['delta_docs']}/{i['capacity_docs']} docs "
+                  f"fill={i['fill']:.2f}, "
+                  f"delta_us={i['delta_us']:.1f}")
         if "coverage" in s:
             c = s["coverage"]
             print(f"[serve] coverage: min={c['min']:.2f} "

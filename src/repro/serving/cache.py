@@ -309,3 +309,15 @@ class ServingCache:
                        {"entries": len(lru), "nbytes": lru.nbytes,
                         **lru.stats})
         return s
+
+
+def ingest_epoch(epoch: tuple, counter: int) -> tuple:
+    """Fold the live-ingest generation counter into a coverage/fault epoch.
+
+    Every applied feed batch and every merge bumps the counter, so L1/L2
+    entries filled before a mutation can never be served after it — the
+    same mechanism that keeps fault-window entries from leaking across
+    partition state changes.  With ingest disabled the epoch is passed
+    through untouched, keeping cache behavior bit-identical.
+    """
+    return tuple(epoch) + (("ingest", int(counter)),)

@@ -133,6 +133,17 @@ class CostModel:
         return (self.dense_fixed_us
                 + np.asarray(n_tiles, np.float64) * self.dense_tile_us)
 
+    def delta_time(self, n_postings: int) -> float:
+        """Worst-case lexical delta-scan time for a capacity-``n_postings``
+        live segment.  Shape-static: the charge is the segment's *capacity*,
+        not its fill, so the bound never moves as documents stream in.  The
+        delta pseudo-shard is scanned by whichever engine routes the query,
+        so the charge takes the costlier per-posting rate plus the DAAT
+        fixed cost (the larger of the two dispatch terms)."""
+        return (self.daat_fixed_us
+                + max(self.saat_per_posting_us, self.daat_per_posting_us)
+                * float(n_postings))
+
     def gather_time(self, t_shards: np.ndarray) -> np.ndarray:
         """Scatter-gather Stage-1 time over an (n_shards, Q) per-shard time
         matrix: the query finishes when its *slowest* shard responds, plus

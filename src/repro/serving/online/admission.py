@@ -132,7 +132,10 @@ class AdmissionController:
         self.hit_ewma = 0.0
         self.stats = {"shed_arrival": 0, "shed_queue_cap": 0,
                       "shed_dispatch": 0, "degraded": 0, "partial": 0,
-                      "admitted": 0, "cache_admitted": 0}
+                      "admitted": 0, "cache_admitted": 0,
+                      "feed_applied": 0, "feed_throttled": 0,
+                      "merges_applied": 0, "merges_forced": 0,
+                      "merge_deferred": 0}
 
     # ------------------------------------------------------------------
     def observe_batch(self, occupancy: float, alpha: float = 0.2) -> None:
@@ -147,6 +150,44 @@ class AdmissionController:
             return
         self.hit_ewma = ((1 - self.hit_alpha) * self.hit_ewma
                          + self.hit_alpha * (n_hits / n_lookups))
+
+    def feed_gate(self, arrival: float, server_free: float,
+                  queue_depth: int, pause_us: float = 0.0) -> bool:
+        """Feed-vs-query backpressure: admit an ingest batch only while a
+        query arriving *after* the ingest pause would still be served at
+        FULL service.  The gate prices the pause into the wait estimate
+        and demands the full-service bound — strictly more slack than the
+        degrade floor the query shed rung needs — so the feed is throttled
+        before any query degrades, and long before one sheds.  Queries
+        always win the contest for server time."""
+        batches_ahead = queue_depth // self.cfg.max_batch
+        wait_est = (max(server_free + pause_us - arrival, 0.0)
+                    + batches_ahead * self.occupancy_ewma)
+        if (wait_est + self.cfg.dispatch_us + self._full_bound
+                > self.response_budget):
+            self.stats["feed_throttled"] += 1
+            return False
+        self.stats["feed_applied"] += 1
+        return True
+
+    def merge_gate(self, now: float, server_free: float,
+                   queue_depth: int, *, full: bool) -> bool:
+        """Background-merge backpressure: a merge reseals the index (jit
+        retrace + cache flush) and occupies the server, so it only runs in
+        an idle gap — empty queue, server free.  ``full=True`` (the delta
+        cannot take the next due feed batch) forces it through regardless:
+        deferring then would stall the feed forever, and the forced merge
+        still lands *before* the queries queued behind it are priced, so
+        their dispatch-time slack accounts for the pause."""
+        if full:
+            self.stats["merges_forced"] += 1
+            self.stats["merges_applied"] += 1
+            return True
+        if queue_depth > 0 or server_free > now:
+            self.stats["merge_deferred"] += 1
+            return False
+        self.stats["merges_applied"] += 1
+        return True
 
     def at_arrival(self, arrival: float, server_free: float,
                    queue_depth: int) -> bool:

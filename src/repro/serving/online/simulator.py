@@ -37,11 +37,14 @@ from repro.serving.latency import over_budget, percentiles
 from repro.serving.online.admission import (FULL, MODE_NAMES, SHED,
                                             AdmissionController)
 from repro.serving.online.batcher import MicroBatcher, pad_batch
-from repro.serving.online.traffic import arrival_times, zipf_query_mix
+from repro.serving.online.traffic import (arrival_times, feed_arrival_times,
+                                          zipf_query_mix)
 from repro.serving.spec import OnlineSpec, TrafficSpec
 
 _NOT_SERVED = -1.0  # sentinel in per-query arrays / the event log (not NaN:
                     # the determinism contract is tuple equality)
+INGEST_EVENT = -3   # event-log qid marker: an applied feed batch
+MERGE_EVENT = -4    # event-log qid marker: a background merge (reseal)
 
 
 @dataclass
@@ -141,8 +144,70 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
     i = 0
     n_front = 0
 
+    # ---- live ingest: a seeded feed-arrival process on the same virtual
+    # clock.  Feed batches and background merges charge the server's
+    # t_free (they occupy the engine host), and both are gated by the
+    # admission controller's backpressure ladder: merges defer to load,
+    # the feed throttles before queries shed.  With ingest disabled this
+    # whole block is inert — no arrivals, no events, no clock charges.
+    ingest_on = getattr(system, "delta", None) is not None
+    feed_times = np.zeros(0)
+    full_feed = None
+    fi = 0
+    if ingest_on:
+        from repro.index.corpus import slice_feed, synthesize_feed_docs
+        if system.corpus is None:
+            raise ValueError("online ingest needs the corpus the sealed "
+                             "index was built from")
+        ing = system.cascade_spec.ingest
+        fb = ing.feed_batch
+        horizon = float(arr[-1])
+        n_feed = max(1, int(horizon * ing.feed_qps / 1000.0 * 2.0) + 4)
+        feed_times = feed_arrival_times(ing, n_feed)
+        feed_times = feed_times[feed_times <= horizon]
+        if len(feed_times):
+            full_feed = synthesize_feed_docs(system.corpus,
+                                             int(len(feed_times)) * fb,
+                                             seed=ing.seed)
+
+    def run_ingest(now: float) -> None:
+        """Apply every due feed batch (and any merge it needs) at ``now``."""
+        nonlocal fi, t_free
+        if not ingest_on:
+            return
+        while fi < len(feed_times) and feed_times[fi] <= now:
+            t_feed = float(feed_times[fi])
+            batch = slice_feed(full_feed, fi * fb, (fi + 1) * fb)
+            # merge first when the delta is past its threshold — or cannot
+            # take this batch at all (then the merge is forced through)
+            need = system.delta.admit_count(batch) < batch.n_docs
+            if ((need or system.delta.fill >= ing.merge_threshold)
+                    and system.delta.n_docs):
+                ok = (adm.merge_gate(now, t_free, len(pending), full=need)
+                      if adm is not None else True)
+                if ok:
+                    merged = system.merge()
+                    t_start = max(t_free, now)
+                    t_free = t_start + ing.merge_us
+                    events.append((MERGE_EVENT, MERGE_EVENT, t_feed,
+                                   t_start, 0.0, float(ing.merge_us),
+                                   float(t_free), int(merged)))
+                elif need:
+                    return      # feed blocked until a merge is allowed
+            if adm is not None and not adm.feed_gate(
+                    t_feed, t_free, len(pending), pause_us=ing.ingest_us):
+                return          # throttled: this batch retries later
+            took = system.add_documents(batch)
+            t_start = max(t_free, now)
+            t_free = t_start + ing.ingest_us
+            events.append((INGEST_EVENT, int(fi), t_feed, t_start,
+                           float(t_start - t_feed), float(ing.ingest_us),
+                           float(t_free), int(took)))
+            fi += 1
+
     def admit(qid: int) -> None:
         nonlocal n_front
+        run_ingest(float(arr[qid]))
         if cache_on:
             # front-door lookup at arrival: an exact-result L1 hit is
             # answered from the broker's memory (prediction + probe) and
@@ -192,6 +257,11 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
 
     def dispatch(rows: np.ndarray, t_start: float) -> None:
         nonlocal t_free
+        run_ingest(t_start)
+        # an ingest/merge pause that ran past the close pushes the batch
+        # start back: the extra wait is real and the admission ladder
+        # prices it (feed work degrades queries honestly, never silently)
+        t_start = max(t_start, t_free)
         waits = t_start - arr[rows]
         hits = None
         if cache_on:
@@ -312,6 +382,14 @@ def simulate(system, terms: np.ndarray, mask: np.ndarray,
             stats["cache"]["hit_ewma"] = float(adm.hit_ewma)
     if dense_on:
         stats["dense"] = dense_acc
+    if ingest_on:
+        stats["ingest"] = system.stats()["ingest"]
+        stats["ingest"]["feed_batches_due"] = int(len(feed_times))
+        stats["ingest"]["feed_batches_applied"] = int(fi)
+        if adm is not None:
+            for key in ("feed_applied", "feed_throttled", "merges_applied",
+                        "merges_forced", "merge_deferred"):
+                stats["ingest"][key] = int(adm.stats[key])
     if faulted:
         if system.faults.active:
             stats["faults"] = dict(system._fault_counters)

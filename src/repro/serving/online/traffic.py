@@ -125,6 +125,18 @@ def zipf_query_mix(spec: TrafficSpec, n: int,
     return rng.choice(n_unique, size=n, p=p).astype(np.int64)
 
 
+def feed_arrival_times(ingest, n: int) -> np.ndarray:
+    """``n`` non-decreasing feed-batch arrival timestamps for an
+    :class:`~repro.serving.spec.IngestSpec` — a Poisson process at
+    ``feed_qps`` (batches per 1000 time units), drawn from its own seeded
+    stream (``seed + 0xFEED``, the same independence discipline as
+    ``zipf_query_mix``) so toggling ingest never moves a query timestamp."""
+    if n < 1:
+        raise ValueError("need n >= 1 feed arrivals")
+    rng = np.random.RandomState(int(ingest.seed) + 0xFEED)
+    return np.maximum.accumulate(_poisson(rng, n, float(ingest.feed_qps)))
+
+
 def arrival_times(spec: TrafficSpec, n: int) -> np.ndarray:
     """``n`` non-decreasing arrival timestamps for the process ``spec``
     names, starting at >= 0.  Deterministic in ``spec.seed``."""

@@ -414,6 +414,62 @@ class FusionSpec:
             raise ValueError("w_dense must be in [0, 1]")
 
 
+@dataclass(frozen=True)
+class IngestSpec:
+    """Live index mutation: the feed half of a production operating point.
+
+    When enabled, ``SearchSystem`` attaches a capacity-bounded
+    :class:`~repro.index.delta.DeltaStore` — an append-only delta tile-set
+    scanned by every Stage-1 engine alongside the sealed shards —
+    and exposes ``add_documents()`` / ``merge()``.  The online simulator
+    drives a seeded feed-arrival process on the same virtual clock as
+    queries, applies ingest batches between dispatches, and triggers a
+    background merge when the delta fill crosses ``merge_threshold``
+    (deferred under load by the admission ladder: merge defers, then feed
+    throttles, and only then do queries degrade/shed).
+
+    The worst-case lexical delta scan (``CostModel.delta_time`` at the
+    postings *capacity*) plus the dense delta-tile term is charged into
+    every served query's Stage-1 latency and into ``worst_case_us``, so
+    admission and the late hedge stay sound at any fill level.
+
+    The default (``enabled=False``) is **inert**: no delta store is built,
+    every serve path, cache key, and event log is bit-identical to a
+    sealed-index system — the same discipline as ``FaultSpec`` /
+    ``CacheSpec`` / ``DenseSpec``.
+    """
+    enabled: bool = False
+    delta_docs: int = 512        # delta segment doc capacity
+    delta_postings: int = 8192   # delta segment postings capacity (padded
+                                 # array shapes; also the worst-case scan
+                                 # charge — size it to the budget's slack)
+    feed_qps: float = 10.0       # feed BATCH arrivals per 1000 time units
+    feed_batch: int = 16         # docs per feed batch
+    ingest_us: float = 2.0       # server occupancy per applied feed batch
+    merge_us: float = 50.0       # server occupancy of a background merge
+    merge_threshold: float = 0.75  # delta doc-fill fraction that requests
+                                   # a merge (1.0 = only when full)
+    seed: int = 0                # feed arrival-process seed
+
+    @property
+    def active(self) -> bool:
+        return self.enabled
+
+    def validate(self) -> None:
+        if self.delta_docs < 1:
+            raise ValueError("delta_docs must be >= 1")
+        if self.delta_postings < 1:
+            raise ValueError("delta_postings must be >= 1")
+        if self.feed_qps <= 0:
+            raise ValueError("feed_qps must be positive")
+        if self.feed_batch < 1:
+            raise ValueError("feed_batch must be >= 1")
+        if self.ingest_us < 0 or self.merge_us < 0:
+            raise ValueError("ingest_us/merge_us must be >= 0")
+        if not 0.0 < self.merge_threshold <= 1.0:
+            raise ValueError("merge_threshold must be in (0, 1]")
+
+
 ARRIVALS = ("poisson", "bursty", "diurnal", "trace")
 
 
@@ -523,7 +579,7 @@ class DeploySpec:
 _NODES = {"index": IndexSpec, "stage0": Stage0Spec, "routing": RoutingSpec,
           "stage2": Stage2Spec, "backend": BackendSpec, "deploy": DeploySpec,
           "online": OnlineSpec, "fault": FaultSpec, "cache": CacheSpec,
-          "dense": DenseSpec, "fusion": FusionSpec}
+          "dense": DenseSpec, "fusion": FusionSpec, "ingest": IngestSpec}
 
 
 @dataclass(frozen=True)
@@ -540,6 +596,7 @@ class CascadeSpec:
     cache: CacheSpec = field(default_factory=CacheSpec)
     dense: DenseSpec = field(default_factory=DenseSpec)
     fusion: FusionSpec = field(default_factory=FusionSpec)
+    ingest: IngestSpec = field(default_factory=IngestSpec)
     name: str = "custom"
 
     def validate(self) -> "CascadeSpec":

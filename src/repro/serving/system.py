@@ -48,9 +48,11 @@ from repro.core import features as F
 from repro.core import gbrt
 from repro.dense import (M_BOTH, M_DENSE, M_LEX, DenseEngine,
                          build_embeddings, fuse)
+from repro.dense.embeddings import delta_doc_embeddings
 from repro.dense.engine import SCORE_FILL
 from repro.index.builder import InvertedIndex, build_index
-from repro.index.corpus import Corpus
+from repro.index.corpus import Corpus, FeedDocs
+from repro.index.delta import DeltaStore
 from repro.index.postings import shard_from_index, shard_ranges
 from repro.isn.backend import (merge_shard_topk, query_lane_budget,
                                resolve_backend)
@@ -59,8 +61,8 @@ from repro.isn.saat import saat_serve
 from repro.ltr.cascade import CascadeResult, rerank_batched
 from repro.ltr.ranker import (LTRModel, csr_search_iters, ltr_training_set,
                               qd_features, stage2_arrays, train_ltr)
-from repro.serving.cache import (HEALTHY_EPOCH, ServingCache, l1_key,
-                                 l2_key, normalize_query, route_sig)
+from repro.serving.cache import (HEALTHY_EPOCH, ServingCache, ingest_epoch,
+                                 l1_key, l2_key, normalize_query, route_sig)
 from repro.serving.faults import FaultInjector
 from repro.serving.latency import (CostModel, budget_attribution,
                                    over_budget, percentiles,
@@ -165,44 +167,40 @@ class SearchSystem:
         self._base_cfg = scheduler_config(spec.routing)
 
         # ---- shard the index into doc-range partitions ----
-        ranges = shard_ranges(index.n_docs, spec.deploy.n_shards)
-        self.doc_lo = [lo for lo, _ in ranges]
-        built = [shard_from_index(index, lo, hi, tile_d=spec.index.tile_d)
-                 for lo, hi in ranges]
-        self.shards = [s for s, _ in built]
-        self.shard_specs = [sp for _, sp in built]
-        min_docs = min(sp.n_docs for sp in self.shard_specs)
-        if min_docs < self.k_serve:
-            raise ValueError(
-                f"k_serve={self.k_serve} exceeds the smallest shard "
-                f"({min_docs} docs at n_shards={spec.deploy.n_shards}); "
-                f"use fewer shards or a smaller k_serve")
-        self._df_host = [np.asarray(s.df) for s in self.shards]
-        # host-side impact-level tables: the global SAAT level cut (and the
-        # deterministic JASS cost) are resolved against the full collection,
-        # then split per shard — see module docstring for why this keeps
-        # multi-shard SAAT bit-identical to the single-shard traversal
-        self._level_cum_host = ([index.level_cum] if len(self.shards) == 1
-                                else [np.asarray(s.level_cum)
-                                      for s in self.shards])
+        self._attach_index(index)
 
-        self.term_stats = jnp.asarray(index.term_stats)
-        self.df = jnp.asarray(index.df)
-
-        # ---- dense Stage-1 modality (spec.dense; inert by default) ----
-        # None keeps every serve path and cache key bit-identical to the
-        # lexical-only system — the same discipline as FaultSpec/CacheSpec.
-        # The embedding matrix is partitioned by the SAME doc ranges as the
-        # inverted index, so merge_shard_topk and the pool failover
-        # protocol apply to dense traffic unchanged.
-        self.dense = None
-        if spec.dense.enabled:
-            doc_emb, term_table = build_embeddings(
-                spec.dense, corpus=corpus, n_docs=index.n_docs,
-                vocab=int(np.asarray(index.df).shape[0]))
-            self.dense = DenseEngine(doc_emb, term_table, ranges,
-                                     tile_d=spec.dense.tile_d,
-                                     backend=self.backend)
+        # ---- live ingest (spec.ingest; inert by default) ----
+        # None keeps every serve path, cache key, and timing term
+        # bit-identical to the sealed-only system — the same discipline as
+        # FaultSpec/CacheSpec/DenseSpec.  The delta scan's cost is a single
+        # shape-static term (its arrays are capacity-padded), charged at
+        # capacity to every served query and to worst_case_us().
+        self.delta: DeltaStore | None = None
+        self._delta_us = 0.0
+        self._ingest_counters = {
+            "epoch": 0,          # cache-epoch bumps (feeds + merges)
+            "feed_batches": 0,   # applied ingest batches
+            "docs_ingested": 0,  # docs accepted into the delta
+            "merges": 0,         # background merges (reseals)
+            "docs_merged": 0,    # docs folded into the sealed index
+        }
+        if spec.ingest.active:
+            if spec.ingest.delta_docs < self.k_serve:
+                raise ValueError(
+                    f"ingest.delta_docs={spec.ingest.delta_docs} is below "
+                    f"k_serve={self.k_serve}; the delta segment must be "
+                    "able to answer a full candidate list")
+            self.delta = DeltaStore(
+                index, capacity_docs=spec.ingest.delta_docs,
+                capacity_postings=spec.ingest.delta_postings,
+                tile_d=spec.index.tile_d)
+            self._delta_us = float(
+                self.cost.delta_time(self.delta.capacity_postings))
+            if self.dense is not None:
+                # the dense delta segment is capacity-padded too, so its
+                # tile count — and hence its cost term — is spec-static
+                d_tiles = -(-self.delta.capacity_docs // self.dense.tile_d)
+                self._delta_us += self.cost.dense_tile_us * d_tiles
 
         self.pool = ReplicaPool(
             PoolConfig(n_partitions=spec.deploy.n_shards,
@@ -253,6 +251,54 @@ class SearchSystem:
     @property
     def n_shards(self) -> int:
         return len(self.shards)
+
+    def _attach_index(self, index: InvertedIndex) -> None:
+        """(Re)build every index-derived serving structure — doc-range
+        shards, host-side df/level tables, the dense engine.  Called at
+        construction and again when a background merge reseals the
+        collection: resealing changes the doc ranges (and so the jit
+        signatures), which is exactly the once-per-merge retrace the
+        delta's capacity padding exists to avoid on the per-batch path."""
+        spec = self.cascade_spec
+        self.index = index
+        ranges = shard_ranges(index.n_docs, spec.deploy.n_shards)
+        self.doc_lo = [lo for lo, _ in ranges]
+        built = [shard_from_index(index, lo, hi, tile_d=spec.index.tile_d)
+                 for lo, hi in ranges]
+        self.shards = [s for s, _ in built]
+        self.shard_specs = [sp for _, sp in built]
+        min_docs = min(sp.n_docs for sp in self.shard_specs)
+        if min_docs < self.k_serve:
+            raise ValueError(
+                f"k_serve={self.k_serve} exceeds the smallest shard "
+                f"({min_docs} docs at n_shards={spec.deploy.n_shards}); "
+                f"use fewer shards or a smaller k_serve")
+        self._df_host = [np.asarray(s.df) for s in self.shards]
+        # host-side impact-level tables: the global SAAT level cut (and the
+        # deterministic JASS cost) are resolved against the full collection,
+        # then split per shard — see module docstring for why this keeps
+        # multi-shard SAAT bit-identical to the single-shard traversal
+        self._level_cum_host = ([index.level_cum] if len(self.shards) == 1
+                                else [np.asarray(s.level_cum)
+                                      for s in self.shards])
+
+        self.term_stats = jnp.asarray(index.term_stats)
+        self.df = jnp.asarray(index.df)
+
+        # ---- dense Stage-1 modality (spec.dense; inert by default) ----
+        # None keeps every serve path and cache key bit-identical to the
+        # lexical-only system — the same discipline as FaultSpec/CacheSpec.
+        # The embedding matrix is partitioned by the SAME doc ranges as the
+        # inverted index, so merge_shard_topk and the pool failover
+        # protocol apply to dense traffic unchanged.
+        self.dense = None
+        if spec.dense.enabled:
+            doc_emb, term_table = build_embeddings(
+                spec.dense, corpus=self.corpus, n_docs=index.n_docs,
+                vocab=int(np.asarray(index.df).shape[0]))
+            self.dense = DenseEngine(doc_emb, term_table, ranges,
+                                     tile_d=spec.dense.tile_d,
+                                     backend=self.backend)
 
     def _attribute_budget(self, budget: float, k_serve: int | None) -> dict:
         """``budget_attribution`` plus the dense modality's fusion reserve:
@@ -435,7 +481,15 @@ class SearchSystem:
 
     def _jass_split(self, terms, mask, rows, rho, cache: dict | None = None):
         """Resolve the ρ budget to the global impact-level cut and split the
-        cut's work per shard.  Returns (per-shard work list, any_ok).
+        cut's work per segment.  Returns (per-segment work list, any_ok).
+
+        With a live delta attached the list carries one extra trailing
+        entry — the delta segment's slice of the same global cut (its
+        level table participates in the cut resolution, so ρ budgets the
+        *whole* collection including undigested feed docs).  Timing/pool
+        consumers slice ``work_s[:n_shards]``: the delta's scan cost is
+        charged as the shape-static ``_delta_us`` term, never from its
+        per-query work.
 
         ``cache`` memoizes on (rows, rho) for the duration of one served
         batch — stage-1 budgeting, hedging resolution, and pool feedback
@@ -451,6 +505,9 @@ class SearchSystem:
         m = (mask[rows] > 0)[:, :, None]
         totals = [(lc[terms[rows]] * m).sum(axis=1)       # (R, n_levels)
                   for lc in self._level_cum_host]
+        if self.delta is not None:
+            totals.append((self.delta.level_cum[terms[rows]] * m)
+                          .sum(axis=1))
         total_g = totals[0] if len(totals) == 1 else np.sum(totals, axis=0)
         lstar, any_ok = resolve_level_cut(total_g, rho)
         rr = np.arange(len(rows))
@@ -466,7 +523,7 @@ class SearchSystem:
         def fn(rows, rho):
             work_s, _ = self._jass_split(terms, mask, rows, rho, cache)
             t = np.stack([self.cost.saat_time(w.astype(np.float64))
-                          for w in work_s])
+                          for w in work_s[:self.n_shards]])
             return self.cost.gather_time(t)
         return fn
 
@@ -506,9 +563,10 @@ class SearchSystem:
         if len(routed.jass_rows):
             rows = routed.jass_rows
             rho_rows = routed.rho[rows]
-            if ns > 1:
-                # one global level cut → per-shard budgets that reproduce
-                # exactly the single-shard posting set (see module docstring)
+            if ns > 1 or self.delta is not None:
+                # one global level cut → per-segment budgets that reproduce
+                # exactly the single-shard posting set (see module
+                # docstring); a live delta is one more segment of the cut
                 work_s, any_ok = self._jass_split(terms, mask, rows,
                                                   rho_rows, cache)
                 rho_per_shard = [np.where(any_ok, w, -1.0).astype(np.float64)
@@ -529,11 +587,25 @@ class SearchSystem:
                 id_list.append(res.topk_docs + self.doc_lo[s])
                 t_shards[s, rows] = self.cost.saat_time(
                     np.asarray(res.work).astype(np.float64))
+            if self.delta is not None:
+                # the delta pseudo-shard scans its slice of the same global
+                # cut; appended LAST so merge ties keep breaking toward the
+                # lower global doc id (delta ids all sit above the sealed
+                # collection).  Its time is the static _delta_us term.
+                dsp = self.delta.shard_spec
+                res = saat_serve(self.delta.shard, jnp.asarray(terms[rows]),
+                                 jnp.asarray(mask[rows]),
+                                 jnp.asarray(rho_per_shard[ns]),
+                                 n_docs=dsp.n_docs, k=self.k_serve,
+                                 cap=int(self.sched.cfg.rho_max),
+                                 tile_d=dsp.tile_d, backend=self.backend)
+                sc_list.append(res.topk_scores)
+                id_list.append(res.topk_docs + self.delta.base_docs)
             if self._debug_shard_lists is not None:
                 self._debug_shard_lists.append(
                     (rows, [np.asarray(a) for a in sc_list],
                      [np.asarray(a) for a in id_list]))
-            if ns == 1:
+            if ns == 1 and self.delta is None:
                 topk[rows] = np.asarray(id_list[0])
                 topk_sc[rows] = np.asarray(sc_list[0]).astype(np.float32)
                 if drop is not None and drop[0, rows].any():
@@ -541,9 +613,14 @@ class SearchSystem:
                     topk[dead] = -1
                     topk_sc[dead] = SCORE_FILL
             else:
-                ids, sc = merge_shard_topk(
-                    sc_list, id_list, self.k_serve,
-                    drop=None if drop is None else drop[:, rows])
+                dr = None if drop is None else drop[:, rows]
+                if dr is not None and self.delta is not None:
+                    # the delta segment is local to the merge host — never
+                    # lost, never admission-dropped
+                    dr = np.concatenate(
+                        [dr, np.zeros((1, len(rows)), bool)])
+                ids, sc = merge_shard_topk(sc_list, id_list, self.k_serve,
+                                           drop=dr)
                 topk[rows] = np.asarray(ids)
                 topk_sc[rows] = np.asarray(sc).astype(np.float32)
 
@@ -567,11 +644,26 @@ class SearchSystem:
                 id_list.append(res.topk_docs + self.doc_lo[s])
                 t_shards[s, rows] = self.cost.daat_time(
                     np.asarray(res.work), np.asarray(res.blocks))
+            if self.delta is not None:
+                # rank-safe BMW over the capacity-padded delta segment: the
+                # qcap default (L * cap) is spec-static, so fill level never
+                # changes the jit signature
+                dsp = self.delta.shard_spec
+                res = daat_serve(self.delta.shard, jnp.asarray(terms[rows]),
+                                 jnp.asarray(mask[rows]),
+                                 jnp.ones(len(rows), jnp.float32),
+                                 n_docs=dsp.n_docs, n_blocks=dsp.n_blocks,
+                                 block_size=dsp.block_size, k=self.k_serve,
+                                 cap=dsp.max_df,
+                                 bcap=dsp.max_blocks_per_term,
+                                 tile_d=dsp.tile_d, backend=self.backend)
+                sc_list.append(res.topk_scores)
+                id_list.append(res.topk_docs + self.delta.base_docs)
             if self._debug_shard_lists is not None:
                 self._debug_shard_lists.append(
                     (rows, [np.asarray(a) for a in sc_list],
                      [np.asarray(a) for a in id_list]))
-            if ns == 1:
+            if ns == 1 and self.delta is None:
                 topk[rows] = np.asarray(id_list[0])
                 topk_sc[rows] = np.asarray(sc_list[0]).astype(np.float32)
                 if drop is not None and drop[0, rows].any():
@@ -579,9 +671,12 @@ class SearchSystem:
                     topk[dead] = -1
                     topk_sc[dead] = SCORE_FILL
             else:
-                ids, sc = merge_shard_topk(
-                    sc_list, id_list, self.k_serve,
-                    drop=None if drop is None else drop[:, rows])
+                dr = None if drop is None else drop[:, rows]
+                if dr is not None and self.delta is not None:
+                    dr = np.concatenate(
+                        [dr, np.zeros((1, len(rows)), bool)])
+                ids, sc = merge_shard_topk(sc_list, id_list, self.k_serve,
+                                           drop=dr)
                 topk[rows] = np.asarray(ids)
                 topk_sc[rows] = np.asarray(sc).astype(np.float32)
             t_bmw[rows] = self.cost.gather_time(t_shards[:, rows])
@@ -696,7 +791,7 @@ class SearchSystem:
             work_s, _ = self._jass_split(terms, mask, rows,
                                          routed.rho[rows], cache)
             t_h = np.stack([self.cost.saat_time(w.astype(np.float64))
-                            for w in work_s])
+                            for w in work_s[:self.n_shards]])
             for j, i in enumerate(rows):
                 reps = hedge_picks[int(i)]
                 if reps is None:
@@ -894,7 +989,7 @@ class SearchSystem:
                 work_s, _ = self._jass_split(terms, mask, rows, rho,
                                              split_cache)
                 t = np.stack([self.cost.saat_time(w.astype(np.float64))
-                              for w in work_s])
+                              for w in work_s[:ns]])
                 tf = np.where(dropped[:, rows], 0.0,
                               delay[:, rows]
                               + np.where(lost[:, rows], 0.0,
@@ -940,6 +1035,12 @@ class SearchSystem:
             lat01 = np.where(both,
                              pd + np.maximum(lat01 - pd, tdr)
                              + self.cost.fusion_us, lat01)
+        if self.delta is not None:
+            # every served query scans the delta segment; its arrays are
+            # capacity-padded, so the cost is one shape-static term —
+            # charged here, BEFORE budget enforcement trims Stage-2, and
+            # identically inside worst_case_us()
+            lat01 = lat01 + self._delta_us
         t0 = np.full(q, self.cost.predict_us)
         stage_latency = {"stage0": t0, "stage1": lat01 - t0}
 
@@ -1079,16 +1180,25 @@ class SearchSystem:
         or healing, a storm starting) re-derives from the live cascade
         instead of trusting results certified under different coverage.
         With an inert fault spec this is one constant — no per-query work,
-        no RNG (``transient`` draws are never consumed here)."""
+        no RNG (``transient`` draws are never consumed here).
+
+        With live ingest attached the epoch additionally carries the
+        ingest counter (bumped on every applied feed batch and every
+        merge), so entries filled against one delta state never hit after
+        the collection has changed under them."""
         if not self.faults.active:
-            return HEALTHY_EPOCH
-        reps = self.cascade_spec.deploy.replicas
-        up = tuple(self.faults.partition_up(p, reps, now)
-                   for p in range(self.n_shards))
-        sp = self.faults.spec
-        storm = bool(sp.timeout_p > 0
-                     and sp.timeout_start <= now < sp.timeout_end)
-        return up + (storm,)
+            base = HEALTHY_EPOCH
+        else:
+            reps = self.cascade_spec.deploy.replicas
+            up = tuple(self.faults.partition_up(p, reps, now)
+                       for p in range(self.n_shards))
+            sp = self.faults.spec
+            storm = bool(sp.timeout_p > 0
+                         and sp.timeout_start <= now < sp.timeout_end)
+            base = up + (storm,)
+        if self.delta is not None:
+            return ingest_epoch(base, self._ingest_counters["epoch"])
+        return base
 
     def _pure_route(self, pk, pr, pt):
         """Route a batch WITHOUT counting it: ``StageZeroScheduler.route``
@@ -1448,9 +1558,79 @@ class SearchSystem:
             dense_bound = pd + td + fb
             both_bound = pd + max(base - pd, td) + self.cost.fusion_us
             base = max(base, dense_bound, both_bound)
-        return (base + self._budget_reserve["stage2"]
+        # live ingest: every query additionally scans the capacity-padded
+        # delta segment (lexical + dense tiles) — the same static term the
+        # serve path charges, so the bound stays analytic while feeding
+        return (base + self._delta_us + self._budget_reserve["stage2"]
                 + (self.cost.cache_hit_us if self.cache is not None
                    else 0.0))
+
+    # ------------------------------------------------------------------
+    # live ingest: feed → delta segment → background merge
+    # ------------------------------------------------------------------
+
+    def _refresh_dense_delta(self) -> None:
+        """Re-embed the delta docs through the sealed quantized source and
+        hand the capacity-padded matrix to the dense engine (ghost rows
+        stay zero; the engine masks them after ranking)."""
+        if self.dense is None or self.delta is None:
+            return
+        d = self.delta
+        emb = np.zeros((d.capacity_docs, self.dense.d), np.float32)
+        if d.n_docs:
+            emb[:d.n_docs] = delta_doc_embeddings(
+                self.cascade_spec.dense, n_sealed=d.base_docs,
+                n_new=d.n_docs,
+                vocab=int(np.asarray(self.index.df).shape[0]),
+                topics=d.doc_topics, corpus=self.corpus)
+        self.dense.set_delta(emb, d.n_docs, d.base_docs)
+
+    def add_documents(self, feed: FeedDocs) -> int:
+        """Ingest the longest admissible prefix of ``feed`` into the live
+        delta segment; returns the number of docs accepted (0 = the delta
+        is full — call :meth:`merge` to reseal, then re-offer the rest).
+        Served results include the new docs immediately; the cache epoch
+        bumps so no stale entry survives the collection change."""
+        if self.delta is None:
+            raise RuntimeError("live ingest is disabled "
+                               "(spec.ingest.enabled=False)")
+        took = self.delta.add(feed)
+        if took:
+            self._ingest_counters["epoch"] += 1
+            self._ingest_counters["feed_batches"] += 1
+            self._ingest_counters["docs_ingested"] += took
+            self._refresh_dense_delta()
+        return took
+
+    def merge(self) -> int:
+        """Fold the delta into the sealed collection (the background
+        merge): rebuilds the index bit-identically to a from-scratch build
+        over the extended corpus, re-attaches every index-derived serving
+        structure, and resets the delta against the new seal.  Returns the
+        number of docs merged (0 = nothing to do)."""
+        if self.delta is None:
+            raise RuntimeError("live ingest is disabled "
+                               "(spec.ingest.enabled=False)")
+        n = self.delta.n_docs
+        if n == 0:
+            return 0
+        if self.corpus is None:
+            raise RuntimeError("merge needs the corpus the sealed index "
+                               "was built from")
+        new_corpus, new_index = self.delta.merged(self.corpus)
+        self.corpus = new_corpus
+        self._attach_index(new_index)
+        self.delta.reset(new_index)
+        if self.dense is not None:
+            self.dense.clear_delta()
+        if self.ltr is not None:
+            # Stage-2 ranks against the resealed collection's CSR arrays
+            self.s2 = stage2_arrays(self.index, self.corpus)
+            self.n_iter = csr_search_iters(int(self.index.df.max()))
+        self._ingest_counters["epoch"] += 1
+        self._ingest_counters["merges"] += 1
+        self._ingest_counters["docs_merged"] += n
+        return n
 
     def _adapt_routing(self):
         """Close the routing feedback loop from pool EWMAs + scheduler
@@ -1533,6 +1713,10 @@ class SearchSystem:
         if self.faults.active or any(self._fault_counters.values()):
             s["faults"] = dict(self._fault_counters)
             s["faults"]["clock"] = self._clock
+        if self.delta is not None:
+            s["ingest"] = dict(self.delta.stats())
+            s["ingest"].update(self._ingest_counters)
+            s["ingest"]["delta_us"] = self._delta_us
         if self._last_stats:
             s["last_batch"] = {k: self._last_stats[k]
                                for k in ("p50", "p99", "p99.99", "max",

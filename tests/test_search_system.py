@@ -57,7 +57,7 @@ def test_spec_validation_rejects_bad_values():
 def test_preset_registry_complete():
     assert set(PRESETS) == {"paper_200ms", "throughput", "quality",
                             "stage1_only", "fault_tolerant", "cached",
-                            "hybrid_fusion"}
+                            "live_ingest", "hybrid_fusion"}
     for name in PRESETS:
         spec = get_preset(name)
         assert spec.name == name

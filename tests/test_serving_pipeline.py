@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.index.builder import bucket_postings_by_tile
+from repro.index.builder import pack_tiles
 from repro.index.postings import shard_from_index
 from repro.isn import daat
 from repro.isn.backend import (compact_lanes, query_lane_budget,
@@ -166,7 +166,7 @@ def _synthetic_bucketed(seed, n_docs=600, vocab=48, p=4000, tile_d=128):
     docs = (pairs % n_docs).astype(np.int32)
     scores = (rng.random_sample(p) * 6).astype(np.float32)
     imps = rng.randint(1, 256, p).astype(np.int32)
-    td, tt, (ts, ti), cap = bucket_postings_by_tile(
+    td, tt, (ts, ti), cap = pack_tiles(
         docs, terms, [(scores, 0.0, np.float32), (imps, 0, np.int32)],
         n_docs, tile_d)
     return rng, terms, docs, scores, imps, td, tt, ts, ti
