@@ -33,7 +33,7 @@ import dataclasses
 import numpy as np
 
 from benchmarks.bench_online import _build
-from benchmarks.common import write_bench_artifact
+from benchmarks.common import bench_payload, write_bench_artifact
 
 
 def _cell(res) -> dict:
@@ -169,24 +169,25 @@ def run_cache(q_batch: int = 384, n_docs: int = 4096, seed: int = 7,
     enforced = ([r["on"] for r in sweep] + [r["off"] for r in sweep]
                 + grid["on"] + grid["off"])
 
-    payload = {
-        "config": {"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
-                   "backend": backend, "max_batch": max_batch,
-                   "skews": list(skews), "sweep_load": sweep_load,
-                   "loads_off": list(loads_off), "loads_on": list(loads_on),
-                   "cache": {"l1_entries": cache_spec.l1_entries,
-                             "l2_entries": cache_spec.l2_entries}},
-        "capacity_off_qps": float(capacity_off),
-        "parity": parity,
-        "inert": inert,
-        "sweep": sweep,
-        "grid": grid,
-        "certified_qps": {"off": certified_off, "on": certified_on,
-                          "speedup": (certified_on
-                                      / max(certified_off, 1e-9))},
-        "hit_ratio_at_hot_skew": float(hit_ratio_hot),
-        "gates": {},
-    }
+    payload = bench_payload(
+        "cache",
+        config={"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
+                "backend": backend, "max_batch": max_batch,
+                "skews": list(skews), "sweep_load": sweep_load,
+                "loads_off": list(loads_off), "loads_on": list(loads_on),
+                "cache": {"l1_entries": cache_spec.l1_entries,
+                          "l2_entries": cache_spec.l2_entries}},
+        parity=parity,
+        extra={
+            "capacity_off_qps": float(capacity_off),
+            "inert": inert,
+            "sweep": sweep,
+            "grid": grid,
+            "certified_qps": {"off": certified_off, "on": certified_on,
+                              "speedup": (certified_on
+                                          / max(certified_off, 1e-9))},
+            "hit_ratio_at_hot_skew": float(hit_ratio_hot),
+        })
     payload["gates"] = {
         "hits_bit_identical": (parity["no_trims_in_reference"]
                                and parity["cold_topk_identical"]

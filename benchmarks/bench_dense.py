@@ -34,7 +34,7 @@ import dataclasses
 import numpy as np
 
 from benchmarks.bench_online import _build
-from benchmarks.common import timed, write_bench_artifact
+from benchmarks.common import bench_payload, timed, write_bench_artifact
 
 
 def _parity(corpus, ql, seed: int) -> dict:
@@ -194,15 +194,12 @@ def run_dense(q_batch: int = 384, n_docs: int = 4096, seed: int = 7,
 
     mixed = [r for r in sweep if r["mix"] == "mixed"][0]["dense"]
     theta = [r for r in sweep if r["mix"] == "theta_bands"][0]["dense"]
-    payload = {
-        "config": {"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
-                   "backend": backend, "max_batch": max_batch},
-        "parity": parity,
-        "speedup": speed,
-        "sweep": sweep,
-        "inert": inert,
-        "gates": {},
-    }
+    payload = bench_payload(
+        "dense",
+        config={"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
+                "backend": backend, "max_batch": max_batch},
+        parity=parity,
+        extra={"speedup": speed, "sweep": sweep, "inert": inert})
     payload["gates"] = {
         "kernel_engine_parity": all(parity.values()),
         "batched_speedup": speed["speedup"] >= 3.0,

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Experiment, write_bench_artifact
+from benchmarks.common import Experiment, bench_payload, write_bench_artifact
 from repro.isn import oracle
 from repro.serving.latency import CostModel, percentiles
 
@@ -161,12 +161,12 @@ def run_serving(q_batch: int = 64, n_docs: int = 8192, reps: int = 25,
                 f"(match={match:.4f} < {floor}); the batched pipeline must "
                 f"reproduce the baseline — see tests/test_serving_pipeline.py")
 
-    payload = {
-        "config": {"q_batch": q_batch, "n_docs": n_docs, "k": k, "rho": rho,
-                   "reps": reps, "backend": backend, "qcap": qcap,
-                   "tile_d": spec.tile_d, "tile_cap": spec.tile_cap},
-        "engines": out,
-    }
+    payload = bench_payload(
+        "engines",
+        config={"q_batch": q_batch, "n_docs": n_docs, "k": k, "rho": rho,
+                "reps": reps, "backend": backend, "qcap": qcap,
+                "tile_d": spec.tile_d, "tile_cap": spec.tile_cap},
+        extra={"engines": out})
     payload["artifact"] = write_bench_artifact("engines", payload)
     return payload
 

@@ -42,7 +42,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import write_bench_artifact
+from benchmarks.common import bench_payload, write_bench_artifact
 
 
 def _build(q_batch, n_docs, seed, max_batch, gather_us):
@@ -185,29 +185,32 @@ def run_faults(q_batch: int = 256, n_docs: int = 4096, seed: int = 7,
         and (r_on.final is None
              or bool(np.array_equal(r_on.final, r_off.final))))
 
-    payload = {
-        "config": {"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
-                   "max_batch": max_batch, "loads": list(loads),
-                   "gather_per_shard_us": gather_us,
-                   "n_shards": ns, "replicas": replicas,
-                   "failover_timeout": base.routing.failover_timeout,
-                   "max_retries": base.routing.max_retries},
-        "capacity_qps": float(capacity),
-        "response_budget": float(budget_r),
-        "worst_case_bound": float(system().worst_case_us()),
-        "rows": rows,
-        "guarantee_holds": all(r["over_budget"] == 0 for r in rows),
-        "coverage_certified": floors_hold,
-        "inert_replay_identical": replay_identical,
-        "inert_offline_identical": offline_identical,
-        # the injector must actually bite somewhere, or the certificate
-        # is vacuous (e.g. the schedule windows missed the trace)
-        "faults_demonstrated": any(
-            r["faults"] and (r["faults"]["retries"] > 0
-                             or r["faults"]["lost_partitions"] > 0
-                             or r["faults"]["transient"] > 0)
-            for r in rows if r["scenario"] != "none"),
-    }
+    payload = bench_payload(
+        "faults",
+        config={"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
+                "max_batch": max_batch, "loads": list(loads),
+                "gather_per_shard_us": gather_us,
+                "n_shards": ns, "replicas": replicas,
+                "failover_timeout": base.routing.failover_timeout,
+                "max_retries": base.routing.max_retries},
+        rows=rows,
+        extra={
+            "capacity_qps": float(capacity),
+            "response_budget": float(budget_r),
+            "worst_case_bound": float(system().worst_case_us()),
+            "guarantee_holds": all(r["over_budget"] == 0 for r in rows),
+            "coverage_certified": floors_hold,
+            "inert_replay_identical": replay_identical,
+            "inert_offline_identical": offline_identical,
+            # the injector must actually bite somewhere, or the
+            # certificate is vacuous (e.g. the schedule windows missed
+            # the trace)
+            "faults_demonstrated": any(
+                r["faults"] and (r["faults"]["retries"] > 0
+                                 or r["faults"]["lost_partitions"] > 0
+                                 or r["faults"]["transient"] > 0)
+                for r in rows if r["scenario"] != "none"),
+        })
     payload["artifact"] = write_bench_artifact("faults", payload)
     return payload
 

@@ -24,8 +24,9 @@ import os
 
 import numpy as np
 
-from benchmarks.common import (Experiment, cv_predict, fixed_k_for_target,
-                               med_at_k, write_bench_artifact)
+from benchmarks.common import (Experiment, bench_payload, cv_predict,
+                               fixed_k_for_target, med_at_k,
+                               write_bench_artifact)
 from repro.core import hybrid
 from repro.core.reference import rbp_weights
 from repro.isn import oracle
@@ -373,18 +374,21 @@ def run_cascade(q_batch: int = 64, n_docs: int = 8192, reps: int = 10,
     qps_l = q_batch / t_l.mean()
     speedup = float(qps_b / qps_l)
 
-    payload = {
-        "config": {"q_batch": q_batch, "n_docs": n_docs, "k_serve": k_serve,
-                   "t_final": t_final, "reps": reps, "seed": seed,
-                   "backend": backend or "auto"},
-        "batched": {"qps": float(qps_b), "batch_ms": float(t_b.mean() * 1e3)},
-        "loop_baseline": {"qps": float(qps_l),
-                          "batch_ms": float(t_l.mean() * 1e3)},
-        "speedup_vs_loop": speedup,
-        "final_topt_identical": identical,
-        "stage_latency_ms": {name: float(np.mean(v)) for name, v in
-                             res_b.stage_latency.items()},
-    }
+    payload = bench_payload(
+        "cascade",
+        config={"q_batch": q_batch, "n_docs": n_docs, "k_serve": k_serve,
+                "t_final": t_final, "reps": reps, "seed": seed,
+                "backend": backend or "auto"},
+        extra={
+            "batched": {"qps": float(qps_b),
+                        "batch_ms": float(t_b.mean() * 1e3)},
+            "loop_baseline": {"qps": float(qps_l),
+                              "batch_ms": float(t_l.mean() * 1e3)},
+            "speedup_vs_loop": speedup,
+            "final_topt_identical": identical,
+            "stage_latency_ms": {name: float(np.mean(v)) for name, v in
+                                 res_b.stage_latency.items()},
+        })
     payload["artifact"] = write_bench_artifact("cascade", payload)
     # the throughput floor is defined at the reference configuration; tiny
     # smoke runs (CI) still enforce output parity above.  Wall-clock gates

@@ -32,7 +32,7 @@ import dataclasses
 import numpy as np
 
 from benchmarks.bench_online import _build
-from benchmarks.common import write_bench_artifact
+from benchmarks.common import bench_payload, write_bench_artifact
 
 
 def _index_identical(a, b) -> bool:
@@ -180,23 +180,24 @@ def run_ingest(q_batch: int = 384, n_docs: int = 4096, seed: int = 7,
     applied = sum(r["on"]["ingest"]["feed_batches_applied"] for r in sweep)
     ingested = sum(r["on"]["ingest"]["docs_ingested"] for r in sweep)
 
-    payload = {
-        "config": {"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
-                   "backend": backend, "max_batch": max_batch,
-                   "loads": list(loads), "feed_docs": feed_docs,
-                   "ingest": {"delta_docs": ing.delta_docs,
-                              "delta_postings": ing.delta_postings,
-                              "feed_qps": ing.feed_qps,
-                              "feed_batch": ing.feed_batch,
-                              "merge_threshold": ing.merge_threshold}},
-        "capacity_qps": {"sealed": float(capacity),
-                         "live": float(capacity_live)},
-        "parity": parity,
-        "accounting": accounting,
-        "inert": inert,
-        "sweep": sweep,
-        "gates": {},
-    }
+    payload = bench_payload(
+        "ingest",
+        config={"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
+                "backend": backend, "max_batch": max_batch,
+                "loads": list(loads), "feed_docs": feed_docs,
+                "ingest": {"delta_docs": ing.delta_docs,
+                           "delta_postings": ing.delta_postings,
+                           "feed_qps": ing.feed_qps,
+                           "feed_batch": ing.feed_batch,
+                           "merge_threshold": ing.merge_threshold}},
+        parity=parity,
+        extra={
+            "capacity_qps": {"sealed": float(capacity),
+                             "live": float(capacity_live)},
+            "accounting": accounting,
+            "inert": inert,
+            "sweep": sweep,
+        })
     payload["gates"] = {
         "post_merge_bit_parity": (parity["index_identical"]
                                   and parity["topk_identical"]

@@ -34,7 +34,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import write_bench_artifact
+from benchmarks.common import bench_payload, write_bench_artifact
 
 
 def _build(q_batch, n_docs, seed, backend, max_batch):
@@ -147,21 +147,24 @@ def run_online(q_batch: int = 384, n_docs: int = 4096, seed: int = 7,
 
     certified = [r for r in rows if r["load"] <= 0.8 + 1e-9
                  and r["arrival"] in ("poisson", "bursty")]
-    payload = {
-        "config": {"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
-                   "backend": backend, "max_batch": max_batch,
-                   "loads": list(loads), "arrivals": list(arrivals)},
-        "capacity_qps": float(capacity),
-        "response_budget": float(budget_r),
-        "worst_case_bound": float(fit_sys.worst_case_us()),
-        "rows": rows,
-        "parity": parity,
-        "guarantee_holds": all(r["online"]["over_budget"] == 0
-                               for r in rows),
-        # an empty certified subset must FAIL the gate, not vacuously pass
-        "regression_demonstrated": bool(certified) and all(
-            r["baseline"]["over_budget"] >= 1 for r in certified),
-    }
+    payload = bench_payload(
+        "online",
+        config={"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
+                "backend": backend, "max_batch": max_batch,
+                "loads": list(loads), "arrivals": list(arrivals)},
+        rows=rows,
+        parity=parity,
+        extra={
+            "capacity_qps": float(capacity),
+            "response_budget": float(budget_r),
+            "worst_case_bound": float(fit_sys.worst_case_us()),
+            "guarantee_holds": all(r["online"]["over_budget"] == 0
+                                   for r in rows),
+            # an empty certified subset must FAIL the gate, not
+            # vacuously pass
+            "regression_demonstrated": bool(certified) and all(
+                r["baseline"]["over_budget"] >= 1 for r in certified),
+        })
     payload["artifact"] = write_bench_artifact("online", payload)
     return payload
 

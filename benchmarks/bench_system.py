@@ -22,7 +22,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import write_bench_artifact
+from benchmarks.common import bench_payload, write_bench_artifact
 
 
 def run_system(q_batch: int = 64, n_docs: int = 8192,
@@ -99,16 +99,18 @@ def run_system(q_batch: int = 64, n_docs: int = 8192,
         }
 
     n0, n1 = shards[0], shards[-1]
-    payload = {
-        "config": {"q_batch": q_batch, "n_docs": n_docs,
-                   "shards": list(shards), "reps": reps, "seed": seed,
-                   "backend": backend or "auto"},
-        "topk_identical_across_shards": bool(exact),
-        "stage1_max_shrink": (
-            results[f"shards_{n0}"]["stage1_ms"]["max"]
-            / max(results[f"shards_{n1}"]["stage1_ms"]["max"], 1e-9)),
-        **results,
-    }
+    payload = bench_payload(
+        "system",
+        config={"q_batch": q_batch, "n_docs": n_docs,
+                "shards": list(shards), "reps": reps, "seed": seed,
+                "backend": backend or "auto"},
+        extra={
+            "topk_identical_across_shards": bool(exact),
+            "stage1_max_shrink": (
+                results[f"shards_{n0}"]["stage1_ms"]["max"]
+                / max(results[f"shards_{n1}"]["stage1_ms"]["max"], 1e-9)),
+            **results,
+        })
     payload["artifact"] = write_bench_artifact("system", payload)
     return payload
 

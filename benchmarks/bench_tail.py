@@ -37,7 +37,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import write_bench_artifact
+from benchmarks.common import bench_payload, write_bench_artifact
 
 
 def run_tail(q_batch: int = 256, n_docs: int = 8192, seed: int = 7,
@@ -119,37 +119,39 @@ def run_tail(q_batch: int = 256, n_docs: int = 8192, seed: int = 7,
     identical_topk = bool(np.array_equal(res_seed.topk, res_enf.topk))
     identical_final = bool(np.array_equal(res_seed.final, res_enf.final))
     bound = enf_sys.worst_case_us()
-    payload = {
-        "config": {"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
-                   "backend": backend, "budget_percentile": pct},
-        "budget": budget,
-        "late_rho": int(late_rho),
-        "raw_max": float(lat_raw.max()),
-        "worst_case_bound": float(bound),
-        "bound_holds": bool(res_enf.latency.max() <= bound + 1e-9),
-        "seed_scheduler": {
-            "over_budget": int(res_seed.stats["over_budget"]),
-            "over_budget_pct": float(res_seed.stats["over_budget_pct"]),
-            "max": float(res_seed.latency.max()),
-            "late_hedged": int(res_seed.stats["late_hedged"]),
-        },
-        "enforced": {
-            "over_budget": int(res_enf.stats["over_budget"]),
-            "over_budget_pct": float(res_enf.stats["over_budget_pct"]),
-            "max": float(res_enf.latency.max()),
-            "late_hedged": int(res_enf.stats["late_hedged"]),
-            "late_hedged_jass": int(res_enf.stats["late_hedged_jass"]),
-            "stage2_trimmed": int(
-                res_enf.stats["budget"]["stage2_trimmed"]),
-            "stage2_skipped": int(
-                res_enf.stats["budget"]["stage2_skipped"]),
-        },
-        "identical_topk": identical_topk,
-        "identical_final": identical_final,
-        "regression_demonstrated": int(res_seed.stats["over_budget"]) >= 1,
-        "bmw_late_hedge_exercised": int(res_seed.stats["late_hedged"]) >= 1,
-        "guarantee_holds": int(res_enf.stats["over_budget"]) == 0,
-    }
+    payload = bench_payload(
+        "tail",
+        config={"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
+                "backend": backend, "budget_percentile": pct},
+        extra={
+            "budget": budget,
+            "late_rho": int(late_rho),
+            "raw_max": float(lat_raw.max()),
+            "worst_case_bound": float(bound),
+            "bound_holds": bool(res_enf.latency.max() <= bound + 1e-9),
+            "seed_scheduler": {
+                "over_budget": int(res_seed.stats["over_budget"]),
+                "over_budget_pct": float(res_seed.stats["over_budget_pct"]),
+                "max": float(res_seed.latency.max()),
+                "late_hedged": int(res_seed.stats["late_hedged"]),
+            },
+            "enforced": {
+                "over_budget": int(res_enf.stats["over_budget"]),
+                "over_budget_pct": float(res_enf.stats["over_budget_pct"]),
+                "max": float(res_enf.latency.max()),
+                "late_hedged": int(res_enf.stats["late_hedged"]),
+                "late_hedged_jass": int(res_enf.stats["late_hedged_jass"]),
+                "stage2_trimmed": int(
+                    res_enf.stats["budget"]["stage2_trimmed"]),
+                "stage2_skipped": int(
+                    res_enf.stats["budget"]["stage2_skipped"]),
+            },
+            "identical_topk": identical_topk,
+            "identical_final": identical_final,
+            "regression_demonstrated": int(res_seed.stats["over_budget"]) >= 1,
+            "bmw_late_hedge_exercised": int(res_seed.stats["late_hedged"]) >= 1,
+            "guarantee_holds": int(res_enf.stats["over_budget"]) == 0,
+        })
     payload["artifact"] = write_bench_artifact("tail", payload)
     return payload
 

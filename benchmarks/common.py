@@ -45,13 +45,82 @@ def timed(fn, reps: int, warmup: int = 1) -> np.ndarray:
     return out
 
 
+BENCH_SCHEMA_VERSION = 1
+
+
+def bench_payload(name: str, *, config: dict, rows=None, parity=None,
+                  gates: dict | None = None, timestamp: str | None = None,
+                  extra: dict | None = None) -> dict:
+    """The shared ``BENCH_*.json`` envelope every bench emitter uses.
+
+    Standardized keys make cross-PR trajectory diffs (and the
+    ``obs_diff`` regression gate) mechanical instead of per-bench manual
+    work: ``schema_version``, ``name``, ``config`` (the knobs the run was
+    taken under), ``rows`` (the measured table), ``parity`` (bit-equality
+    flags or None), ``gates`` (named pass/fail booleans) and an optional
+    caller-passed ``timestamp`` (never generated here — artifacts must
+    stay byte-deterministic for same-config runs).  Bench-specific keys
+    ride in ``extra`` and are merged at the top level, so existing
+    renderers and CI gates keep reading the names they always did.
+    """
+    payload: dict = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "name": str(name),
+        "config": dict(config),
+        "rows": rows if rows is not None else [],
+        "parity": parity,
+    }
+    if gates is not None:
+        payload["gates"] = gates
+    if timestamp is not None:
+        payload["timestamp"] = str(timestamp)
+    if extra:
+        for k, v in extra.items():
+            if k in payload:
+                raise ValueError(f"extra key {k!r} collides with a "
+                                 "schema key")
+            payload[k] = v
+    validate_bench_payload(payload)
+    return payload
+
+
+def validate_bench_payload(payload: dict) -> None:
+    """Raise if a payload claiming the shared schema is malformed."""
+    if payload.get("schema_version") != BENCH_SCHEMA_VERSION:
+        raise ValueError("unknown bench schema_version "
+                         f"{payload.get('schema_version')!r}")
+    if not isinstance(payload.get("name"), str) or not payload["name"]:
+        raise ValueError("bench payload needs a non-empty 'name'")
+    if not isinstance(payload.get("config"), dict):
+        raise ValueError("bench payload needs a 'config' dict")
+    if not isinstance(payload.get("rows"), list):
+        raise ValueError("bench payload 'rows' must be a list")
+    parity = payload.get("parity")
+    if parity is not None and not isinstance(parity, dict):
+        raise ValueError("bench payload 'parity' must be a dict or None")
+    if "gates" in payload:
+        gates = payload["gates"]
+        if (not isinstance(gates, dict)
+                or not all(isinstance(v, (bool, np.bool_))
+                           for v in gates.values())):
+            raise ValueError("bench payload 'gates' must map names to "
+                             "booleans")
+    if "timestamp" in payload and not isinstance(payload["timestamp"],
+                                                 str):
+        raise ValueError("bench payload 'timestamp' must be a string "
+                         "(caller-supplied)")
+
+
 def write_bench_artifact(name: str, payload: dict) -> str:
     """Write a tracked benchmark artifact (``results/BENCH_<name>.json``).
 
     These artifacts record the perf trajectory across PRs (queries/sec,
     latency percentiles, speedups); keep the payload JSON-plain so diffs
-    stay readable.
+    stay readable.  Payloads carrying ``schema_version`` are validated
+    against the shared envelope (:func:`bench_payload`).
     """
+    if "schema_version" in payload:
+        validate_bench_payload(payload)
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, f"BENCH_{name}.json")
     with open(path, "w") as f:

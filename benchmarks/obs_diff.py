@@ -1,0 +1,329 @@
+"""Observability regression gate: diff two telemetry snapshots.
+
+``SearchSystem.snapshot()`` exports every serving metric (per-stage
+latency quantiles, shed/trim/retry/failover counters, cache hit ratio,
+ingest backpressure) as one deterministic dict.  That makes perf
+regressions *diffable*: this module compares a current snapshot against a
+committed baseline under per-metric tolerance rules and exits non-zero on
+any regression, so the telemetry subsystem — not ad-hoc per-bench checks
+— is the regression surface for future perf PRs.
+
+Rules (see ``DEFAULT_TOL``):
+
+* **latency histograms** (``*latency*``, ``*wait*``): each exported
+  quantile (p50/p95/p99/p99.99) may not exceed the baseline by more than
+  a relative tolerance plus an absolute slack — increases only; getting
+  faster never fails the gate;
+* **bad-event counters** (budget violations, sheds, trims/skips, retries,
+  lost partitions): hard-fail when the baseline had zero and the current
+  run has any; otherwise the same rel+abs slack applies;
+* **cache hit ratio**: may not drop more than an absolute slack;
+* a metric present in the baseline but missing from the current snapshot
+  is itself a regression (telemetry coverage must not silently shrink).
+
+Usage::
+
+  PYTHONPATH=src python -m benchmarks.obs_diff BASE.json CUR.json
+  PYTHONPATH=src python -m benchmarks.obs_diff --gate [--write-baseline]
+
+``--gate`` serves a small deterministic trace (offline batch + online
+simulation) with telemetry on, self-checks that an injected regression IS
+flagged, then diffs against ``results/BENCH_obs_baseline.json`` and
+writes ``results/BENCH_obs.json``.  CI runs it as a smoke.
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import dataclasses
+import json
+import os
+import sys
+
+from benchmarks.common import RESULTS, bench_payload, write_bench_artifact
+
+QUANTILES = ("p50", "p95", "p99", "p99.99")
+
+DEFAULT_TOL = {
+    "latency_rel": 0.25,    # quantile may grow 25% ...
+    "latency_abs_us": 2.0,  # ... plus 2us absolute slack
+    "count_rel": 0.25,      # bad-event counters: same shape
+    "count_abs": 2.0,
+    "hit_ratio_drop": 0.10,
+}
+
+# histogram name substrings whose growth is a regression
+_LATENCY_HISTS = ("latency", "wait")
+# counter names (exact, or section prefix before "{") where more is worse
+_BAD_COUNTERS = ("budget_violations", "shed_queries", "stage2_trimmed",
+                 "stage2_skipped")
+# mirrored legacy-section keys where more is worse: section -> key substrs
+_BAD_SECTION_KEYS = {
+    "admission": ("shed_",),
+    "scheduler": ("over_budget", "late_hedged"),
+    "faults": ("retries", "lost_partitions", "transient", "degraded"),
+    "ingest": ("feed_throttled", "merges_forced"),
+}
+
+
+def _is_latency_hist(key: str) -> bool:
+    name = key.split("{", 1)[0]
+    return any(s in name for s in _LATENCY_HISTS)
+
+
+def _is_bad_counter(key: str) -> bool:
+    name, _, rest = key.partition("{")
+    if name in _BAD_COUNTERS:
+        return True
+    for section, subs in _BAD_SECTION_KEYS.items():
+        if name == section and any(s in rest for s in subs):
+            return True
+    return False
+
+
+def diff_snapshots(base: dict, cur: dict, tol: dict | None = None) -> list:
+    """Regressions of ``cur`` relative to ``base`` (empty list = pass).
+
+    Each finding is ``{"metric", "field", "base", "cur", "limit",
+    "rule"}``; improvements never appear.
+    """
+    t = dict(DEFAULT_TOL, **(tol or {}))
+    out: list[dict] = []
+
+    def flag(metric, field, b, c, limit, rule):
+        out.append({"metric": metric, "field": field, "base": float(b),
+                    "cur": float(c), "limit": float(limit), "rule": rule})
+
+    b_h = base.get("histograms", {})
+    c_h = cur.get("histograms", {})
+    for key, bh in sorted(b_h.items()):
+        if not _is_latency_hist(key) or not bh.get("count"):
+            continue
+        ch = c_h.get(key)
+        if ch is None:
+            flag(key, "present", 1, 0, 1, "missing")
+            continue
+        for q in QUANTILES:
+            if q not in bh or q not in ch:
+                continue
+            limit = bh[q] * (1.0 + t["latency_rel"]) + t["latency_abs_us"]
+            if ch[q] > limit:
+                flag(key, q, bh[q], ch[q], limit, "latency")
+
+    b_c = base.get("counters", {})
+    c_c = cur.get("counters", {})
+    # union of keys: a bad-event counter absent from a snapshot is 0
+    # (never incremented), so a new-in-cur violation still trips the
+    # zero-to-nonzero rule — but coverage loss (in base, gone in cur)
+    # is only a regression when the baseline actually saw events
+    for key in sorted(set(b_c) | set(c_c)):
+        if not _is_bad_counter(key):
+            continue
+        bv = b_c.get(key, 0)
+        cv = c_c.get(key)
+        if cv is None:
+            if bv > 0:
+                flag(key, "present", 1, 0, 1, "missing")
+            continue
+        if bv == 0:
+            if cv > 0:
+                flag(key, "total", bv, cv, 0, "zero_to_nonzero")
+            continue
+        limit = bv * (1.0 + t["count_rel"]) + t["count_abs"]
+        if cv > limit:
+            flag(key, "total", bv, cv, limit, "count")
+
+    b_g = base.get("gauges", {})
+    c_g = cur.get("gauges", {})
+    if "cache_hit_ratio" in b_g:
+        cv = c_g.get("cache_hit_ratio")
+        limit = b_g["cache_hit_ratio"] - t["hit_ratio_drop"]
+        if cv is None:
+            flag("cache_hit_ratio", "present", 1, 0, 1, "missing")
+        elif cv < limit:
+            flag("cache_hit_ratio", "value", b_g["cache_hit_ratio"], cv,
+                 limit, "hit_ratio")
+    return out
+
+
+def inject_regression(snap: dict) -> dict:
+    """A tampered copy of ``snap`` that any sound gate must flag: doubled
+    service-latency quantiles plus invented budget violations."""
+    bad = copy.deepcopy(snap)
+    h = bad.get("histograms", {}).get("service_latency_us")
+    if h:
+        for q in QUANTILES:
+            if q in h:
+                h[q] *= 2.0
+    c = bad.setdefault("counters", {})
+    c["budget_violations"] = c.get("budget_violations", 0) + 5
+    return bad
+
+
+def format_findings(findings: list) -> str:
+    lines = [f"{len(findings)} regression(s):"]
+    for f in findings:
+        lines.append(f"  {f['metric']} {f['field']}: {f['base']:g} -> "
+                     f"{f['cur']:g} (limit {f['limit']:g}, "
+                     f"rule={f['rule']})")
+    return "\n".join(lines)
+
+
+def _load_snapshot(path: str) -> dict:
+    """A snapshot file: either a raw ``snapshot()`` dict or a bench
+    payload wrapping one under ``"snapshot"``."""
+    with open(path) as f:
+        d = json.load(f)
+    return d.get("snapshot", d) if isinstance(d, dict) else d
+
+
+def _gate_system(q_batch, n_docs, seed, max_batch):
+    """A small fitted telemetry-on system + its query trace, built the
+    same way ``bench_online`` builds its cascade (jnp backend, frozen
+    thresholds) so the snapshot is deterministic for a given config."""
+    from repro.configs.cascade_presets import get_preset
+    from repro.index.corpus import CorpusParams, build_corpus, build_queries
+    from repro.serving.spec import BackendSpec, TelemetrySpec
+    from repro.serving.system import build_system
+
+    corpus = build_corpus(CorpusParams(n_docs=n_docs,
+                                       vocab=max(n_docs // 2, 1024),
+                                       avg_doclen=96, zipf_a=1.05,
+                                       seed=seed))
+    base = dataclasses.replace(get_preset("paper_200ms"),
+                               backend=BackendSpec(backend="jnp"))
+    base = dataclasses.replace(
+        base, online=dataclasses.replace(base.online, max_batch=max_batch))
+    ql = build_queries(corpus, q_batch, stop_k=base.index.stop_k,
+                       seed=seed + 4)
+    fit_sys = build_system(base, corpus)
+    fit_sys.fit(ql, None, seed=seed)
+    base = dataclasses.replace(
+        base, routing=dataclasses.replace(
+            base.routing, t_k=fit_sys._base_cfg.t_k,
+            t_time=fit_sys._base_cfg.t_time, calibrate=False,
+            adapt_every=0),
+        telemetry=TelemetrySpec(enabled=True))
+    system = build_system(base, fit_sys.index, corpus=corpus,
+                          models=fit_sys.models, ltr=fit_sys.ltr,
+                          cost=fit_sys.cost)
+    return system, ql, fit_sys
+
+
+def run_gate(q_batch: int = 256, n_docs: int = 4096, seed: int = 7,
+             max_batch: int = 8, load: float = 0.7,
+             baseline: str | None = None,
+             write_baseline: bool = False) -> dict:
+    from repro.serving.online import estimate_capacity
+    from repro.serving.spec import TrafficSpec
+
+    if baseline is None:
+        baseline = os.path.join(RESULTS, "BENCH_obs_baseline.json")
+    system, ql, fit_sys = _gate_system(q_batch, n_docs, seed, max_batch)
+    capacity = estimate_capacity(fit_sys, ql.terms, ql.mask, ql.topic)
+
+    # one offline batch + one online trace through the same instrumented
+    # system: the snapshot covers both serving paths
+    system.serve(ql.terms, ql.mask, ql.topic)
+    traffic = TrafficSpec(arrival="bursty", qps=load * capacity,
+                          seed=seed + 1)
+    system.serve_online(ql.terms, ql.mask, ql.topic, traffic=traffic)
+    snap = system.snapshot()
+    snap_lean = {k: v for k, v in snap.items() if k != "traces"}
+
+    # the gate must have teeth before it is trusted with a verdict
+    self_clean = not diff_snapshots(snap, snap)
+    injected = diff_snapshots(snap, inject_regression(snap))
+    rules_hit = {f["rule"] for f in injected}
+    self_flags = bool(injected) and {"latency",
+                                     "zero_to_nonzero"} <= rules_hit
+
+    baseline_present = os.path.exists(baseline)
+    findings = (diff_snapshots(_load_snapshot(baseline), snap)
+                if baseline_present else [])
+
+    config = {"q_batch": q_batch, "n_docs": n_docs, "seed": seed,
+              "max_batch": max_batch, "load": load, "backend": "jnp",
+              "tolerances": DEFAULT_TOL}
+    if write_baseline:
+        base_payload = bench_payload("obs_baseline", config=config,
+                                     extra={"snapshot": snap_lean})
+        base_payload["artifact"] = write_bench_artifact("obs_baseline",
+                                                        base_payload)
+        baseline_present, findings = True, []
+
+    payload = bench_payload(
+        "obs", config=config,
+        gates={
+            "self_check_clean": self_clean,
+            "self_check_flags_regression": self_flags,
+            "baseline_present": baseline_present,
+            "no_regressions_vs_baseline": not findings,
+        },
+        extra={"snapshot": snap_lean, "findings": findings,
+               "baseline": baseline,
+               "capacity_qps": float(capacity),
+               "traces_kept": len(snap.get("traces", []))})
+    payload["artifact"] = write_bench_artifact("obs", payload)
+    return payload
+
+
+def render_gate(res: dict) -> str:
+    g = res["gates"]
+    snap = res["snapshot"]
+    svc = snap["histograms"].get("service_latency_us", {})
+    resp = snap["histograms"].get("response_latency_us", {})
+    lines = [
+        "gates: " + " ".join(f"{k}={'PASS' if v else 'FAIL'}"
+                             for k, v in sorted(g.items())),
+        f"service p50={svc.get('p50', 0):.0f} p99={svc.get('p99', 0):.0f} "
+        f"p99.99={svc.get('p99.99', 0):.0f} us "
+        f"(n={svc.get('count', 0)}); response "
+        f"p99.99={resp.get('p99.99', 0):.0f} us "
+        f"(n={resp.get('count', 0)})",
+        f"baseline: {res['baseline']}"
+        + ("" if g["baseline_present"] else " (absent — diff skipped)"),
+    ]
+    if res["findings"]:
+        lines.append(format_findings(res["findings"]))
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("files", nargs="*",
+                    help="BASE.json CUR.json for a pure snapshot diff")
+    ap.add_argument("--gate", action="store_true",
+                    help="serve the deterministic gate trace and diff "
+                         "against the committed baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="with --gate: (re)write the committed baseline "
+                         "from this run")
+    ap.add_argument("--rel-tol", type=float, default=None,
+                    help="override latency/count relative tolerance")
+    args = ap.parse_args()
+
+    if args.gate or args.write_baseline:
+        res = run_gate(write_baseline=args.write_baseline)
+        print(render_gate(res))
+        print(f"artifact: {res['artifact']}")
+        ok = all(res["gates"].values())
+        return 0 if ok else 1
+
+    if len(args.files) != 2:
+        ap.error("need BASE.json CUR.json (or --gate)")
+    tol = None
+    if args.rel_tol is not None:
+        tol = {"latency_rel": args.rel_tol, "count_rel": args.rel_tol}
+    findings = diff_snapshots(_load_snapshot(args.files[0]),
+                              _load_snapshot(args.files[1]), tol)
+    if findings:
+        print(format_findings(findings))
+        return 1
+    print("no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

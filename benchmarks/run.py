@@ -42,7 +42,7 @@ def main() -> None:
                             bench_ingest, bench_kernels, bench_online,
                             bench_predict_k, bench_predict_rho,
                             bench_predict_time, bench_system, bench_tail,
-                            bench_tail_overlap)
+                            bench_tail_overlap, obs_diff)
     from benchmarks.common import load_experiment
 
     t0 = time.time()
@@ -179,6 +179,20 @@ def main() -> None:
     if not (fl["inert_replay_identical"] and fl["inert_offline_identical"]):
         raise RuntimeError("fault machinery is not inert: an empty "
                            "FaultSpec perturbed fault-free serving")
+
+    _section("Observability gate (telemetry snapshot vs baseline)")
+    ob = obs_diff.run_gate()
+    print(obs_diff.render_gate(ob))
+    print(f"artifact: {ob['artifact']}")
+    if not (ob["gates"]["self_check_clean"]
+            and ob["gates"]["self_check_flags_regression"]):
+        raise RuntimeError("observability gate lost its teeth: the "
+                           "snapshot self-diff is dirty or an injected "
+                           "regression went unflagged")
+    if not ob["gates"]["no_regressions_vs_baseline"]:
+        raise RuntimeError("observability gate regressed vs the committed "
+                           "baseline:\n"
+                           + obs_diff.format_findings(ob["findings"]))
 
     _section(f"Loading experiment ({args.queries} queries)")
     exp = load_experiment(args.queries)

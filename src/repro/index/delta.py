@@ -234,3 +234,9 @@ class DeltaStore:
             "fill": float(self.fill),
             "base_docs": int(self.base_docs),
         }
+
+    def export_metrics(self, reg) -> None:
+        """Mirror delta occupancy into a telemetry registry (the ingest
+        backpressure surface: fill drives the feed/merge gates)."""
+        for k, v in self.stats().items():
+            reg.gauge("ingest", key=k).set(v)

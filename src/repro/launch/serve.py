@@ -16,6 +16,30 @@ import argparse
 import dataclasses
 
 
+def _emit_telemetry(system, args):
+    """Write/print the requested telemetry exports after a serve."""
+    if system.telemetry is None:
+        return
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            f.write(system.render_snapshot("json"))
+        print(f"[serve] wrote metrics snapshot to {args.metrics_json}")
+    if args.metrics_prom:
+        with open(args.metrics_prom, "w") as f:
+            f.write(system.render_snapshot("prom"))
+        print(f"[serve] wrote prometheus metrics to {args.metrics_prom}")
+    if args.trace_slowest:
+        from repro.serving.telemetry import why_slow
+        traces = system.telemetry.traces.slowest(args.trace_slowest)
+        print(f"[serve] {len(traces)} slowest traces "
+              f"(of {system.telemetry.traces.offered} offered):")
+        for tr in traces:
+            w = why_slow(tr)
+            mark = " VIOLATION" if tr.violation else ""
+            print(f"[serve]   qid={tr.qid} latency={tr.latency_us:.1f} "
+                  f"mode={tr.meta.get('mode', '?')}{mark}: {w['detail']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="paper_200ms",
@@ -124,6 +148,16 @@ def main():
     ap.add_argument("--fault-horizon", type=float, default=10_000.0,
                     help="trace horizon (cost units) named scenarios are "
                          "sized against")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the telemetry snapshot (deterministic "
+                         "JSON) to this path after serving (enables "
+                         "telemetry)")
+    ap.add_argument("--metrics-prom", default=None,
+                    help="write the snapshot in Prometheus text format to "
+                         "this path after serving (enables telemetry)")
+    ap.add_argument("--trace-slowest", type=int, default=0,
+                    help="print the N slowest/violating query traces with "
+                         "a why-slow attribution (enables telemetry)")
     args = ap.parse_args()
 
     from repro.configs.cascade_presets import get_preset
@@ -191,6 +225,9 @@ def main():
         dense = dataclasses.replace(dense, **kw)
     if args.fusion is not None:
         fusion = dataclasses.replace(fusion, method=args.fusion)
+    telemetry = spec.telemetry
+    if args.metrics_json or args.metrics_prom or args.trace_slowest:
+        telemetry = dataclasses.replace(telemetry, enabled=True)
     spec = dataclasses.replace(
         spec,
         deploy=dataclasses.replace(spec.deploy, n_shards=args.shards,
@@ -201,6 +238,7 @@ def main():
         dense=dense,
         fusion=fusion,
         ingest=ingest,
+        telemetry=telemetry,
         stage2=(spec.stage2 if not args.no_ltr else
                 dataclasses.replace(spec.stage2, enabled=False)),
         backend=(spec.backend if args.backend is None else
@@ -316,6 +354,7 @@ def main():
                   f"recovered={f['recovered']}")
         print(f"[serve] over response budget ({s['response_budget']:.0f}): "
               f"{s['over_budget']} ({s['over_budget_pct']:.4f}%)")
+        _emit_telemetry(system, args)
         return
 
     print("[serve] serving trace through the cascade ...")
@@ -365,6 +404,7 @@ def main():
           f"mirrors jass={pool['jass']} bmw={pool['bmw']} "
           f"(fraction {pool['jass_fraction']:.2f}), "
           f"served={pool['served']}")
+    _emit_telemetry(system, args)
 
 
 if __name__ == "__main__":

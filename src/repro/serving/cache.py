@@ -310,6 +310,20 @@ class ServingCache:
                         **lru.stats})
         return s
 
+    def export_metrics(self, reg) -> None:
+        """Mirror cache counters + per-level occupancy into a telemetry
+        registry."""
+        for k, v in self.counters.items():
+            reg.counter("cache", key=k).set_total(v)
+        reg.gauge("cache_hit_ratio").set(self.hit_ratio())
+        for name, lru in (("l1", self.l1), ("l2", self.l2)):
+            if lru is None:
+                continue
+            reg.gauge("cache_entries", level=name).set(len(lru))
+            reg.gauge("cache_nbytes", level=name).set(lru.nbytes)
+            for k, v in lru.stats.items():
+                reg.counter("cache_level", level=name, key=k).set_total(v)
+
 
 def ingest_epoch(epoch: tuple, counter: int) -> tuple:
     """Fold the live-ingest generation counter into a coverage/fault epoch.

@@ -98,6 +98,18 @@ class FaultInjector:
         self.draws += 1
         return bool(self.rng.rand() < sp.timeout_p)
 
+    def export_metrics(self, reg) -> None:
+        """Mirror the schedule shape + draw count into a telemetry
+        registry (outcome counters live in SearchSystem._fault_counters)."""
+        reg.gauge("fault_schedule_active").set(1.0 if self.active else 0.0)
+        reg.gauge("fault_schedule", kind="crashes").set(
+            len(self.spec.crashes))
+        reg.gauge("fault_schedule", kind="stragglers").set(
+            len(self.spec.stragglers))
+        reg.gauge("fault_schedule", kind="outages").set(
+            len(self.spec.outages))
+        reg.counter("fault_transient_draws").set_total(self.draws)
+
 
 # ---------------------------------------------------------------------------
 # canonical certification scenarios

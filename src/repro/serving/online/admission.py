@@ -138,6 +138,16 @@ class AdmissionController:
                       "merge_deferred": 0}
 
     # ------------------------------------------------------------------
+    def export_metrics(self, reg) -> None:
+        """Mirror the ladder's decision counters + live estimators into a
+        telemetry registry."""
+        for k, v in self.stats.items():
+            reg.counter("admission", key=k).set_total(v)
+        reg.gauge("admission_occupancy_ewma_us").set(self.occupancy_ewma)
+        reg.gauge("admission_hit_ewma").set(self.hit_ewma)
+        reg.gauge("response_budget_us").set(self.response_budget)
+        reg.gauge("admission_stage1_bound_us").set(self.stage1_bound)
+
     def observe_batch(self, occupancy: float, alpha: float = 0.2) -> None:
         """Fold an observed batch occupancy into the wait estimator."""
         self.occupancy_ewma = ((1 - alpha) * self.occupancy_ewma

@@ -576,10 +576,49 @@ class DeploySpec:
             raise ValueError("jass_fraction must be in [0, 1]")
 
 
+@dataclass(frozen=True)
+class TelemetrySpec:
+    """Deterministic observability layer (metrics + traces + snapshots).
+
+    Disabled by default and provably inert when disabled: the system
+    allocates no registry, every instrumentation hook is guarded, and
+    serving plus the online event log stay bit-identical.  All telemetry
+    runs on the virtual serving clock — no wall time, no RNG — so
+    same-seed replays export byte-identical snapshots.
+    """
+    enabled: bool = False
+    bins_per_decade: int = 64   # histogram resolution; rel err ~1.8%
+    exact_n: int = 256          # exact quantiles while N <= exact_n
+    hist_lo: float = 1e-3       # bucketed range lower edge (us)
+    hist_hi: float = 1e7        # bucketed range upper edge (us)
+    trace_reservoir: int = 32   # slowest/violating traces retained
+    snapshot_every_us: float = 0.0   # online snapshot cadence (0 = off)
+    max_snapshots: int = 64
+
+    @property
+    def active(self) -> bool:
+        return self.enabled
+
+    def validate(self) -> None:
+        if self.bins_per_decade < 1:
+            raise ValueError("bins_per_decade must be >= 1")
+        if self.exact_n < 0:
+            raise ValueError("exact_n must be >= 0")
+        if not 0 < self.hist_lo < self.hist_hi:
+            raise ValueError("need 0 < hist_lo < hist_hi")
+        if self.trace_reservoir < 0:
+            raise ValueError("trace_reservoir must be >= 0")
+        if self.snapshot_every_us < 0:
+            raise ValueError("snapshot_every_us must be >= 0")
+        if self.max_snapshots < 1:
+            raise ValueError("max_snapshots must be >= 1")
+
+
 _NODES = {"index": IndexSpec, "stage0": Stage0Spec, "routing": RoutingSpec,
           "stage2": Stage2Spec, "backend": BackendSpec, "deploy": DeploySpec,
           "online": OnlineSpec, "fault": FaultSpec, "cache": CacheSpec,
-          "dense": DenseSpec, "fusion": FusionSpec, "ingest": IngestSpec}
+          "dense": DenseSpec, "fusion": FusionSpec, "ingest": IngestSpec,
+          "telemetry": TelemetrySpec}
 
 
 @dataclass(frozen=True)
@@ -597,6 +636,7 @@ class CascadeSpec:
     dense: DenseSpec = field(default_factory=DenseSpec)
     fusion: FusionSpec = field(default_factory=FusionSpec)
     ingest: IngestSpec = field(default_factory=IngestSpec)
+    telemetry: TelemetrySpec = field(default_factory=TelemetrySpec)
     name: str = "custom"
 
     def validate(self) -> "CascadeSpec":

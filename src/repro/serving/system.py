@@ -71,6 +71,10 @@ from repro.serving.replicas import BMW, JASS, PoolConfig, ReplicaPool
 from repro.serving.scheduler import (RoutedBatch, SchedulerConfig,
                                      StageZeroScheduler)
 from repro.serving.spec import CascadeSpec, RoutingSpec
+from repro.serving.telemetry import QueryTrace, Span, Telemetry
+from repro.serving.telemetry.export import (legacy_stats_view,
+                                            render_json,
+                                            render_prometheus)
 
 
 @dataclass
@@ -218,6 +222,15 @@ class SearchSystem:
         # — the same inertness discipline as FaultSpec
         self.cache = (ServingCache(spec.cache) if spec.cache.active
                       else None)
+        # deterministic observability (spec.telemetry; inert by default):
+        # None keeps every serve path bit-identical to the pre-telemetry
+        # system — every hook below guards on `self.telemetry is None`,
+        # the same inertness discipline as FaultSpec/CacheSpec
+        self.telemetry = (Telemetry(spec.telemetry, spec.routing.budget)
+                          if spec.telemetry.active else None)
+        self._tel_suppress = False    # True inside a cache-miss sub-serve
+                                      # so batch metrics aren't double-fed
+        self._tel_cache_tag = None    # "miss" tags sub-serve traces
         self._fault_counters = {
             "retries": 0,        # failover re-issues after a shard timeout
             "transient": 0,      # attempts killed by the timeout storm
@@ -1114,55 +1127,23 @@ class SearchSystem:
         # windows expressed in cost-model time mean the same thing whether
         # serve() is driven offline or by the online event loop
         self._clock = now + (float(lat.max()) if q else 0.0)
-        stats = dict(self.sched.stats)
-        stats.update(percentiles(lat))
-        n_over, pct = over_budget(lat, self.budget)
-        stats["over_budget"] = n_over
-        stats["over_budget_pct"] = pct
-        stats["stages"] = {}
-        for name, t in stage_latency.items():
-            if not np.any(t > 0):
-                continue
-            entry = percentiles(t)
-            # per-stage budget attribution: each stage is accountable to
-            # its reserved share of the cascade budget (fused routes spend
-            # the fusion reserve inside stage 1)
-            b = (self._budget_reserve[name]
-                 + (self._budget_reserve.get("fusion", 0.0)
-                    if name == "stage1" else 0.0))
-            entry["budget"] = b
-            entry["over_budget"] = over_budget(t, b)[0]
-            stats["stages"][name] = entry
-        stats["budget"] = {
-            "total": self.budget,
-            "reserve": dict(self._budget_reserve),
-            "enforce": enforce,
-            "worst_case_bound": self.worst_case_us(),
-            "stage2_trimmed": trimmed,
-            "stage2_skipped": skipped,
-        }
-        stats["n_shards"] = self.n_shards
-        stats["pool"] = self.pool.stats()
-        if faulted:
-            stats["faults"] = dict(self._fault_counters)
-            stats["faults"]["clock"] = now
-            stats["coverage"] = {
-                "min": float(coverage.min()) if q else 1.0,
-                "mean": float(coverage.mean()) if q else 1.0,
-                "degraded": int((coverage < 1.0).sum()),
-            }
         dense_info = None
         if self.dense is not None:
             dense_info = {"modality": modality, "theta_skip": theta_skip,
                           "fallback": fallback}
-            stats["dense"] = {
-                "lexical": int(np.sum(modality == M_LEX)),
-                "dense_only": int(np.sum(modality == M_DENSE)),
-                "fused": int(np.sum(modality == M_BOTH)),
-                "theta_skips": int(theta_skip.sum()),
-                "fallbacks": int(fallback.sum()),
-            }
-        self._last_stats = stats
+        stats = self._build_stats(
+            lat, stage_latency, trimmed, skipped, faulted, coverage, now,
+            dense_info=dense_info)
+        if self.telemetry is not None:
+            self._record_traces(
+                q=q, now=now, lat=lat, stage_latency=stage_latency,
+                pk=pk, pr=pr, pt=pt, routed=routed, modality=modality,
+                theta_skip=theta_skip, fallback=fallback, used=used,
+                t_shards=t_shards, faulted=faulted,
+                delay=delay if faulted else None,
+                mult=mult if faulted else None,
+                lost=lost if faulted else None,
+                dropped=dropped if faulted else None, coverage=coverage)
         return PipelineResult(topk=topk, final=final, candidates_used=used,
                               latency=lat, stage_latency=stage_latency,
                               stats=stats, coverage=coverage,
@@ -1393,14 +1374,33 @@ class SearchSystem:
         miss_rows = np.flatnonzero(~(l1_hit | l2_hit))
         sub = None
         if len(miss_rows):
-            sub = self._serve_direct(
-                terms[miss_rows], mask[miss_rows],
-                None if topics is None else topics[miss_rows],
-                stage2_cap=(None if stage2_cap is None
-                            else np.asarray(stage2_cap)[miss_rows]),
-                shard_cap=(None if shard_cap is None
-                           else np.asarray(shard_cap)[miss_rows]),
-                now=now)
+            tel = self.telemetry
+            outer_ctx = tel.batch_context if tel is not None else None
+            if tel is not None:
+                # the sub-serve records the miss rows' traces (it is the
+                # real cascade execution) tagged "miss", but must not
+                # re-feed batch metrics: this batch feeds them once below
+                if outer_ctx is not None:
+                    tel.batch_context = {
+                        k: (v[miss_rows] if isinstance(v, np.ndarray)
+                            else v)
+                        for k, v in outer_ctx.items()}
+                self._tel_suppress = True
+                self._tel_cache_tag = "miss"
+            try:
+                sub = self._serve_direct(
+                    terms[miss_rows], mask[miss_rows],
+                    None if topics is None else topics[miss_rows],
+                    stage2_cap=(None if stage2_cap is None
+                                else np.asarray(stage2_cap)[miss_rows]),
+                    shard_cap=(None if shard_cap is None
+                               else np.asarray(shard_cap)[miss_rows]),
+                    now=now)
+            finally:
+                if tel is not None:
+                    tel.batch_context = outer_ctx
+                    self._tel_suppress = False
+                    self._tel_cache_tag = None
             topk[miss_rows] = sub.topk
             if self.ltr is not None:
                 for j, i in enumerate(miss_rows):
@@ -1441,6 +1441,42 @@ class SearchSystem:
         # batch's occupancy is the max over ALL its rows)
         self._clock = now + (float(lat.max()) if q else 0.0)
 
+        dense_info = None
+        if self.dense is not None:
+            theta_all = np.zeros(q, bool)
+            fb_all = np.zeros(q, bool)
+            if sub is not None:
+                theta_all[miss_rows] = sub.dense["theta_skip"]
+                fb_all[miss_rows] = sub.dense["fallback"]
+            if skip_flags is not None:
+                theta_all[rows2] = skip_flags
+            # L1 rows keep False flags: their final list already baked in
+            # whatever shortcut the fill-time serve took
+            dense_info = {"modality": modality, "theta_skip": theta_all,
+                          "fallback": fb_all}
+        stats = self._build_stats(
+            lat, stage_latency, trimmed, skipped, faulted, coverage, now,
+            dense_info=dense_info, cache_stats=cache.stats())
+        if self.telemetry is not None:
+            self._record_hit_traces(l1_hit, l2_hit, lat, t0, t2, hit_us,
+                                    now)
+        return PipelineResult(topk=topk, final=final, candidates_used=used,
+                              latency=lat, stage_latency=stage_latency,
+                              stats=stats, coverage=coverage,
+                              dense=dense_info)
+
+    # ------------------------------------------------------------------
+    # batch stats + telemetry
+    # ------------------------------------------------------------------
+
+    def _build_stats(self, lat, stage_latency, trimmed, skipped, faulted,
+                     coverage, now, *, dense_info=None,
+                     cache_stats=None) -> dict:
+        """The per-batch stats dict both serve paths report — one builder
+        so the direct and cached paths cannot drift — plus the telemetry
+        feed (per-query/per-stage histograms and degradation counters)
+        when a registry is attached."""
+        q = len(lat)
         stats = dict(self.sched.stats)
         stats.update(percentiles(lat))
         n_over, pct = over_budget(lat, self.budget)
@@ -1451,6 +1487,9 @@ class SearchSystem:
             if not np.any(t > 0):
                 continue
             entry = percentiles(t)
+            # per-stage budget attribution: each stage is accountable to
+            # its reserved share of the cascade budget (fused routes spend
+            # the fusion reserve inside stage 1)
             b = (self._budget_reserve[name]
                  + (self._budget_reserve.get("fusion", 0.0)
                     if name == "stage1" else 0.0))
@@ -1465,7 +1504,7 @@ class SearchSystem:
             "stage2_trimmed": trimmed,
             "stage2_skipped": skipped,
         }
-        stats["n_shards"] = ns
+        stats["n_shards"] = self.n_shards
         stats["pool"] = self.pool.stats()
         if faulted:
             stats["faults"] = dict(self._fault_counters)
@@ -1475,32 +1514,234 @@ class SearchSystem:
                 "mean": float(coverage.mean()) if q else 1.0,
                 "degraded": int((coverage < 1.0).sum()),
             }
-        stats["cache"] = cache.stats()
-        dense_info = None
-        if self.dense is not None:
-            theta_all = np.zeros(q, bool)
-            fb_all = np.zeros(q, bool)
-            if sub is not None:
-                theta_all[miss_rows] = sub.dense["theta_skip"]
-                fb_all[miss_rows] = sub.dense["fallback"]
-            if skip_flags is not None:
-                theta_all[rows2] = skip_flags
-            # L1 rows keep False flags: their final list already baked in
-            # whatever shortcut the fill-time serve took
-            dense_info = {"modality": modality, "theta_skip": theta_all,
-                          "fallback": fb_all}
+        if cache_stats is not None:
+            stats["cache"] = cache_stats
+        if dense_info is not None:
+            modality = dense_info["modality"]
             stats["dense"] = {
                 "lexical": int(np.sum(modality == M_LEX)),
                 "dense_only": int(np.sum(modality == M_DENSE)),
                 "fused": int(np.sum(modality == M_BOTH)),
-                "theta_skips": int(theta_all.sum()),
-                "fallbacks": int(fb_all.sum()),
+                "theta_skips": int(dense_info["theta_skip"].sum()),
+                "fallbacks": int(dense_info["fallback"].sum()),
             }
+        tel = self.telemetry
+        if tel is not None and not self._tel_suppress:
+            # micro-batch pads carry qid=-1 in the batch context: real
+            # device work, but not queries — keep them out of the
+            # per-query latency histograms and counters
+            ctx_q = (tel.batch_context or {}).get("qid")
+            keep = (np.asarray(ctx_q) >= 0 if ctx_q is not None
+                    else slice(None))
+            tel.record_batch(lat[keep],
+                             {k: v[keep] for k, v in stage_latency.items()},
+                             self.budget, trimmed=trimmed, skipped=skipped)
+            if dense_info is not None:
+                d = stats["dense"]
+                for k in ("lexical", "dense_only", "fused"):
+                    tel.registry.counter("modality", route=k).inc(d[k])
+                tel.registry.counter("theta_skips").inc(d["theta_skips"])
+                tel.registry.counter("dense_fallbacks").inc(d["fallbacks"])
         self._last_stats = stats
-        return PipelineResult(topk=topk, final=final, candidates_used=used,
-                              latency=lat, stage_latency=stage_latency,
-                              stats=stats, coverage=coverage,
-                              dense=dense_info)
+        return stats
+
+    def _tel_context(self, q: int):
+        """Resolve the per-row trace context: the online simulator sets
+        ``telemetry.batch_context`` with queue waits, admission modes and
+        real query ids around ``serve``; offline serves synthesize
+        sequential qids and zero wait."""
+        tel = self.telemetry
+        ctx = tel.batch_context or {}
+        wait = ctx.get("wait")
+        modes = ctx.get("mode")
+        qids = ctx.get("qid")
+        budget = float(ctx.get("budget", self.budget))
+        if qids is None:
+            qids = tel.query_seq + np.arange(q)
+            tel.query_seq += q
+        return wait, modes, qids, budget
+
+    def _record_traces(self, *, q, now, lat, stage_latency, pk, pr, pt,
+                       routed, modality, theta_skip, fallback, used,
+                       t_shards, faulted, delay, mult, lost, dropped,
+                       coverage) -> None:
+        """Build span trees for the rows the trace store would retain
+        (slowest / budget-violating first; ``would_keep`` prunes the rest
+        so trace building stays off the common path)."""
+        tel = self.telemetry
+        if tel.traces.capacity == 0:
+            return
+        wait, modes, qids, budget = self._tel_context(q)
+        is_jass = np.zeros(q, bool)
+        is_jass[routed.jass_rows] = True
+        is_hedge = np.zeros(q, bool)
+        is_hedge[routed.hedged_rows] = True
+        timeout = self.sched.cfg.failover_timeout
+        mod_name = {M_LEX: "lexical", M_DENSE: "dense", M_BOTH: "fused"}
+        for r in range(q):
+            if int(qids[r]) < 0:
+                continue   # micro-batch pad row, not a query
+            w = float(wait[r]) if wait is not None else 0.0
+            total = float(lat[r]) + w
+            violation = total > budget
+            if not tel.traces.would_keep(total, violation):
+                continue
+            t0r = float(stage_latency["stage0"][r])
+            root = Span("query")
+            root.child("stage0", 0.0, t0r, pred_k=float(pk[r]),
+                       pred_rho=float(pr[r]), pred_t=float(pt[r]))
+            mirror = "jass" if is_jass[r] else "bmw"
+            if is_hedge[r]:
+                mirror += "+hedge"
+            rmeta = dict(mirror=mirror, rho=float(routed.rho[r]),
+                         k=int(routed.k[r]))
+            if modality is not None:
+                rmeta["modality"] = mod_name[int(modality[r])]
+            root.child("route", t0r, 0.0, **rmeta)
+            s1 = root.child("stage1", t0r,
+                            float(stage_latency["stage1"][r]))
+            for s in range(self.n_shards):
+                smeta: dict = {"shard": s}
+                dur = float(t_shards[s, r])
+                if faulted:
+                    d = float(delay[s, r])
+                    if d > 0:
+                        smeta["retry_wait_us"] = d
+                        smeta["attempts_failed"] = (
+                            int(round(d / timeout)) if timeout else 0)
+                    if lost[s, r]:
+                        smeta["lost"] = True
+                    if dropped[s, r]:
+                        smeta["dropped"] = True
+                    if mult[s, r] != 1.0:
+                        smeta["slowdown"] = float(mult[s, r])
+                    dur = (0.0 if dropped[s, r] else
+                           d + (0.0 if lost[s, r]
+                                else float(t_shards[s, r] * mult[s, r])))
+                s1.child("shard", t0r, dur, **smeta)
+            if modality is not None and int(modality[r]) == M_BOTH:
+                s1.child("fusion", 0.0, float(self.cost.fusion_us))
+            if fallback is not None and fallback[r]:
+                s1.child("dense_fallback", 0.0, 0.0)
+            if self.delta is not None:
+                s1.child("delta_scan", 0.0, float(self._delta_us))
+            s2dur = float(stage_latency["stage2"][r])
+            s2meta: dict = {}
+            if used is not None:
+                s2meta["candidates"] = int(used[r])
+                if used[r] == 0:
+                    s2meta["skipped"] = True
+            if theta_skip is not None and theta_skip[r]:
+                s2meta["theta_skip"] = True
+            root.child("stage2", float(lat[r]) - s2dur, s2dur, **s2meta)
+            meta = {
+                "wait_us": w,
+                "service_us": float(lat[r]),
+                "reserve_us": float(
+                    self._budget_reserve.get("stage2", 0.0)),
+            }
+            if modes is not None:
+                meta["mode"] = str(modes[r])
+            if self._tel_cache_tag is not None:
+                meta["cache"] = self._tel_cache_tag
+            if faulted:
+                meta["coverage"] = float(coverage[r])
+            tel.traces.offer(QueryTrace(
+                qid=int(qids[r]), clock_us=now, latency_us=total,
+                budget_us=budget, violation=violation, root=root,
+                meta=meta))
+
+    def _record_hit_traces(self, l1_hit, l2_hit, lat, t0, t2, hit_us,
+                           now) -> None:
+        """Traces for cache-hit rows (miss rows were traced by the
+        sub-serve with a ``cache: miss`` tag)."""
+        tel = self.telemetry
+        if tel.traces.capacity == 0:
+            return
+        q = len(lat)
+        wait, modes, qids, budget = self._tel_context(q)
+        for r in np.flatnonzero(l1_hit | l2_hit):
+            level = "l1" if l1_hit[r] else "l2"
+            w = float(wait[r]) if wait is not None else 0.0
+            total = float(lat[r]) + w
+            violation = total > budget
+            if not tel.traces.would_keep(total, violation):
+                continue
+            root = Span("query")
+            root.child("stage0", 0.0, float(t0[r]))
+            root.child("cache_lookup", float(t0[r]), float(hit_us),
+                       level=level, hit=True)
+            if t2[r] > 0:
+                root.child("stage2", float(lat[r]) - float(t2[r]),
+                           float(t2[r]))
+            meta = {"wait_us": w, "service_us": float(lat[r]),
+                    "cache": level,
+                    "reserve_us": float(
+                        self._budget_reserve.get("stage2", 0.0))}
+            if modes is not None:
+                meta["mode"] = str(modes[r])
+            tel.traces.offer(QueryTrace(
+                qid=int(qids[r]), clock_us=now, latency_us=total,
+                budget_us=budget, violation=violation, root=root,
+                meta=meta))
+
+    def _export_metrics(self) -> None:
+        """Mirror every cumulative stats dict and subsystem counter into
+        the registry (``key=`` labels preserve the legacy key names so
+        ``legacy_stats_view`` can reconstruct the old sections)."""
+        reg = self.telemetry.registry
+        for k, v in self.sched.stats.items():
+            reg.counter("scheduler", key=k).set_total(v)
+        for k, v in self._fault_counters.items():
+            reg.counter("faults", key=k).set_total(v)
+        reg.gauge("faults", key="clock").set(self._clock)
+        for k, v in self._ingest_counters.items():
+            reg.counter("ingest", key=k).set_total(v)
+        reg.gauge("n_shards").set(self.n_shards)
+        reg.gauge("batches").set(self._batches)
+        reg.gauge("budget_us").set(self.budget)
+        reg.gauge("worst_case_us").set(self.worst_case_us())
+        reg.gauge("clock_us").set(self._clock)
+        self.pool.export_metrics(reg)
+        self.faults.export_metrics(reg)
+        if self.cache is not None:
+            self.cache.export_metrics(reg)
+        if self.delta is not None:
+            self.delta.export_metrics(reg)
+            reg.gauge("ingest", key="delta_us").set(self._delta_us)
+        self.telemetry.export_online()
+
+    def snapshot(self, now: float | None = None) -> dict:
+        """One scrapeable observability snapshot: every counter, gauge and
+        histogram in the registry plus the retained slowest/violating
+        traces with their ``why_slow`` attribution.  Deterministic — two
+        same-seed runs render byte-identical JSON.  Requires an enabled
+        :class:`~repro.serving.spec.TelemetrySpec`."""
+        if self.telemetry is None:
+            raise RuntimeError(
+                "telemetry is disabled (spec.telemetry.enabled=False); "
+                "enable it to export snapshots")
+        self._export_metrics()
+        snap = self.telemetry.registry.snapshot()
+        snap["version"] = 1
+        snap["spec"] = self.cascade_spec.name
+        snap["clock_us"] = float(self._clock if now is None else now)
+        snap["budget_us"] = float(self.budget)
+        snap["worst_case_us"] = float(self.worst_case_us())
+        snap["traces"] = [t.to_dict()
+                          for t in self.telemetry.traces.slowest()]
+        return snap
+
+    def render_snapshot(self, fmt: str = "json",
+                        now: float | None = None) -> str:
+        """Render :meth:`snapshot` as ``json`` (byte-deterministic) or
+        ``prom`` (Prometheus text exposition; traces are JSON-only)."""
+        snap = self.snapshot(now=now)
+        if fmt == "json":
+            return render_json(snap)
+        if fmt == "prom":
+            return render_prometheus(snap)
+        raise ValueError(f"unknown snapshot format {fmt!r}")
 
     def serve_online(self, terms: np.ndarray, mask: np.ndarray,
                      topics: np.ndarray | None = None, *,
@@ -1696,14 +1937,32 @@ class SearchSystem:
 
     def stats(self) -> dict:
         """Deployment-level health: spec identity, shard layout, scheduler
-        counters, replica-pool health, and the last batch's tail."""
+        counters, replica-pool health, and the last batch's tail.
+
+        With telemetry enabled the scalar counter sections (scheduler /
+        faults / ingest) are *derived from the registry snapshot* — the
+        registry is the one source of truth and this dict is a thin
+        compat view over it; with telemetry disabled the legacy dicts are
+        reported directly (identical values either way)."""
+        tel = self.telemetry
+        if tel is not None:
+            self._export_metrics()
+            snap = tel.registry.snapshot()
+            scheduler = legacy_stats_view(snap, "scheduler")
+            fault_ctr = legacy_stats_view(snap, "faults")
+            ingest = legacy_stats_view(snap, "ingest")
+        else:
+            scheduler = dict(self.sched.stats)
+            fault_ctr = dict(self._fault_counters)
+            fault_ctr["clock"] = self._clock
+            ingest = None
         s = {
             "spec": self.cascade_spec.name,
             "n_shards": self.n_shards,
             "shard_docs": [sp.n_docs for sp in self.shard_specs],
             "replicas": self.cascade_spec.deploy.replicas,
             "batches": self._batches,
-            "scheduler": dict(self.sched.stats),
+            "scheduler": scheduler,
             "budget": {"total": self.budget,
                        "reserve": dict(self._budget_reserve),
                        "enforce": self.sched.cfg.enforce_budget,
@@ -1711,12 +1970,13 @@ class SearchSystem:
             "pool": self.pool.stats(),
         }
         if self.faults.active or any(self._fault_counters.values()):
-            s["faults"] = dict(self._fault_counters)
-            s["faults"]["clock"] = self._clock
+            s["faults"] = fault_ctr
         if self.delta is not None:
-            s["ingest"] = dict(self.delta.stats())
-            s["ingest"].update(self._ingest_counters)
-            s["ingest"]["delta_us"] = self._delta_us
+            if ingest is None:
+                ingest = dict(self.delta.stats())
+                ingest.update(self._ingest_counters)
+                ingest["delta_us"] = self._delta_us
+            s["ingest"] = ingest
         if self._last_stats:
             s["last_batch"] = {k: self._last_stats[k]
                                for k in ("p50", "p99", "p99.99", "max",
